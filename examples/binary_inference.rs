@@ -1,0 +1,112 @@
+//! Deployment-path demo: serve batched inference from a trained BDNN
+//! checkpoint on the pure-Rust XNOR-popcount engine and compare it against
+//! the float reference path — accuracy, latency, throughput, and memory.
+//!
+//! ```bash
+//! cargo run --release --example binary_inference -- [checkpoint.bdnn]
+//! ```
+//! Without an argument it first trains a quick MLP to get a checkpoint.
+
+use std::sync::Arc;
+
+use bdnn::bitnet::network::{forward_float, PackedNet};
+use bdnn::checkpoint;
+use bdnn::config::RunConfig;
+use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
+use bdnn::data::Dataset;
+use bdnn::error::Result;
+use bdnn::runtime::Manifest;
+use bdnn::util::Timer;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+
+    // obtain (params, arch): from the given checkpoint, or train quickly
+    let (params, arch) = if let Some(path) = argv.get(1) {
+        let (params, meta) = checkpoint::load(path)?;
+        let man = Manifest::load("artifacts")?;
+        let arch = man
+            .get(&format!("{}_train", meta.arch))?
+            .config
+            .clone()
+            .expect("manifest config");
+        println!("loaded checkpoint {path} (arch {})", meta.arch);
+        (params, arch)
+    } else {
+        println!("no checkpoint given; training a quick MLP first...");
+        let run = RunConfig {
+            name: "binary-inference-demo".into(),
+            artifact: "mnist_mlp_small".into(),
+            dataset: "mnist".into(),
+            epochs: 4,
+            train_size: 4_000,
+            test_size: 500,
+            ..RunConfig::default()
+        };
+        let mut trainer = Trainer::new(run.clone(), MetricsWriter::null())?;
+        let (train_ds, test_ds) = load_datasets(&run)?;
+        let s = trainer.train(Arc::clone(&train_ds), &test_ds)?;
+        println!("trained to {:.2}% test error", s.final_test_err * 100.0);
+        (trainer.params(), trainer.arch().clone())
+    };
+
+    let family = if arch.is_cnn() { "cifar10" } else { "mnist" };
+    let n = 1024;
+    let ds = Dataset::synthesize(family, n, 99)?;
+    let idx: Vec<usize> = (0..n).collect();
+    let (x, y) = ds.gather(&idx);
+
+    // 1) float reference path
+    let t = Timer::start();
+    let float_logits = forward_float(&arch, &params, &x)?;
+    let float_ms = t.millis();
+
+    // 2) packed XNOR engine (weights packed once, then batched serving)
+    let t = Timer::start();
+    let net = PackedNet::prepare(&arch, &params)?;
+    let prep_ms = t.millis();
+    let t = Timer::start();
+    let packed_logits = net.infer(&x)?;
+    let packed_ms = t.millis();
+
+    let err = |logits: &bdnn::tensor::Tensor| -> f64 {
+        let wrong = logits
+            .argmax_rows()
+            .iter()
+            .zip(&y)
+            .filter(|(p, l)| **p as i32 != **l)
+            .count();
+        100.0 * wrong as f64 / n as f64
+    };
+
+    println!("\n== batched inference, {n} samples ==");
+    println!(
+        "float reference : {float_ms:>8.1} ms  ({:>7.0} samples/s)  error {:.2}%",
+        n as f64 / (float_ms / 1e3),
+        err(&float_logits)
+    );
+    println!(
+        "packed XNOR     : {packed_ms:>8.1} ms  ({:>7.0} samples/s)  error {:.2}%  (prepare {prep_ms:.1} ms)",
+        n as f64 / (packed_ms / 1e3),
+        err(&packed_logits)
+    );
+    println!(
+        "prediction agreement: {:.2}%  max |logit diff| {:.3}",
+        100.0
+            * float_logits
+                .argmax_rows()
+                .iter()
+                .zip(packed_logits.argmax_rows())
+                .filter(|(a, b)| *a == b)
+                .count() as f64
+            / n as f64,
+        float_logits.max_abs_diff(&packed_logits)
+    );
+    println!(
+        "weights: f32 {} bytes -> packed {} bytes ({:.0}x smaller)",
+        checkpoint::f32_bytes(&params),
+        net.packed_weight_bytes(),
+        checkpoint::f32_bytes(&params) as f64 / net.packed_weight_bytes() as f64
+    );
+    Ok(())
+}

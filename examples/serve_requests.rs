@@ -1,0 +1,121 @@
+//! Serving-path example: start the inference server on a trained BDNN,
+//! fire concurrent client requests at it over TCP, and report latency /
+//! throughput / batching statistics — the deployment scenario of the
+//! paper's discussion section, vLLM-router style.
+//!
+//! ```bash
+//! cargo run --release --example serve_requests -- [n_clients] [reqs_each]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use bdnn::config::RunConfig;
+use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
+use bdnn::bitnet::network::PackedNet;
+use bdnn::error::Result;
+use bdnn::serve::{serve, BatcherConfig, ServeConfig};
+use bdnn::util::{RunningStats, Timer};
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let n_clients: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let reqs_each: usize = argv.get(2).and_then(|s| s.parse().ok()).unwrap_or(50);
+
+    // train a quick MLP to serve
+    println!("training a quick MLP to serve...");
+    let run = RunConfig {
+        name: "serve-demo".into(),
+        artifact: "mnist_mlp_small".into(),
+        dataset: "mnist".into(),
+        epochs: 3,
+        train_size: 3000,
+        test_size: 500,
+        ..RunConfig::default()
+    };
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::null())?;
+    let (train_ds, test_ds) = load_datasets(&run)?;
+    let summary = trainer.train(Arc::clone(&train_ds), &test_ds)?;
+    println!("trained to {:.2}% test error", summary.final_test_err * 100.0);
+    let arch = trainer.arch().clone();
+    let net = Arc::new(PackedNet::prepare(&arch, &trainer.params())?);
+
+    let server = serve(
+        &arch,
+        net,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: std::time::Duration::from_millis(2),
+                queue_depth: 512,
+            },
+        },
+    )?;
+    let addr = server.local_addr;
+    println!("server up on {addr}; {n_clients} clients x {reqs_each} requests each\n");
+
+    let timer = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let test = test_ds.clone();
+        handles.push(std::thread::spawn(move || -> (RunningStats, usize) {
+            let mut lat = RunningStats::new();
+            let mut correct = 0usize;
+            let mut conn = TcpStream::connect(addr).expect("connect");
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for i in 0..reqs_each {
+                let idx = (c * reqs_each + i) % test.len();
+                let px: Vec<String> =
+                    test.image(idx).iter().map(|v| format!("{v}")).collect();
+                let line = format!("{{\"id\": {i}, \"pixels\": [{}]}}\n", px.join(","));
+                let t = Timer::start();
+                conn.write_all(line.as_bytes()).unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                lat.push(t.millis());
+                let j = bdnn::config::json::parse(&resp).unwrap();
+                if let Some(pred) = j.get("pred").and_then(bdnn::config::json::Json::as_f64) {
+                    if pred as i32 == test.labels[idx] {
+                        correct += 1;
+                    }
+                }
+            }
+            (lat, correct)
+        }));
+    }
+    let mut total_correct = 0usize;
+    let mut lat_all = RunningStats::new();
+    for h in handles {
+        let (lat, correct) = h.join().unwrap();
+        total_correct += correct;
+        for _ in 0..lat.count() {
+            // merge means approximately by re-pushing the mean (stats only
+            // displayed in aggregate)
+        }
+        lat_all.push(lat.mean());
+    }
+    let total = n_clients * reqs_each;
+    let secs = timer.secs();
+    println!(
+        "served {total} requests in {secs:.2}s = {:.0} req/s; per-client mean latency {:.2} ms",
+        total as f64 / secs,
+        lat_all.mean()
+    );
+    println!(
+        "accuracy over served responses: {:.2}%",
+        100.0 * total_correct as f64 / total as f64
+    );
+    let stats = &server.batcher.stats;
+    println!(
+        "batching: {} requests in {} batches (mean batch {:.1}; {} full flushes, {} timeout flushes)",
+        stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+        stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        stats.mean_batch(),
+        stats.flush_full.load(std::sync::atomic::Ordering::Relaxed),
+        stats.flush_timeout.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,272 @@
+"""AOT pipeline: lower the L2 training/eval graphs to HLO text artifacts.
+
+Build-time only — `make artifacts` runs this once; the Rust binary then
+loads `artifacts/*.hlo.txt` through PJRT and Python never appears on the
+request path again.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is described in `artifacts/manifest.json`: ordered input /
+output specs (name, dtype, shape, init hint) that the Rust side parses —
+the parameter-ordering contract of DESIGN.md sec. 8. Inputs are flattened
+from the model's parameter dicts in sorted-key order, which is exactly
+jax.tree_util's dict flattening order.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs a,b,c]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Default artifact set: validation-scale Pallas configs + the fast variants
+# used by the long Table-3 / Fig-1 trainings + one ablation pair.
+DEFAULT_CONFIGS = [
+    "mnist_mlp_small",
+    "mnist_mlp",
+    "cifar_cnn",
+    "mnist_mlp_fast",
+    "mnist_mlp_bc_fast",
+    "mnist_mlp_float_fast",
+    "cifar_cnn_fast",
+    "cifar_cnn_bc_fast",
+    "cifar_cnn_float_fast",
+    "mnist_mlp_detneuron_fast",
+    "mnist_mlp_nobn_fast",
+    "mnist_mlp_exactbn_fast",
+    "cifar_cnn_exactbn_fast",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, param_spec, init=None, role=None):
+    d = {
+        "name": name,
+        "dtype": "float32",
+        "shape": list(param_spec.shape),
+    }
+    if init is not None:
+        d["init"] = init
+    if role is not None:
+        d["role"] = role
+    return d
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_train_artifact(cfg: M.ModelConfig):
+    """Lower the K-step train chunk. Flat signature (all f32 unless noted):
+
+      inputs:  [trainable... , state... , m... , u... , t, lr, key(u32[2]),
+                xs (K,B,...), ys (K,B) i32]
+      outputs: [trainable'..., state'..., m'..., u'..., t', losses(K), errs(K)]
+    """
+    tn = M.trainable_names(cfg)
+    sn = M.state_names(cfg)
+    specs = {s.name: s for s in M.param_specs(cfg)}
+
+    def fn(*flat):
+        i = 0
+        p = {n: flat[i + j] for j, n in enumerate(tn)}
+        i += len(tn)
+        s = {n: flat[i + j] for j, n in enumerate(sn)}
+        i += len(sn)
+        m = {n: flat[i + j] for j, n in enumerate(tn)}
+        i += len(tn)
+        u = {n: flat[i + j] for j, n in enumerate(tn)}
+        i += len(tn)
+        t, lr, key, xs, ys = flat[i], flat[i + 1], flat[i + 2], flat[i + 3], flat[i + 4]
+        key = jax.random.wrap_key_data(key, impl="threefry2x32")
+        p2, s2, m2, u2, t2, losses, errs = M.train_chunk(cfg, p, s, m, u, t, lr, key, xs, ys)
+        out = [p2[n] for n in tn] + [s2[n] for n in sn] + [m2[n] for n in tn]
+        out += [u2[n] for n in tn] + [t2, losses, errs]
+        return tuple(out)
+
+    in_shape = cfg.in_shape
+    xs_shape = (cfg.k_steps, cfg.batch, *in_shape)
+    args = (
+        [_sds(specs[n].shape) for n in tn]
+        + [_sds(specs[n].shape) for n in sn]
+        + [_sds(specs[n].shape) for n in tn]
+        + [_sds(specs[n].shape) for n in tn]
+        + [_sds(()), _sds(()), _sds((2,), jnp.uint32), _sds(xs_shape), _sds((cfg.k_steps, cfg.batch), jnp.int32)]
+    )
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+
+    inputs = (
+        [_spec(n, specs[n], init=specs[n].init, role="param") for n in tn]
+        + [_spec(n, specs[n], init=specs[n].init, role="state") for n in sn]
+        + [_spec(f"m_{n}", specs[n], init="zeros", role="opt") for n in tn]
+        + [_spec(f"u_{n}", specs[n], init="zeros", role="opt") for n in tn]
+        + [
+            {"name": "t", "dtype": "float32", "shape": [], "init": "zeros", "role": "step"},
+            {"name": "lr", "dtype": "float32", "shape": [], "role": "lr"},
+            {"name": "key", "dtype": "uint32", "shape": [2], "role": "rng"},
+            {"name": "xs", "dtype": "float32", "shape": list(xs_shape), "role": "data_x"},
+            {"name": "ys", "dtype": "int32", "shape": [cfg.k_steps, cfg.batch], "role": "data_y"},
+        ]
+    )
+    outputs = (
+        [_spec(n, specs[n], role="param") for n in tn]
+        + [_spec(n, specs[n], role="state") for n in sn]
+        + [_spec(f"m_{n}", specs[n], role="opt") for n in tn]
+        + [_spec(f"u_{n}", specs[n], role="opt") for n in tn]
+        + [
+            {"name": "t", "dtype": "float32", "shape": [], "role": "step"},
+            {"name": "losses", "dtype": "float32", "shape": [cfg.k_steps], "role": "loss"},
+            {"name": "errs", "dtype": "float32", "shape": [cfg.k_steps], "role": "err"},
+        ]
+    )
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def build_eval_artifact(cfg: M.ModelConfig):
+    """Lower deterministic inference: [params..., state..., x] -> (logits,)."""
+    tn = M.trainable_names(cfg)
+    sn = M.state_names(cfg)
+    specs = {s.name: s for s in M.param_specs(cfg)}
+
+    def fn(*flat):
+        p = {n: flat[j] for j, n in enumerate(tn)}
+        s = {n: flat[len(tn) + j] for j, n in enumerate(sn)}
+        x = flat[len(tn) + len(sn)]
+        return (M.eval_step(cfg, p, s, x),)
+
+    x_shape = (cfg.eval_batch, *cfg.in_shape)
+    args = [_sds(specs[n].shape) for n in tn] + [_sds(specs[n].shape) for n in sn] + [_sds(x_shape)]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    inputs = (
+        [_spec(n, specs[n], init=specs[n].init, role="param") for n in tn]
+        + [_spec(n, specs[n], init=specs[n].init, role="state") for n in sn]
+        + [{"name": "x", "dtype": "float32", "shape": list(x_shape), "role": "data_x"}]
+    )
+    outputs = [
+        {"name": "logits", "dtype": "float32", "shape": [cfg.eval_batch, cfg.classes], "role": "logits"}
+    ]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def build_features_artifact(cfg: M.ModelConfig):
+    """Lower the Fig-3 graph: binarized conv-1 feature maps."""
+    assert cfg.arch == "cnn"
+    tn = M.trainable_names(cfg)
+    sn = M.state_names(cfg)
+    specs = {s.name: s for s in M.param_specs(cfg)}
+
+    def fn(*flat):
+        p = {n: flat[j] for j, n in enumerate(tn)}
+        s = {n: flat[len(tn) + j] for j, n in enumerate(sn)}
+        x = flat[len(tn) + len(sn)]
+        full = dict(p)
+        full.update(s)
+        return (M.conv1_features(cfg, full, x),)
+
+    x_shape = (cfg.eval_batch, *cfg.in_shape)
+    args = [_sds(specs[n].shape) for n in tn] + [_sds(specs[n].shape) for n in sn] + [_sds(x_shape)]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    h, w, _ = cfg.in_shape
+    inputs = (
+        [_spec(n, specs[n], init=specs[n].init, role="param") for n in tn]
+        + [_spec(n, specs[n], init=specs[n].init, role="state") for n in sn]
+        + [{"name": "x", "dtype": "float32", "shape": list(x_shape), "role": "data_x"}]
+    )
+    outputs = [
+        {
+            "name": "features",
+            "dtype": "float32",
+            "shape": [cfg.eval_batch, h, w, cfg.maps[0]],
+            "role": "features",
+        }
+    ]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def build_smoke_artifact():
+    """Tiny fn for runtime integration tests: (x, y) -> (2x + y,)."""
+
+    def fn(x, y):
+        return (2.0 * x + y,)
+
+    lowered = jax.jit(fn).lower(_sds((4,)), _sds((4,)))
+    inputs = [
+        {"name": "x", "dtype": "float32", "shape": [4], "role": "data_x"},
+        {"name": "y", "dtype": "float32", "shape": [4], "role": "data_x"},
+    ]
+    outputs = [{"name": "out", "dtype": "float32", "shape": [4], "role": "logits"}]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS))
+    ap.add_argument("--skip-train", action="store_true", help="eval graphs only")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "artifacts": {}}
+
+    def emit(name, hlo, inputs, outputs, cfg=None, kind="train"):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        entry = {
+            "file": fname,
+            "kind": kind,
+            "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        if cfg is not None:
+            entry["config"] = dataclasses.asdict(cfg)
+        manifest["artifacts"][name] = entry
+        print(f"  wrote {fname} ({len(hlo) / 1e6:.2f} MB)")
+
+    hlo, i, o = build_smoke_artifact()
+    emit("smoke", hlo, i, o, kind="smoke")
+
+    for cname in [c for c in args.configs.split(",") if c]:
+        cfg = M.CONFIGS[cname]
+        print(f"[aot] {cname} (arch={cfg.arch} mode={cfg.mode} pallas={cfg.use_pallas})")
+        if not args.skip_train:
+            hlo, i, o = build_train_artifact(cfg)
+            emit(f"{cname}_train", hlo, i, o, cfg, "train")
+        hlo, i, o = build_eval_artifact(cfg)
+        emit(f"{cname}_eval", hlo, i, o, cfg, "eval")
+        if cfg.arch == "cnn":
+            hlo, i, o = build_features_artifact(cfg)
+            emit(f"{cname}_features", hlo, i, o, cfg, "features")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

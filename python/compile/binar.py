@@ -1,0 +1,108 @@
+"""Straight-through-estimator (STE) binarization primitives (paper sec. 3.2).
+
+The binarized neuron h_b(x) is non-differentiable; the paper differentiates
+through it by treating the stochastic binarization as `HT(x) + noise` and
+ignoring the zero-mean noise term, i.e. backward = dHT/dx (Eq. 6): pass the
+gradient where x in [-1, 1], zero it where the neuron is saturated.
+
+Weight binarization follows BinaryConnect: the gradient w.r.t. the binarized
+weight w_b is applied verbatim to the stored full-precision weight w
+(identity STE); the [-1,1] clip after the update provides the saturation
+control (paper sec. 2.1).
+
+All primitives take caller-supplied uniform noise `u` for the stochastic
+paths so the functions stay pure and AOT-lower deterministically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binarize as kbin
+
+
+# ---------------------------------------------------------------------------
+# Neuron binarization: Eq. 3 forward (stochastic) / Eq. 5 (deterministic),
+# Eq. 6 backward (hard-tanh mask).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def neuron_binarize_stoch(x, u):
+    """Stochastic binary neuron: +1 w.p. hard_sigmoid(x) (Eq. 3)."""
+    return kbin.binarize_stoch_nd(x, u)
+
+
+def _nbs_fwd(x, u):
+    return kbin.binarize_stoch_nd(x, u), x
+
+
+def _nbs_bwd(x, g):
+    # Eq. 6: dHT/dx masks the gradient where the neuron is saturated.
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype), None)
+
+
+neuron_binarize_stoch.defvjp(_nbs_fwd, _nbs_bwd)
+
+
+@jax.custom_vjp
+def neuron_binarize_det(x):
+    """Deterministic binary neuron: sign(x) (Eq. 5, test phase)."""
+    return kbin.binarize_det_nd(x)
+
+
+def _nbd_fwd(x):
+    return kbin.binarize_det_nd(x), x
+
+
+def _nbd_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+neuron_binarize_det.defvjp(_nbd_fwd, _nbd_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Weight binarization: Eq. 1 (deterministic) / Eq. 2 (stochastic), identity
+# STE backward (BinaryConnect rule).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def weight_binarize_det(w):
+    """Deterministic weight binarization (Eq. 1) with identity STE."""
+    return kbin.binarize_det_nd(w)
+
+
+def _wbd_fwd(w):
+    return kbin.binarize_det_nd(w), None
+
+
+def _wbd_bwd(_, g):
+    return (g,)
+
+
+weight_binarize_det.defvjp(_wbd_fwd, _wbd_bwd)
+
+
+@jax.custom_vjp
+def weight_binarize_stoch(w, u):
+    """Stochastic weight binarization (Eq. 2) with identity STE."""
+    return kbin.binarize_stoch_nd(w, u)
+
+
+def _wbs_fwd(w, u):
+    return kbin.binarize_stoch_nd(w, u), None
+
+
+def _wbs_bwd(_, g):
+    return (g, None)
+
+
+weight_binarize_stoch.defvjp(_wbs_fwd, _wbs_bwd)
+
+
+def clip_weights(w):
+    """Post-update clip to [-1, 1] (paper sec. 2.1 / Alg. 1)."""
+    return jnp.clip(w, -1.0, 1.0)

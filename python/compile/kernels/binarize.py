@@ -1,0 +1,97 @@
+"""Pallas kernel: fused hard-tanh clip + binarization (paper Eqs. 1-5).
+
+Forward-path hot-spot #2 (after the GEMM): every neuron output is clipped via
+HT(x) and binarized either deterministically (Eq. 5, test time) or
+stochastically against caller-supplied uniform noise (Eq. 3, train time).
+
+TPU mapping (DESIGN.md sec. 6): a pure VPU (vector unit) kernel — elementwise
+compare/select over VMEM tiles; no MXU involvement. The block is a
+(BLOCK_ROWS, BLOCK_COLS) tile so arbitrarily large activation matrices stream
+through VMEM. interpret=True everywhere in this repo: real-TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 8 * 128 lanes wide, a few rows deep — VPU-register friendly
+# on TPU, irrelevant (but harmless) under interpret mode.
+BLOCK_ROWS = 128
+BLOCK_COLS = 128
+
+
+def _binarize_det_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _binarize_stoch_kernel(x_ref, u_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    # hard sigmoid sigma(x) = clip((x+1)/2, 0, 1); +1 w.p. sigma(x).
+    p = jnp.clip((x + 1.0) * 0.5, 0.0, 1.0)
+    o_ref[...] = jnp.where(u < p, 1.0, -1.0).astype(x.dtype)
+
+
+def _grid_2d(shape, br, bc):
+    m, n = shape
+    return (pl.cdiv(m, br), pl.cdiv(n, bc))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def binarize_det(x, *, block_rows: int = BLOCK_ROWS, block_cols: int = BLOCK_COLS):
+    """Deterministic sign binarization of a 2-D array via Pallas."""
+    assert x.ndim == 2, f"binarize_det expects 2-D, got {x.shape}"
+    br = min(block_rows, x.shape[0])
+    bc = min(block_cols, x.shape[1])
+    return pl.pallas_call(
+        _binarize_det_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=_grid_2d(x.shape, br, bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def binarize_stoch(x, u, *, block_rows: int = BLOCK_ROWS, block_cols: int = BLOCK_COLS):
+    """Stochastic binarization of a 2-D array: +1 w.p. hard_sigmoid(x).
+
+    `u` must be uniform [0,1) noise of x's shape (caller supplies it so the
+    kernel is pure and lowers identically for AOT and tests).
+    """
+    assert x.ndim == 2 and x.shape == u.shape
+    br = min(block_rows, x.shape[0])
+    bc = min(block_cols, x.shape[1])
+    return pl.pallas_call(
+        _binarize_stoch_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=_grid_2d(x.shape, br, bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, u)
+
+
+def binarize_det_nd(x):
+    """Deterministic binarization of an arbitrary-rank array (reshapes to 2-D
+    for the kernel; shape restored afterwards)."""
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    out = binarize_det(flat)
+    return out.reshape(x.shape)
+
+
+def binarize_stoch_nd(x, u):
+    """Stochastic binarization of an arbitrary-rank array."""
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    uflat = u.reshape(flat.shape)
+    return binarize_stoch(flat, uflat).reshape(x.shape)

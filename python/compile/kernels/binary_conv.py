@@ -1,0 +1,82 @@
+"""Binary convolution = im2col + the tiled binary GEMM Pallas kernel.
+
+The paper's CNNs (sec. 5.1.1) use 3x3 binary kernels. On binary hardware the
+conv is XNOR+popcount per window; on TPU the standard lowering is im2col
+followed by an MXU matmul — which is exactly the Pallas `binary_matmul`
+kernel, so the conv shares the GEMM's tile schedule and VMEM budget
+(DESIGN.md sec. 6). The patch-extraction ordering contract (kh, kw, cin)
+row-major is shared with the rust bitnet engine; python/tests pin it against
+lax.conv.
+
+Layouts: x (N, H, W, Cin) / w (kh, kw, Cin, Cout), i.e. NHWC / HWIO.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import binary_matmul as bmm
+
+
+def _im2col(x, kh, kw, stride=1, padding="SAME"):
+    n, h, w, cin = x.shape
+    if padding == "SAME":
+        # XLA SAME-padding convention: output = ceil(in / stride), with the
+        # extra padding going to the bottom/right.
+        ho_t = -(-h // stride)
+        wo_t = -(-w // stride)
+        pad_h = max((ho_t - 1) * stride + kh - h, 0)
+        pad_w = max((wo_t - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    n, hp, wp, _ = x.shape
+    ho = (hp - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                lax.slice(
+                    x,
+                    (0, i, j, 0),
+                    (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, cin),
+                    (1, stride, stride, 1),
+                )
+            )
+    stacked = jnp.stack(patches, axis=3)  # (n, ho, wo, kh*kw, cin)
+    return stacked.reshape(n * ho * wo, kh * kw * cin), (n, ho, wo)
+
+
+def binary_conv2d(x, w, stride=1, padding="SAME"):
+    """sign(x) (*) sign(w): binary 2-D convolution via im2col + binary GEMM.
+
+    Binarization order matters at the borders: x is binarized *before*
+    zero-padding so a padded 0 contributes 0 to the window sum (matching
+    lax.conv over sign(x)), not sign(0) = +1. The weight is binarized
+    in-kernel (`matmul_bin_w`). Returns (N, Ho, Wo, Cout) f32 with
+    integer-valued entries in [-kh*kw*cin, kh*kw*cin].
+    """
+    kh, kw, cin, cout = w.shape
+    xb = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    cols, (n, ho, wo) = _im2col(xb, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = bmm.matmul_bin_w(cols, wmat)
+    return out.reshape(n, ho, wo, cout)
+
+
+def conv2d_prebin(x, w, stride=1, padding="SAME"):
+    """Conv over operands already in {-1, +1} (no fused binarization;
+    zero-padded borders contribute 0)."""
+    kh, kw, cin, cout = w.shape
+    cols, (n, ho, wo) = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = bmm.matmul_prebin(cols, wmat)
+    return out.reshape(n, ho, wo, cout)

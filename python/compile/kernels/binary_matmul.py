@@ -1,0 +1,215 @@
+"""Pallas kernel: tiled binary GEMM — the paper's compute hot-spot.
+
+Computes sign(A) @ sign(B) for A:(M,K), B:(K,N). This is the +-1 matmul that
+the paper implements with XNOR + popcount on binary hardware (sec. 4); on TPU
+the same contraction is fed straight to the 128x128 MXU systolic array as
++-1 values, since popcount(XNOR(a,b)) over k bits == (a.b + k)/2 for
+a,b in {-1,+1}^k — i.e. the binary MAC *is* a dot product (DESIGN.md sec. 6,
+Hardware adaptation). The rust `bitnet` engine implements the genuine
+bit-packed XNOR-popcount form for deployment; tests pin both to this kernel.
+
+Schedule: classic (i, j, k) grid with a VMEM accumulator tile. Binarization
+of both operand tiles is fused into the kernel so the full-precision operands
+are read from HBM exactly once and the binary values never round-trip.
+
+VMEM footprint at the default 128x128x256 tiling (f32):
+  A tile 128*256*4 = 128 KiB, B tile 256*128*4 = 128 KiB, acc 64 KiB
+  -> ~320 KiB << 16 MiB VMEM, leaving headroom for double buffering.
+MXU utilization estimate: the contraction dimension streams through the MXU
+at full rate; with bf16 operands the tile issues 128x128x256 MACs per grid
+step, matching the systolic array's native shape (see DESIGN.md sec. 9).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 256
+
+
+def _binary_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, k_total: int, bk: int):
+    """One (i, j, k) grid step: acc += sign(x_tile) @ sign(w_tile).
+
+    Edge k-tiles are zero-padded by Pallas; sign(0) = +1 would add spurious
+    contributions, so padded contraction lanes are masked back to 0 on the x
+    side (0 * wb = 0 regardless of the w padding)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = jnp.where(x_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+    wb = jnp.where(w_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, xb.shape, 1)
+    valid = lane < (k_total - k * bk)
+    xb = jnp.where(valid, xb, 0.0)
+    acc_ref[...] += jnp.dot(xb, wb, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def binary_matmul(
+    x,
+    w,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """sign(x) @ sign(w) via the tiled Pallas kernel.
+
+    x: (M, K) f32, w: (K, N) f32 -> (M, N) f32 with integer-valued entries in
+    [-K, K]. Shapes need not divide the block sizes (Pallas masks edges).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    n_k = pl.cdiv(k, bk)
+    return pl.pallas_call(
+        functools.partial(_binary_matmul_kernel, n_k=n_k, k_total=k, bk=bk),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[_acc_scratch(bm, bn)],
+        interpret=True,
+    )(x, w)
+
+
+def _acc_scratch(bm, bn):
+    # Accumulator scratch tile in VMEM. Import placed here so the module
+    # degrades gracefully if pltpu is unavailable (pure-CPU jaxlib builds).
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((bm, bn), jnp.float32)
+    except Exception:  # pragma: no cover - fallback for CPU-only jaxlib
+        import jax.experimental.pallas as pl_mod
+
+        return pl_mod.MemorySpace.ANY((bm, bn), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul_bin_w(
+    x,
+    w,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """x @ sign(w): binarize only the weight tile in-kernel.
+
+    Used by the binary conv path, where activations were already binarized
+    (and then zero-padded: a padded 0 must contribute 0, not sign(0) = +1).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    n_k = pl.cdiv(k, bk)
+
+    def kernel(x_ref, w_ref, o_ref, acc_ref):
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # Edge k-tiles are padded by Pallas with NaN under interpret mode
+        # (and garbage on TPU); mask padded lanes to exact zeros on the x
+        # side (w's pads binarize to ±1, and 0 * ±1 = 0).
+        x = x_ref[...].astype(jnp.float32)
+        lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where(lane < (k - kk * bk), x, 0.0)
+        wb = jnp.where(w_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+        acc_ref[...] += jnp.dot(x, wb, preferred_element_type=jnp.float32)
+
+        @pl.when(kk == n_k - 1)
+        def _store():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[_acc_scratch(bm, bn)],
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul_prebin(
+    x,
+    w,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """Plain tiled matmul over operands already in {-1, +1} (no fused
+    binarization): used where activations were binarized by the neuron
+    kernel and only the weight is binarized on the fly."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    n_k = pl.cdiv(k, bk)
+
+    def kernel(x_ref, w_ref, o_ref, acc_ref):
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # Mask NaN-padded edge k-lanes on BOTH operands (0 * NaN = NaN, so
+        # zeroing one side is not enough for a plain matmul).
+        x = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        xl = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        wl = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+        rem = k - kk * bk
+        x = jnp.where(xl < rem, x, 0.0)
+        w = jnp.where(wl < rem, w, 0.0)
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+        @pl.when(kk == n_k - 1)
+        def _store():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[_acc_scratch(bm, bn)],
+        interpret=True,
+    )(x, w)

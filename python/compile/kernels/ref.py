@@ -1,0 +1,203 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its ground-truth semantics defined here, in
+straight-line jax.numpy with no Pallas, no custom VJPs and no tricks. The
+pytest suite (python/tests/) asserts `kernel == ref` via assert_allclose over
+hypothesis-generated shapes/dtypes; this file is therefore the single source
+of truth for the paper's equations:
+
+  Eq. 1/5  deterministic binarization        -> binarize_det
+  Eq. 2/3  stochastic binarization           -> binarize_stoch
+  Eq. 4    hard tanh HT(x)                   -> hard_tanh
+  Eq. 6    straight-through gradient mask    -> ste_mask
+  Eq. 7-8  exact batch normalization         -> batch_norm_exact
+  Eq. 9-10 shift-based (AP2) batch norm      -> shift_batch_norm
+  sec. 4   XNOR-popcount <-> +-1 dot product -> xnor_popcount_matmul
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def hard_tanh(x):
+    """HT(x), paper Eq. 4: clip x to [-1, 1]."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def hard_sigmoid(x):
+    """sigma(x) = (HT(x) + 1) / 2 = clip((x+1)/2, 0, 1), paper sec. 3.1."""
+    return jnp.clip((x + 1.0) * 0.5, 0.0, 1.0)
+
+
+def binarize_det(x):
+    """Deterministic sign binarization, paper Eq. 5 (test-time neurons and
+    Eq. 1 weights): +1 if x >= 0 else -1. Note sign(0) := +1."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def binarize_stoch(x, u):
+    """Stochastic binarization, paper Eq. 3: +1 w.p. hard_sigmoid(x).
+
+    `u` is caller-supplied uniform noise in [0, 1) with x's shape — keeping
+    the primitive pure (same contract as the Pallas kernel).
+    """
+    return jnp.where(u < hard_sigmoid(x), 1.0, -1.0).astype(x.dtype)
+
+
+def ste_mask(x):
+    """dHT/dx, paper Eq. 6: pass gradient iff x in [-1, 1], else 0."""
+    return (jnp.abs(x) <= 1.0).astype(x.dtype)
+
+
+def ste_grad(x, g):
+    """Backward of the binarized neuron under the STE: g * dHT/dx."""
+    return g * ste_mask(x)
+
+
+def binary_matmul(a, b):
+    """(sign(a)) @ (sign(b)) — the paper's binary GEMM, +-1 semantics.
+
+    This is the mathematical object the XNOR-popcount engine computes; see
+    xnor_popcount_matmul for the bit-domain identity.
+    """
+    return jnp.dot(binarize_det(a), binarize_det(b))
+
+
+def binary_matmul_prebin(ab, bb):
+    """Matmul over operands that are already +-1 valued."""
+    return jnp.dot(ab, bb)
+
+
+def xnor_popcount_matmul(a_bits, b_bits, k):
+    """Bit-domain identity used by the rust engine (DESIGN.md sec. 6):
+
+        dot(a, b) = 2 * popcount(XNOR(a_bits, b_bits)) - k
+
+    for a, b in {-1,+1}^k encoded as bits (1 <-> +1, 0 <-> -1). Here the
+    operands are int arrays of {0,1} of shape (m, k) and (k, n); returns the
+    equivalent +-1 dot product as f32 alongside the direct +-1 dot, so tests
+    can pin the contract between the Pallas +-1 kernel and the rust
+    popcount engine.
+    """
+    a_pm = (2 * a_bits - 1).astype(jnp.float32)
+    b_pm = (2 * b_bits - 1).astype(jnp.float32)
+    # XNOR(a,b) = 1 iff bits agree; popcount over k = number of agreements.
+    agree = jnp.einsum(
+        "mk,kn->mn", a_bits.astype(jnp.float32), b_bits.astype(jnp.float32)
+    ) + jnp.einsum(
+        "mk,kn->mn", (1 - a_bits).astype(jnp.float32), (1 - b_bits).astype(jnp.float32)
+    )
+    out = 2.0 * agree - k
+    return out, jnp.dot(a_pm, b_pm)
+
+
+def ap2(x, eps=1e-30):
+    """Approximate power-of-2 proxy of x, paper sec. 3.3.
+
+    AP2(z) = sign(z) * 2^round(log2 |z|): the nearest power of two (the
+    paper describes it as "the index of the MSB"). AP2(0) := 0.
+    """
+    mag = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(jnp.abs(x), eps))))
+    return jnp.where(x == 0, 0.0, jnp.sign(x) * mag).astype(jnp.asarray(x).dtype)
+
+
+def batch_norm_exact(x, gamma, beta, eps=1e-4):
+    """Standard BN over the batch axis (axis 0), paper Eqs. 7-8."""
+    c = x - jnp.mean(x, axis=0, keepdims=True)
+    inv_std = 1.0 / jnp.sqrt(jnp.mean(c * c, axis=0, keepdims=True) + eps)
+    return c * inv_std * gamma + beta
+
+
+def shift_batch_norm(x, gamma, beta, eps=1e-4):
+    """Shift-based BN, paper Eqs. 9-10.
+
+    Every multiplication is replaced by a multiplication with an AP2 value
+    (which dedicated hardware implements as a binary shift):
+
+      C(x)            = x - <x>                          (centering: adds only)
+      var_p2          = < C(x) * AP2(C(x)) >             (Eq. 9 inner term)
+      sigma_p2^{-1}   = AP2( 1 / sqrt(var_p2 + eps) )    (Eq. 9)
+      BN_AP2(x)       = (C(x) * sigma_p2^{-1}) * AP2(gamma) + beta   (Eq. 10)
+    """
+    c = x - jnp.mean(x, axis=0, keepdims=True)
+    var_p2 = jnp.mean(c * ap2(c), axis=0, keepdims=True)
+    inv_std = ap2(1.0 / jnp.sqrt(jnp.abs(var_p2) + eps))
+    return c * inv_std * ap2(gamma) + beta
+
+
+def batch_norm_inference(x, gamma, beta, running_mean, running_var, eps=1e-4):
+    """Inference-time BN with folded running statistics (exact form)."""
+    inv_std = 1.0 / jnp.sqrt(running_var + eps)
+    return (x - running_mean) * inv_std * gamma + beta
+
+
+def square_hinge_loss(logits, targets_pm1):
+    """L2-SVM output layer loss, paper sec. 5: mean over batch of
+    sum_c max(0, 1 - y_c * s_c)^2 with targets in {-1, +1}."""
+    margin = jnp.maximum(0.0, 1.0 - targets_pm1 * logits)
+    return jnp.mean(jnp.sum(margin * margin, axis=-1))
+
+
+def binary_conv2d(x, w, stride=1, padding="SAME"):
+    """Binary convolution oracle: conv over sign(x), sign(w).
+
+    x: (N, H, W, Cin) f32; w: (kh, kw, Cin, Cout) f32. NHWC/HWIO layouts.
+    """
+    return lax.conv_general_dilated(
+        binarize_det(x),
+        binarize_det(w),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def im2col(x, kh, kw, stride=1, padding="SAME"):
+    """Extract conv patches: (N, H, W, Cin) -> (N*Ho*Wo, kh*kw*Cin).
+
+    The column ordering contract (kh, kw, cin) row-major is shared with the
+    rust bitnet engine's im2col; tests pin it.
+    """
+    n, h, w, cin = x.shape
+    if padding == "SAME":
+        # XLA SAME-padding convention: output = ceil(in / stride), with the
+        # extra padding going to the bottom/right.
+        ho_t = -(-h // stride)
+        wo_t = -(-w // stride)
+        pad_h = max((ho_t - 1) * stride + kh - h, 0)
+        pad_w = max((wo_t - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    n, hp, wp, _ = x.shape
+    ho = (hp - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                lax.slice(
+                    x,
+                    (0, i, j, 0),
+                    (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, cin),
+                    (1, stride, stride, 1),
+                )
+            )
+    # (n, ho, wo, kh*kw, cin) -> (n*ho*wo, kh*kw*cin)
+    stacked = jnp.stack(patches, axis=3)
+    return stacked.reshape(n * ho * wo, kh * kw * cin), (n, ho, wo)
+
+
+def max_pool_2x2(x):
+    """2x2 max pooling, stride 2, NHWC."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )

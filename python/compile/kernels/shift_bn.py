@@ -1,0 +1,72 @@
+"""Pallas kernel: shift-based batch normalization (paper Eqs. 7-10).
+
+Standard BN costs one multiply + one divide per activation; the paper
+replaces every multiplication with a multiplication by an AP2 (nearest
+power-of-2) value, which dedicated hardware implements as a binary shift:
+
+    C(x)          = x - <x>                                  (adds only)
+    var_p2        = < C(x) * AP2(C(x)) >                     (Eq. 9, inner)
+    sigma_p2^{-1} = AP2( 1/sqrt(var_p2 + eps) )              (Eq. 9)
+    BN_AP2(x)     = (C(x) << sigma_p2^{-1}) << AP2(gamma) + beta   (Eq. 10)
+
+Here AP2(z) = sign(z) * 2^round(log2|z|). Inside the kernel the AP2
+"multiplies" are expressed as float multiplications by exact powers of two —
+bit-identical to an exponent-field shift, which is how the rust engine and
+real hardware realize them. The one non-shift op, 1/sqrt, is applied to a
+single value per feature (0.3% of network size per the paper, sec. 3.3).
+
+Grid: one step per feature tile; the whole batch column block sits in VMEM
+(batch <= a few hundred in all paper configs, so a (B, BLOCK_F) tile is
+well under VMEM budget: 512 x 128 x 4B = 256 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_F = 128
+
+
+def _ap2(z, eps=1e-30):
+    mag = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(jnp.abs(z), eps))))
+    return jnp.where(z == 0, 0.0, jnp.sign(z) * mag)
+
+
+def _shift_bn_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    gamma = g_ref[...]
+    beta = b_ref[...]
+    c = x - jnp.mean(x, axis=0, keepdims=True)
+    var_p2 = jnp.mean(c * _ap2(c), axis=0, keepdims=True)
+    inv_std = _ap2(1.0 / jnp.sqrt(jnp.abs(var_p2) + eps))
+    o_ref[...] = (c * inv_std * _ap2(gamma) + beta).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "eps"))
+def shift_batch_norm(x, gamma, beta, *, block_f: int = BLOCK_F, eps: float = 1e-4):
+    """Shift-based BN over axis 0 of a 2-D (batch, features) array.
+
+    gamma, beta: (features,) learnable affine parameters (gamma enters only
+    through AP2(gamma) — Eq. 10).
+    """
+    assert x.ndim == 2, f"shift_batch_norm expects 2-D, got {x.shape}"
+    b, f = x.shape
+    bf = min(block_f, f)
+    g2 = gamma.reshape(1, f)
+    b2 = beta.reshape(1, f)
+    return pl.pallas_call(
+        functools.partial(_shift_bn_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(pl.cdiv(f, bf),),
+        in_specs=[
+            pl.BlockSpec((b, bf), lambda j: (0, j)),
+            pl.BlockSpec((1, bf), lambda j: (0, j)),
+            pl.BlockSpec((1, bf), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, bf), lambda j: (0, j)),
+        interpret=True,
+    )(x, g2, b2)

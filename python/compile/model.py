@@ -1,0 +1,440 @@
+"""L2: the paper's models — BBP training (Alg. 1) and inference graphs.
+
+Everything here is pure JAX that calls the Pallas kernels through the
+custom-VJP op layer (`ops.py`). The functions are AOT-lowered once by
+`aot.py` to HLO text; the Rust coordinator owns the training loop, the
+learning-rate shift schedule, data and checkpoints, and just executes these
+graphs via PJRT.
+
+Model zoo (paper sec. 5):
+  * MLP  — permutation-invariant MNIST: 3 binary hidden layers x 1024,
+    L2-SVM output, square hinge loss, batch 200, *no* batch norm (the paper
+    avoided BN on MNIST; bias terms are used instead).
+  * CNN  — CIFAR-10 / SVHN: 3 stages of (2 x 3x3 binary conv -> 2x2
+    maxpool) with maps M/2M/4M, two binary FC layers, L2-SVM output,
+    shift-based BN (batch 100 in the paper; batch/maps scaled by config for
+    the 1-core CPU testbed — see DESIGN.md sec. 5).
+
+Modes (Table 3 rows):
+  * "bdnn"          — binary weights AND binary neurons, train + test (BBP).
+  * "binaryconnect" — binary weights, float hard-tanh neurons (Courbariaux).
+  * "float"         — no binarization, ReLU neurons (the "No reg" baseline).
+
+Parameter-ordering contract (DESIGN.md sec. 8): parameters live in flat dicts
+keyed by zero-padded layer names; flattening is by sorted key. `param_specs`
+is the single source of truth and is exported to artifacts/manifest.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .kernels import ref
+from .ops import make_ops
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str  # "mlp" | "cnn"
+    mode: str  # "bdnn" | "binaryconnect" | "float"
+    in_shape: Tuple[int, ...]  # (784,) or (32, 32, 3)
+    classes: int = 10
+    hidden: Tuple[int, ...] = (1024, 1024, 1024)  # mlp
+    maps: Tuple[int, ...] = (32, 64, 128)  # cnn stage widths
+    fc: Tuple[int, ...] = (512, 512)  # cnn fully-connected widths
+    bn: str = "shift"  # "shift" | "exact" | "none"
+    weight_bin: str = "det"  # "det" | "stoch"
+    neuron_bin: str = "stoch"  # train-time neuron binarization
+    batch: int = 100
+    eval_batch: int = 200
+    k_steps: int = 4  # minibatches per train-chunk executable
+    optimizer: str = "s_adamax"
+    use_pallas: bool = True
+    bn_momentum: float = 0.9
+    bn_eps: float = 1e-4
+
+    @property
+    def in_dim(self) -> int:
+        d = 1
+        for s in self.in_shape:
+            d *= s
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: the L2<->L3 contract
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    kind: str  # "weight" | "bias" | "gamma" | "beta" | "state"
+    init: str  # "uniform_pm1" | "zeros" | "ones"
+
+
+def _bn_specs(prefix: str, dim: int, bn: str) -> List[ParamSpec]:
+    if bn == "none":
+        return [ParamSpec(f"{prefix}_b", (dim,), "bias", "zeros")]
+    return [
+        ParamSpec(f"{prefix}_gamma", (dim,), "gamma", "ones"),
+        ParamSpec(f"{prefix}_beta", (dim,), "beta", "zeros"),
+        ParamSpec(f"{prefix}_rmean", (dim,), "state", "zeros"),
+        ParamSpec(f"{prefix}_rvar", (dim,), "state", "ones"),
+    ]
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Ordered parameter specs. Order == sorted(name) == manifest order."""
+    specs: List[ParamSpec] = []
+    li = 0
+    if cfg.arch == "mlp":
+        dims = [cfg.in_dim, *cfg.hidden, cfg.classes]
+        for i in range(len(dims) - 1):
+            p = f"L{li:02d}"
+            specs.append(ParamSpec(f"{p}_W", (dims[i], dims[i + 1]), "weight", "uniform_pm1"))
+            specs.extend(_bn_specs(p, dims[i + 1], cfg.bn))
+            li += 1
+    elif cfg.arch == "cnn":
+        h, w, cin = cfg.in_shape
+        for m in cfg.maps:
+            for rep in range(2):
+                p = f"L{li:02d}"
+                specs.append(ParamSpec(f"{p}_W", (3, 3, cin, m), "weight", "uniform_pm1"))
+                specs.extend(_bn_specs(p, m, cfg.bn))
+                cin = m
+                li += 1
+            h //= 2
+            w //= 2
+        flat = h * w * cfg.maps[-1]
+        dims = [flat, *cfg.fc, cfg.classes]
+        for i in range(len(dims) - 1):
+            p = f"L{li:02d}"
+            specs.append(ParamSpec(f"{p}_W", (dims[i], dims[i + 1]), "weight", "uniform_pm1"))
+            specs.extend(_bn_specs(p, dims[i + 1], cfg.bn))
+            li += 1
+    else:
+        raise ValueError(f"unknown arch {cfg.arch}")
+    return sorted(specs, key=lambda s: s.name)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """uniform(-1,1) weight init (paper Alg. 1); ones/zeros for BN/state."""
+    key = jax.random.PRNGKey(seed)
+    out: Params = {}
+    for spec in param_specs(cfg):
+        if spec.init == "uniform_pm1":
+            key, k = jax.random.split(key)
+            out[spec.name] = jax.random.uniform(k, spec.shape, jnp.float32, -1.0, 1.0)
+        elif spec.init == "zeros":
+            out[spec.name] = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            out[spec.name] = jnp.ones(spec.shape, jnp.float32)
+        else:
+            raise ValueError(spec.init)
+    return out
+
+
+def trainable_names(cfg: ModelConfig) -> List[str]:
+    return [s.name for s in param_specs(cfg) if s.kind != "state"]
+
+
+def state_names(cfg: ModelConfig) -> List[str]:
+    return [s.name for s in param_specs(cfg) if s.kind == "state"]
+
+
+def weight_names(cfg: ModelConfig) -> List[str]:
+    return [s.name for s in param_specs(cfg) if s.kind == "weight"]
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _bn_train(cfg, ops, params, new_state, prefix, z2d):
+    """BN over axis 0 of a 2-D view; returns normalized activations and
+    records updated running statistics in `new_state`."""
+    gamma, beta = params[f"{prefix}_gamma"], params[f"{prefix}_beta"]
+    mean = jnp.mean(z2d, axis=0)
+    c = z2d - mean[None, :]
+    if cfg.bn == "shift":
+        out = ops.shift_bn(z2d, gamma, beta)
+        var = jnp.mean(c * ref.ap2(c), axis=0)  # the AP2 variance proxy
+    else:
+        out = ref.batch_norm_exact(z2d, gamma, beta, eps=cfg.bn_eps)
+        var = jnp.mean(c * c, axis=0)
+    mom = cfg.bn_momentum
+    new_state[f"{prefix}_rmean"] = mom * params[f"{prefix}_rmean"] + (1 - mom) * mean
+    new_state[f"{prefix}_rvar"] = mom * params[f"{prefix}_rvar"] + (1 - mom) * var
+    return out
+
+
+def _bn_eval(cfg, params, prefix, z2d):
+    gamma, beta = params[f"{prefix}_gamma"], params[f"{prefix}_beta"]
+    rm, rv = params[f"{prefix}_rmean"], params[f"{prefix}_rvar"]
+    if cfg.bn == "shift":
+        inv = ref.ap2(1.0 / jnp.sqrt(jnp.abs(rv) + cfg.bn_eps))
+        return (z2d - rm[None, :]) * inv * ref.ap2(gamma) + beta
+    inv = 1.0 / jnp.sqrt(rv + cfg.bn_eps)
+    return (z2d - rm[None, :]) * inv * gamma + beta
+
+
+def _post_linear(cfg, ops, params, new_state, prefix, z, train):
+    """BN (train or eval statistics) or bias, applied on the channel axis."""
+    shp = z.shape
+    z2d = z.reshape(-1, shp[-1])
+    if cfg.bn == "none":
+        out = z2d + params[f"{prefix}_b"][None, :]
+    elif train:
+        out = _bn_train(cfg, ops, params, new_state, prefix, z2d)
+    else:
+        out = _bn_eval(cfg, params, prefix, z2d)
+    return out.reshape(shp)
+
+
+def _activate(cfg, ops, h, train, key):
+    """Hidden-layer nonlinearity per mode (paper sec. 3.1-3.2)."""
+    if cfg.mode == "bdnn":
+        if train and cfg.neuron_bin == "stoch":
+            u = jax.random.uniform(key, h.shape, jnp.float32)
+            return ops.neuron_stoch(h, u)
+        return ops.neuron_det(h)
+    if cfg.mode == "binaryconnect":
+        return ref.hard_tanh(h)
+    return jnp.maximum(h, 0.0)  # float baseline: ReLU
+
+
+def _bin_weight(cfg, ops, w, key):
+    if cfg.mode == "float":
+        return w
+    if cfg.weight_bin == "stoch":
+        u = jax.random.uniform(key, w.shape, jnp.float32)
+        return ops.weight_stoch(w, u)
+    return ops.weight_det(w)
+
+
+def forward(cfg: ModelConfig, params: Params, x, *, train: bool, key):
+    """Run the network. Returns (logits, new_state_dict).
+
+    x: (B, in_dim) for mlp, (B, H, W, C) for cnn, float32.
+    `key` seeds the stochastic binarizations (ignored at eval).
+    """
+    ops = make_ops(cfg.use_pallas)
+    new_state: Params = {}
+    li = 0
+
+    def nk():
+        # per-layer deterministic subkey
+        return jax.random.fold_in(key, li)
+
+    if cfg.arch == "mlp":
+        h = x
+        n_layers = len(cfg.hidden) + 1
+        for i in range(n_layers):
+            p = f"L{li:02d}"
+            wb = _bin_weight(cfg, ops, params[f"{p}_W"], nk())
+            z = ops.matmul(h, wb)
+            z = _post_linear(cfg, ops, params, new_state, p, z, train)
+            if i < n_layers - 1:
+                h = _activate(cfg, ops, z, train, nk())
+            else:
+                logits = z
+            li += 1
+        return logits, new_state
+
+    # cnn
+    h = x
+    for m in cfg.maps:
+        for rep in range(2):
+            p = f"L{li:02d}"
+            wb = _bin_weight(cfg, ops, params[f"{p}_W"], nk())
+            z = ops.conv2d_s1(h, wb)
+            if rep == 1:
+                z = ref.max_pool_2x2(z)
+            z = _post_linear(cfg, ops, params, new_state, p, z, train)
+            h = _activate(cfg, ops, z, train, nk())
+            li += 1
+    h = h.reshape(h.shape[0], -1)
+    n_fc = len(cfg.fc) + 1
+    for i in range(n_fc):
+        p = f"L{li:02d}"
+        wb = _bin_weight(cfg, ops, params[f"{p}_W"], nk())
+        z = ops.matmul(h, wb)
+        z = _post_linear(cfg, ops, params, new_state, p, z, train)
+        if i < n_fc - 1:
+            h = _activate(cfg, ops, z, train, nk())
+        else:
+            logits = z
+        li += 1
+    return logits, new_state
+
+
+def conv1_features(cfg: ModelConfig, params: Params, x):
+    """First conv layer's binarized feature maps (Fig. 3 artifact)."""
+    assert cfg.arch == "cnn"
+    ops = make_ops(cfg.use_pallas)
+    wb = _bin_weight(cfg, ops, params["L00_W"], jax.random.PRNGKey(0))
+    z = ops.conv2d_s1(x, wb)
+    z = _post_linear(cfg, ops, params, {}, "L00", z, train=False)
+    return ops.neuron_det(z)
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def loss_and_err(cfg: ModelConfig, logits, labels):
+    """Square hinge loss against +-1 one-hot targets + top-1 error count."""
+    y = 2.0 * jax.nn.one_hot(labels, cfg.classes, dtype=jnp.float32) - 1.0
+    loss = ref.square_hinge_loss(logits, y)
+    err = jnp.sum((jnp.argmax(logits, axis=-1) != labels).astype(jnp.float32))
+    return loss, err
+
+
+# ---------------------------------------------------------------------------
+# Training step / chunk (Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def train_step(cfg: ModelConfig, params: Params, state: Params, m: Params, u: Params, t, lr, key, x, labels):
+    """One BBP step. Returns (params', state', m', u', loss, err)."""
+    upd = optim.UPDATES[cfg.optimizer]
+    wnames = set(weight_names(cfg))
+
+    def loss_fn(trainable: Params):
+        full = dict(trainable)
+        full.update(state)
+        logits, new_state = forward(cfg, full, x, train=True, key=key)
+        loss, err = loss_and_err(cfg, logits, labels)
+        return loss, (new_state, err)
+
+    trainable = {k: params[k] for k in trainable_names(cfg)}
+    (loss, (new_state, err)), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+
+    new_params: Params = {}
+    new_m: Params = {}
+    new_u: Params = {}
+    t1 = t + 1.0
+    for name in trainable:
+        delta, m2, u2 = upd(grads[name], m[name], u[name], t1, lr)
+        w2 = trainable[name] + delta
+        if name in wnames:
+            w2 = jnp.clip(w2, -1.0, 1.0)  # Alg. 1: clip(W - dW)
+        new_params[name] = w2
+        new_m[name] = m2
+        new_u[name] = u2
+    return new_params, new_state, new_m, new_u, loss, err
+
+
+def train_chunk(cfg: ModelConfig, params, state, m, u, t, lr, key, xs, labels_s):
+    """K = cfg.k_steps minibatches inside one executable via lax.scan.
+
+    xs: (K, B, ...), labels_s: (K, B) i32. Host<->device traffic is paid once
+    per chunk instead of once per step (DESIGN.md sec. 9, L2 perf lever).
+    Returns (params', state', m', u', t', losses (K,), errs (K,)).
+    """
+
+    def body(carry, xy):
+        params, state, m, u, t = carry
+        x, labels, i = xy
+        k = jax.random.fold_in(key, i)
+        p2, s2, m2, u2, loss, err = train_step(cfg, params, state, m, u, t, lr, k, x, labels)
+        # state dict from train_step only has BN running stats; merge to keep
+        # the full state pytree shape stable under scan.
+        state = {**state, **s2}
+        return (p2, state, m2, u2, t + 1.0), (loss, err)
+
+    idx = jnp.arange(cfg.k_steps, dtype=jnp.uint32)
+    (params, state, m, u, t), (losses, errs) = jax.lax.scan(
+        body, (params, state, m, u, t), (xs, labels_s, idx)
+    )
+    return params, state, m, u, t, losses, errs
+
+
+def eval_step(cfg: ModelConfig, params: Params, state: Params, x):
+    """Deterministic inference (Eq. 5 binarization). Returns logits."""
+    full = dict(params)
+    full.update(state)
+    logits, _ = forward(cfg, full, x, train=False, key=jax.random.PRNGKey(0))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Config registry (artifact zoo)
+# ---------------------------------------------------------------------------
+
+
+def _mlp(name, mode, hidden, batch, k_steps, use_pallas, bn="shift", **kw):
+    # NOTE: the paper's text claims MNIST avoided BN (sec. 5.1.2), but its
+    # own sec. 3.2 argues BN is *required* for the STE to see unsaturated
+    # pre-activations — and indeed without BN the 784-input layer saturates
+    # every neuron (|z| ~ sqrt(784) >> 1) and training collapses to the
+    # trivial zero-logit solution. We default to shift-BN (the paper's own
+    # sec. 3.3 mechanism) and keep a faithful no-BN ablation config.
+    return ModelConfig(
+        name=name, arch="mlp", mode=mode, in_shape=(784,), hidden=hidden,
+        bn=bn, batch=batch, eval_batch=200, k_steps=k_steps,
+        use_pallas=use_pallas, **kw,
+    )
+
+
+def _cnn(name, mode, maps, fc, batch, k_steps, use_pallas, **kw):
+    return ModelConfig(
+        name=name, arch="cnn", mode=mode, in_shape=(32, 32, 3), maps=maps,
+        fc=fc, bn="shift", batch=batch, eval_batch=100, k_steps=k_steps,
+        use_pallas=use_pallas, **kw,
+    )
+
+
+CONFIGS: Dict[str, ModelConfig] = {}
+
+
+def _register(cfg: ModelConfig):
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+# --- validation-scale configs (Pallas kernels on the hot path) -------------
+_register(_mlp("mnist_mlp", "bdnn", (1024, 1024, 1024), 200, 2, True))
+_register(_mlp("mnist_mlp_small", "bdnn", (256, 256, 256), 100, 4, True))
+_register(_cnn("cifar_cnn", "bdnn", (32, 64, 128), (512, 512), 50, 2, True))
+
+# --- fast configs (pure-jnp oracle forward; same math, pinned by tests) ----
+_register(_mlp("mnist_mlp_fast", "bdnn", (1024, 1024, 1024), 200, 4, False))
+_register(_mlp("mnist_mlp_bc_fast", "binaryconnect", (1024, 1024, 1024), 200, 4, False))
+_register(_mlp("mnist_mlp_float_fast", "float", (1024, 1024, 1024), 200, 4, False, optimizer="adamax"))
+_register(_cnn("cifar_cnn_fast", "bdnn", (32, 64, 128), (512, 512), 50, 4, False))
+_register(_cnn("cifar_cnn_bc_fast", "binaryconnect", (32, 64, 128), (512, 512), 50, 4, False))
+_register(_cnn("cifar_cnn_float_fast", "float", (32, 64, 128), (512, 512), 50, 4, False, optimizer="adamax"))
+
+# --- ablations --------------------------------------------------------------
+_register(_mlp("mnist_mlp_detneuron_fast", "bdnn", (1024, 1024, 1024), 200, 4, False, neuron_bin="det"))
+_register(_mlp("mnist_mlp_nobn_fast", "bdnn", (1024, 1024, 1024), 200, 4, False, bn="none"))
+_register(_mlp("mnist_mlp_exactbn_fast", "bdnn", (1024, 1024, 1024), 200, 4, False, bn="exact"))
+_register(
+    ModelConfig(
+        name="cifar_cnn_exactbn_fast", arch="cnn", mode="bdnn", in_shape=(32, 32, 3),
+        maps=(32, 64, 128), fc=(512, 512), bn="exact", batch=50, eval_batch=100,
+        k_steps=4, use_pallas=False,
+    )
+)
+
+# --- paper-scale CNN (compile-only by default; not in the default artifact
+#     set — enable with `python -m compile.aot --configs cifar_cnn_paper`) ---
+_register(_cnn("cifar_cnn_paper", "bdnn", (128, 256, 512), (1024, 1024), 100, 1, False))

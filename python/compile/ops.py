@@ -1,0 +1,206 @@
+"""Differentiable op layer: Pallas kernels wrapped in explicit VJPs.
+
+Pallas has no automatic differentiation, so every kernel used inside the
+training graph gets a hand-written custom_vjp here. The backward rules are
+the paper's (sec. 3.2): the error signal stays full precision while the
+*operands* of every backward MAC are the saved binary values — i.e. the
+backward GEMMs are binary x float products, exactly what BBP replaces with
+XNOR-popcount against the binary operand.
+
+Two interchangeable implementations are produced by `make_ops`:
+
+  make_ops(use_pallas=True)   -> forward kernels are the Pallas kernels
+                                 (interpret=True; the architecture-validating
+                                 path, ~20x slower on CPU interpret mode)
+  make_ops(use_pallas=False)  -> forward kernels are the pure-jnp oracles
+                                 from kernels/ref.py (bit-identical math,
+                                 pinned by python/tests/test_ops_equiv.py;
+                                 used for the long benchmark trainings)
+
+Both variants share the same VJP rules, so gradients are identical too.
+
+VJP notes:
+  * matmul / conv2d: standard transpose rules; the transposed products are
+    issued through the same GEMM kernel.
+  * shift_bn: AP2(.) is piecewise constant, so its exact derivative is zero
+    almost everywhere. Treating the AP2 factors s = AP2(1/sqrt(var_p2)) and
+    gg = AP2(gamma) as constants is therefore the *exact* a.e. gradient:
+        dx     = s * gg * (g - mean_B(g))
+        dgamma = sum_B(g * c * s)     (straight-through AP2'(gamma) ~= 1,
+                                       else gamma would never train)
+        dbeta  = sum_B(g)
+  * col2im (conv input gradient) is pure data movement (pad/slice adds), and
+    is expressed via jax.vjp of the im2col slicing — no MACs involved.
+"""
+
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binarize as kbin
+from .kernels import binary_conv as kconv
+from .kernels import binary_matmul as kbmm
+from .kernels import ref
+from .kernels import shift_bn as ksbn
+
+
+def _make_matmul(use_pallas: bool):
+    raw = (lambda a, b: kbmm.matmul_prebin(a, b)) if use_pallas else (lambda a, b: jnp.dot(a, b))
+
+    @jax.custom_vjp
+    def matmul(a, b):
+        return raw(a, b)
+
+    def fwd(a, b):
+        return raw(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        return raw(g, b.T), raw(a.T, g)
+
+    matmul.defvjp(fwd, bwd)
+    return matmul
+
+
+def _make_conv2d(use_pallas: bool, stride: int = 1, padding: str = "SAME"):
+    """Conv over pre-binarized (or float) operands: x (N,H,W,Ci), w (kh,kw,Ci,Co)."""
+    mm = (lambda a, b: kbmm.matmul_prebin(a, b)) if use_pallas else (lambda a, b: jnp.dot(a, b))
+
+    def im2col(x, kh, kw):
+        return kconv._im2col(x, kh, kw, stride, padding)
+
+    @jax.custom_vjp
+    def conv2d(x, w):
+        kh, kw, cin, cout = w.shape
+        cols, (n, ho, wo) = im2col(x, kh, kw)
+        out = mm(cols, w.reshape(kh * kw * cin, cout))
+        return out.reshape(n, ho, wo, cout)
+
+    def fwd(x, w):
+        kh, kw, cin, cout = w.shape
+        cols, (n, ho, wo) = im2col(x, kh, kw)
+        out = mm(cols, w.reshape(kh * kw * cin, cout))
+        return out.reshape(n, ho, wo, cout), (x, w, cols)
+
+    def bwd(res, g):
+        x, w, cols = res
+        kh, kw, cin, cout = w.shape
+        gm = g.reshape(-1, cout)
+        dw = mm(cols.T, gm).reshape(w.shape)
+        dcols = mm(gm, w.reshape(kh * kw * cin, cout).T)
+        # col2im: transpose of the im2col slicing (pure data movement).
+        _, vjp_fn = jax.vjp(lambda xx: im2col(xx, kh, kw)[0], x)
+        (dx,) = vjp_fn(dcols)
+        return dx, dw
+
+    conv2d.defvjp(fwd, bwd)
+    return conv2d
+
+
+def _ap2(z, eps=1e-30):
+    mag = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(jnp.abs(z), eps))))
+    return jnp.where(z == 0, 0.0, jnp.sign(z) * mag)
+
+
+def _make_shift_bn(use_pallas: bool, eps: float = 1e-4):
+    raw = (
+        (lambda x, gamma, beta: ksbn.shift_batch_norm(x, gamma, beta, eps=eps))
+        if use_pallas
+        else (lambda x, gamma, beta: ref.shift_batch_norm(x, gamma, beta, eps=eps))
+    )
+
+    @jax.custom_vjp
+    def shift_bn(x, gamma, beta):
+        return raw(x, gamma, beta)
+
+    def fwd(x, gamma, beta):
+        c = x - jnp.mean(x, axis=0, keepdims=True)
+        var_p2 = jnp.mean(c * _ap2(c), axis=0, keepdims=True)
+        s = _ap2(1.0 / jnp.sqrt(jnp.abs(var_p2) + eps))
+        return raw(x, gamma, beta), (c, s, gamma)
+
+    def bwd(res, g):
+        c, s, gamma = res
+        gg = _ap2(gamma)[None, :]
+        dx = s * gg * (g - jnp.mean(g, axis=0, keepdims=True))
+        dgamma = jnp.sum(g * c * s, axis=0)
+        dbeta = jnp.sum(g, axis=0)
+        return dx, dgamma, dbeta
+
+    shift_bn.defvjp(fwd, bwd)
+    return shift_bn
+
+
+def _make_neuron_bin(use_pallas: bool):
+    bin_stoch = kbin.binarize_stoch_nd if use_pallas else ref.binarize_stoch
+    bin_det = kbin.binarize_det_nd if use_pallas else ref.binarize_det
+
+    @jax.custom_vjp
+    def neuron_stoch(x, u):
+        return bin_stoch(x, u)
+
+    def ns_fwd(x, u):
+        return bin_stoch(x, u), x
+
+    def ns_bwd(x, g):
+        return g * (jnp.abs(x) <= 1.0).astype(g.dtype), None
+
+    neuron_stoch.defvjp(ns_fwd, ns_bwd)
+
+    @jax.custom_vjp
+    def neuron_det(x):
+        return bin_det(x)
+
+    def nd_fwd(x):
+        return bin_det(x), x
+
+    def nd_bwd(x, g):
+        return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+    neuron_det.defvjp(nd_fwd, nd_bwd)
+
+    @jax.custom_vjp
+    def weight_det(w):
+        return bin_det(w)
+
+    def wd_fwd(w):
+        return bin_det(w), None
+
+    def wd_bwd(_, g):
+        return (g,)
+
+    weight_det.defvjp(wd_fwd, wd_bwd)
+
+    @jax.custom_vjp
+    def weight_stoch(w, u):
+        return bin_stoch(w, u)
+
+    def ws_fwd(w, u):
+        return bin_stoch(w, u), None
+
+    def ws_bwd(_, g):
+        return g, None
+
+    weight_stoch.defvjp(ws_fwd, ws_bwd)
+
+    return neuron_stoch, neuron_det, weight_det, weight_stoch
+
+
+@functools.lru_cache(maxsize=4)
+def make_ops(use_pallas: bool):
+    """Build the op namespace for one kernel backend (cached)."""
+    neuron_stoch, neuron_det, weight_det, weight_stoch = _make_neuron_bin(use_pallas)
+    return SimpleNamespace(
+        use_pallas=use_pallas,
+        matmul=_make_matmul(use_pallas),
+        conv2d_s1=_make_conv2d(use_pallas, stride=1, padding="SAME"),
+        shift_bn=_make_shift_bn(use_pallas),
+        neuron_stoch=neuron_stoch,
+        neuron_det=neuron_det,
+        weight_det=weight_det,
+        weight_stoch=weight_stoch,
+    )

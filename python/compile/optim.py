@@ -1,0 +1,72 @@
+"""Shift-based AdaMax (paper sec. 3.4) and ablation optimizers.
+
+The paper trains with a "shift based-AdaMax (S-AdaMax)", a variant of AdaMax
+(Kingma & Ba, 2014) in which the learning rate and the per-parameter scaling
+are powers of two, so every multiply in the update rule is a binary shift:
+
+    t   <- t + 1
+    m   <- b1 * m + (1 - b1) * g         b1 = 1 - 2^-3  (mult by 1-2^-k ==
+    u   <- max(b2 * u, |g|)              b2 = 1 - 2^-10  subtract-shifted-self)
+    w   <- clip( w - AP2(lr / (1 - b1^t)) * m * AP2(1/u) )
+
+AP2(z) = sign(z) 2^round(log2|z|) is the nearest power of two, so both
+scaling factors are pure shifts; the betas are of the form 1 - 2^-k so the
+decay multiplies are a subtract of a shifted value. The learning-rate
+schedule itself is also shift-based: the coordinator halves lr every 50
+epochs ("shifted to the right", Fig. 1).
+
+Plain AdaMax and SGD are kept as ablation baselines (same signature).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BETA1 = 1.0 - 2.0**-3  # 0.875
+BETA2 = 1.0 - 2.0**-10
+
+
+def _ap2(z, eps=1e-30):
+    mag = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(jnp.abs(z), eps))))
+    return jnp.where(z == 0, 0.0, jnp.sign(z) * mag)
+
+
+def s_adamax_update(g, m, u, t, lr, eps=1e-8):
+    """One S-AdaMax step for a single tensor.
+
+    Args:
+      g: gradient; m, u: first-moment / infinity-norm state; t: step count
+      (1-based, f32 scalar); lr: learning rate (the coordinator supplies a
+      power of two).
+    Returns (delta, m_new, u_new): apply as w <- w + delta.
+    """
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    u_new = jnp.maximum(BETA2 * u, jnp.abs(g))
+    # Bias-corrected step size, snapped to a power of two (a shift).
+    lr_t = _ap2(lr / (1.0 - BETA1**t))
+    # Per-parameter scale snapped to a power of two (a shift).
+    inv_u = _ap2(1.0 / (u_new + eps))
+    delta = -lr_t * m_new * inv_u
+    return delta, m_new, u_new
+
+
+def adamax_update(g, m, u, t, lr, eps=1e-8):
+    """Exact AdaMax (ablation baseline for S-AdaMax)."""
+    m_new = BETA1 * m + (1.0 - BETA1) * g
+    u_new = jnp.maximum(BETA2 * u, jnp.abs(g))
+    lr_t = lr / (1.0 - BETA1**t)
+    delta = -lr_t * m_new / (u_new + eps)
+    return delta, m_new, u_new
+
+
+def sgd_update(g, m, u, t, lr, eps=1e-8):
+    """Plain SGD (keeps the m/u state untouched so signatures line up)."""
+    del t, eps
+    return -lr * g, m, u
+
+
+UPDATES = {
+    "s_adamax": s_adamax_update,
+    "adamax": adamax_update,
+    "sgd": sgd_update,
+}

@@ -1,0 +1,16 @@
+"""Shared pytest fixtures/settings for the kernel and model test suites."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest is launched from python/ or repo root.
+_here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _here not in sys.path:
+    sys.path.insert(0, _here)
+
+from hypothesis import settings
+
+# CI-ish defaults: modest example counts keep the interpret-mode Pallas
+# kernels affordable on the 1-core testbed while still sweeping shapes.
+settings.register_profile("default", max_examples=25, deadline=None)
+settings.load_profile("default")

@@ -1,0 +1,136 @@
+"""AOT contract tests: manifest consistency + HLO text executes correctly.
+
+Executes the lowered HLO through xla_client's local CPU backend — the same
+XLA version the Rust PJRT client embeds cannot be loaded from Python here,
+but round-tripping StableHLO -> XlaComputation -> HLO text -> compile -> run
+catches exactly the class of bugs the interchange can introduce (id
+remapping, tuple conventions, layout defaults).
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+
+TINY = dataclasses.replace(
+    M.CONFIGS["mnist_mlp_small"],
+    hidden=(32, 32),
+    batch=8,
+    eval_batch=8,
+    k_steps=2,
+    use_pallas=False,
+)
+
+
+def _run_hlo_text(hlo_text, args):
+    """HLO text -> proto (id reassign) -> XlaComputation -> MLIR -> run.
+
+    Exercises the same text-parse step the Rust loader performs."""
+    from jaxlib._jax import DeviceList
+
+    dev = jax.devices("cpu")[0]
+    client = dev.client
+    comp = xc.XlaComputation(
+        xc._xla.hlo_module_from_text(hlo_text).as_serialized_hlo_module_proto()
+    )
+    mlir = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    exe = client.compile_and_load(
+        mlir.encode() if isinstance(mlir, str) else mlir, DeviceList((dev,))
+    )
+    bufs = [client.buffer_from_pyval(np.ascontiguousarray(a)) for a in args]
+    out = exe.execute(bufs)
+    return [np.asarray(o) for o in out]
+
+
+def test_smoke_artifact_roundtrip():
+    hlo, inputs, outputs = aot.build_smoke_artifact()
+    x = np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)
+    y = np.asarray([10.0, 20.0, 30.0, 40.0], np.float32)
+    out = _run_hlo_text(hlo, [x, y])
+    np.testing.assert_allclose(out[0], 2 * x + y)
+
+
+def test_eval_artifact_matches_direct_eval():
+    hlo, inputs, outputs = aot.build_eval_artifact(TINY)
+    params = M.init_params(TINY, 7)
+    tn, sn = M.trainable_names(TINY), M.state_names(TINY)
+    x = np.random.RandomState(0).randn(TINY.eval_batch, 784).astype(np.float32)
+    args = [np.asarray(params[n]) for n in tn] + [np.asarray(params[n]) for n in sn] + [x]
+    out = _run_hlo_text(hlo, args)
+    direct = M.eval_step(
+        TINY, {n: params[n] for n in tn}, {n: params[n] for n in sn}, jnp.asarray(x)
+    )
+    np.testing.assert_allclose(out[0], np.asarray(direct), rtol=1e-5, atol=1e-5)
+
+
+def test_train_artifact_matches_direct_chunk():
+    hlo, inputs, outputs = aot.build_train_artifact(TINY)
+    params = M.init_params(TINY, 3)
+    tn, sn = M.trainable_names(TINY), M.state_names(TINY)
+    p = {n: params[n] for n in tn}
+    s = {n: params[n] for n in sn}
+    m = {n: jnp.zeros_like(params[n]) for n in tn}
+    u = {n: jnp.zeros_like(params[n]) for n in tn}
+    rng = np.random.RandomState(1)
+    xs = rng.randn(TINY.k_steps, TINY.batch, 784).astype(np.float32)
+    ys = rng.randint(0, 10, (TINY.k_steps, TINY.batch)).astype(np.int32)
+    key_data = np.asarray([0, 42], np.uint32)
+
+    args = (
+        [np.asarray(p[n]) for n in tn]
+        + [np.asarray(s[n]) for n in sn]
+        + [np.asarray(m[n]) for n in tn]
+        + [np.asarray(u[n]) for n in tn]
+        + [np.float32(0.0), np.float32(2**-5), key_data, xs, ys]
+    )
+    out = _run_hlo_text(hlo, args)
+
+    key = jax.random.wrap_key_data(jnp.asarray(key_data), impl="threefry2x32")
+    pc, sc, mc, uc, tc, losses, errs = M.train_chunk(
+        TINY, p, s, m, u, jnp.float32(0.0), jnp.float32(2**-5), key, jnp.asarray(xs), jnp.asarray(ys)
+    )
+    # outputs order: params, state, m, u, t, losses, errs
+    names = tn + sn
+    flat_expect = [pc[n] for n in tn] + [sc[n] for n in sn] + [mc[n] for n in tn]
+    flat_expect += [uc[n] for n in tn] + [tc, losses, errs]
+    assert len(out) == len(flat_expect)
+    for got, exp in zip(out, flat_expect):
+        np.testing.assert_allclose(got, np.asarray(exp), rtol=1e-4, atol=1e-5)
+    # losses finite and err counts within batch bounds
+    np.testing.assert_array_equal(np.isfinite(out[-2]), True)
+    assert (out[-1] >= 0).all() and (out[-1] <= TINY.batch).all()
+
+
+def test_manifest_written_by_main(tmp_path):
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out-dir", str(tmp_path), "--configs", "", "--skip-train"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["format"] == 1
+    assert "smoke" in man["artifacts"]
+    entry = man["artifacts"]["smoke"]
+    assert (tmp_path / entry["file"]).exists()
+    assert [i["name"] for i in entry["inputs"]] == ["x", "y"]
+
+
+def test_input_ordering_contract():
+    """Manifest input order must be: trainable (sorted), state (sorted),
+    m_*, u_*, t, lr, key, xs, ys — the Rust side depends on it."""
+    _, inputs, outputs = aot.build_train_artifact(TINY)
+    tn, sn = M.trainable_names(TINY), M.state_names(TINY)
+    names = [i["name"] for i in inputs]
+    expect = tn + sn + [f"m_{n}" for n in tn] + [f"u_{n}" for n in tn] + ["t", "lr", "key", "xs", "ys"]
+    assert names == expect
+    assert tn == sorted(tn)
+    roles = {i["name"]: i.get("role") for i in inputs}
+    assert roles["xs"] == "data_x" and roles["ys"] == "data_y" and roles["key"] == "rng"

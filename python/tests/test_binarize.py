@@ -1,0 +1,81 @@
+"""Pallas binarize kernels vs ref oracles (paper Eqs. 1-5) — hypothesis sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import binarize as kbin
+from compile.kernels import ref
+
+shapes_2d = st.tuples(st.integers(1, 300), st.integers(1, 300))
+
+
+def _rand(shape, seed, scale=2.0):
+    rng = np.random.RandomState(seed)
+    return (scale * rng.randn(*shape)).astype(np.float32)
+
+
+@given(shape=shapes_2d, seed=st.integers(0, 2**31 - 1))
+def test_binarize_det_matches_ref(shape, seed):
+    x = _rand(shape, seed)
+    out = kbin.binarize_det(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.binarize_det(jnp.asarray(x))))
+
+
+@given(shape=shapes_2d, seed=st.integers(0, 2**31 - 1))
+def test_binarize_stoch_matches_ref(shape, seed):
+    x = _rand(shape, seed)
+    u = np.random.RandomState(seed ^ 0x5EED).rand(*shape).astype(np.float32)
+    out = kbin.binarize_stoch(jnp.asarray(x), jnp.asarray(u))
+    exp = ref.binarize_stoch(jnp.asarray(x), jnp.asarray(u))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_binarize_det_outputs_pm1_only():
+    x = _rand((64, 64), 0)
+    out = np.asarray(kbin.binarize_det(jnp.asarray(x)))
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+
+
+def test_binarize_sign_zero_is_plus_one():
+    x = jnp.zeros((4, 4), jnp.float32)
+    out = np.asarray(kbin.binarize_det(x))
+    assert (out == 1.0).all()
+
+
+def test_binarize_stoch_probability_matches_hard_sigmoid():
+    """E[h_b(x)] = 2*sigma(x) - 1 = HT(x) (the expectation argument of
+    paper sec. 3.2) — checked empirically at a few x values."""
+    rng = np.random.RandomState(7)
+    for xval in [-2.0, -0.5, 0.0, 0.5, 2.0]:
+        x = jnp.full((200, 200), xval, jnp.float32)
+        u = jnp.asarray(rng.rand(200, 200).astype(np.float32))
+        out = np.asarray(kbin.binarize_stoch(x, u))
+        expect_mean = float(ref.hard_tanh(jnp.float32(xval)))
+        assert abs(out.mean() - expect_mean) < 0.02, (xval, out.mean())
+
+
+def test_binarize_stoch_saturated_is_deterministic():
+    x = jnp.full((16, 16), 1.5, jnp.float32)
+    u = jnp.asarray(np.random.rand(16, 16).astype(np.float32))
+    assert (np.asarray(kbin.binarize_stoch(x, u)) == 1.0).all()
+    assert (np.asarray(kbin.binarize_stoch(-x, u)) == -1.0).all()
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (1, 500), (500, 1), (127, 129), (128, 128)])
+def test_binarize_det_edge_shapes(shape):
+    x = _rand(shape, 3)
+    out = kbin.binarize_det(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.binarize_det(jnp.asarray(x))))
+
+
+def test_binarize_nd_wrappers():
+    x = _rand((3, 8, 8, 5), 11)
+    out = kbin.binarize_det_nd(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.binarize_det(jnp.asarray(x))))
+    u = np.random.RandomState(0).rand(3, 8, 8, 5).astype(np.float32)
+    out = kbin.binarize_stoch_nd(jnp.asarray(x), jnp.asarray(u))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.binarize_stoch(jnp.asarray(x), jnp.asarray(u)))
+    )

@@ -1,0 +1,65 @@
+"""Binary conv (im2col + Pallas GEMM) vs lax.conv oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import binary_conv as kconv
+from compile.kernels import ref
+
+
+def _xw(n, h, w, cin, cout, k, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, h, w, cin).astype(np.float32)
+    wt = rng.randn(k, k, cin, cout).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(wt)
+
+
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(4, 20),
+    w=st.integers(4, 20),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_conv_matches_lax(n, h, w, cin, cout, stride, seed):
+    x, wt = _xw(n, h, w, cin, cout, 3, seed)
+    out = kconv.binary_conv2d(x, wt, stride=stride)
+    exp = ref.binary_conv2d(x, wt, stride=stride)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_binary_conv_kernel_sizes(padding, k):
+    x, wt = _xw(2, 12, 12, 3, 4, k, 7)
+    out = kconv.binary_conv2d(x, wt, padding=padding)
+    exp = ref.binary_conv2d(x, wt, padding=padding)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+def test_im2col_ordering_contract():
+    """Pin the (kh, kw, cin) row-major patch layout shared with the rust
+    bitnet engine: reconstruct one interior patch by hand."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(1, 8, 8, 2).astype(np.float32)
+    cols, (n, ho, wo) = kconv._im2col(jnp.asarray(x), 3, 3, 1, "SAME")
+    cols = np.asarray(cols).reshape(ho, wo, 3 * 3 * 2)
+    # patch centered at (3, 4): rows 2..4, cols 3..5
+    expect = x[0, 2:5, 3:6, :].reshape(-1)  # (kh, kw, cin) row-major
+    np.testing.assert_allclose(cols[3, 4], expect)
+
+
+def test_binary_conv_output_integer_valued():
+    x, wt = _xw(1, 8, 8, 4, 4, 3, 3)
+    out = np.asarray(kconv.binary_conv2d(x, wt))
+    np.testing.assert_allclose(out, np.round(out), atol=1e-4)
+
+
+def test_max_pool_2x2():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 4, 4, 1))
+    out = np.asarray(ref.max_pool_2x2(x))
+    np.testing.assert_array_equal(out[0, :, :, 0], [[5, 7], [13, 15]])

@@ -1,0 +1,70 @@
+"""Pallas binary GEMM vs oracle + the XNOR-popcount identity (paper sec. 4)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import binary_matmul as bmm
+from compile.kernels import ref
+
+dims = st.integers(1, 200)
+
+
+def _rand(shape, seed):
+    return (2.0 * np.random.RandomState(seed).randn(*shape)).astype(np.float32)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_binary_matmul_matches_ref(m, k, n, seed):
+    a = _rand((m, k), seed)
+    b = _rand((k, n), seed ^ 0xB)
+    out = bmm.binary_matmul(jnp.asarray(a), jnp.asarray(b))
+    exp = ref.binary_matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_prebin_matches_dot(m, k, n, seed):
+    a = _rand((m, k), seed)
+    b = _rand((k, n), seed ^ 0xC)
+    out = bmm.matmul_prebin(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4, atol=1e-3)
+
+
+def test_binary_matmul_output_range():
+    """Entries of sign(A) @ sign(B) lie in [-K, K] with parity K mod 2."""
+    a = _rand((32, 57), 0)
+    b = _rand((57, 16), 1)
+    out = np.asarray(bmm.binary_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert out.max() <= 57 and out.min() >= -57
+    assert (np.mod(out - 57, 2) == 0).all()  # dot of +-1 has K's parity
+
+
+def test_xnor_popcount_identity():
+    """dot(a,b) == 2*popcount(XNOR(bits_a, bits_b)) - K: the contract between
+    the +-1 Pallas kernel and the rust bit-packed engine."""
+    rng = np.random.RandomState(3)
+    a_bits = (rng.rand(20, 130) > 0.5).astype(np.int32)
+    b_bits = (rng.rand(130, 10) > 0.5).astype(np.int32)
+    via_pop, via_dot = ref.xnor_popcount_matmul(jnp.asarray(a_bits), jnp.asarray(b_bits), 130)
+    np.testing.assert_allclose(np.asarray(via_pop), np.asarray(via_dot), atol=1e-4)
+
+
+@pytest.mark.parametrize("block", [(32, 32, 32), (128, 128, 256), (64, 128, 64)])
+def test_binary_matmul_block_shape_invariance(block):
+    """Result must not depend on the tile schedule."""
+    a = _rand((100, 190), 5)
+    b = _rand((190, 70), 6)
+    bm, bn, bk = block
+    out = bmm.binary_matmul(jnp.asarray(a), jnp.asarray(b), block_m=bm, block_n=bn, block_k=bk)
+    exp = ref.binary_matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+def test_matmul_bin_w_zero_rows_pass_through():
+    """Zero activations (padded borders) contribute 0, not sign(0)=+1."""
+    a = np.zeros((4, 8), np.float32)
+    b = _rand((8, 3), 9)
+    out = np.asarray(bmm.matmul_bin_w(jnp.asarray(a), jnp.asarray(b)))
+    assert (out == 0).all()

@@ -1,0 +1,122 @@
+"""Hypothesis sweeps over model-level invariants (BBP, Alg. 1)."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+BASE = dataclasses.replace(
+    M.CONFIGS["mnist_mlp_small"], hidden=(32, 32), batch=8, eval_batch=8, use_pallas=False
+)
+
+
+def _init(cfg, seed=0):
+    params = M.init_params(cfg, seed)
+    p = {k: params[k] for k in M.trainable_names(cfg)}
+    s = {k: params[k] for k in M.state_names(cfg)}
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    u = {k: jnp.zeros_like(v) for k, v in p.items()}
+    return p, s, m, u
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), lr_exp=st.integers(2, 10))
+def test_weights_clipped_after_any_step(seed, lr_exp):
+    """Alg. 1: W <- clip(W - dW) for any LR and any data."""
+    cfg = BASE
+    p, s, m, u = _init(cfg, seed % 100)
+    rng = np.random.RandomState(seed % 9999)
+    x = jnp.asarray(rng.randn(cfg.batch, 784).astype(np.float32) * 3)
+    y = jnp.asarray(rng.randint(0, 10, cfg.batch).astype(np.int32))
+    p2, *_ = M.train_step(
+        cfg, p, s, m, u, jnp.float32(0.0), jnp.float32(2.0**-lr_exp), jax.random.PRNGKey(seed), x, y
+    )
+    for name in M.weight_names(cfg):
+        w = np.asarray(p2[name])
+        assert w.min() >= -1.0 and w.max() <= 1.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_eval_is_permutation_invariant_consistent(seed):
+    """Permuting input pixels AND first-layer rows identically leaves the
+    MLP's output unchanged (the 'permutation-invariant MNIST' setting)."""
+    cfg = BASE
+    p, s, _, _ = _init(cfg, 1)
+    rng = np.random.RandomState(seed % 9999)
+    x = jnp.asarray(rng.randn(cfg.batch, 784).astype(np.float32))
+    perm = rng.permutation(784)
+    logits = M.eval_step(cfg, p, s, x)
+    p_perm = dict(p)
+    p_perm["L00_W"] = p["L00_W"][perm, :]
+    logits_perm = M.eval_step(cfg, p_perm, s, x[:, perm])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_perm), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.5, 8.0))
+def test_logits_finite_for_wild_inputs(seed, scale):
+    cfg = BASE
+    p, s, _, _ = _init(cfg, 2)
+    rng = np.random.RandomState(seed % 9999)
+    x = jnp.asarray((scale * rng.randn(cfg.batch, 784)).astype(np.float32))
+    logits, _ = M.forward(cfg, {**p, **s}, x, train=True, key=jax.random.PRNGKey(seed))
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_state_only_contains_running_stats(seed):
+    cfg = BASE
+    p, s, m, u = _init(cfg, seed % 50)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(cfg.batch, 784).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, cfg.batch).astype(np.int32))
+    _, s2, *_ = M.train_step(
+        cfg, p, s, m, u, jnp.float32(0.0), jnp.float32(0.01), jax.random.PRNGKey(seed), x, y
+    )
+    assert set(s2) == set(M.state_names(cfg))
+    for k, v in s2.items():
+        assert np.isfinite(np.asarray(v)).all(), k
+
+
+def test_running_stats_converge_to_batch_stats():
+    """Repeated training on one batch drives rmean toward that batch's mean."""
+    cfg = BASE
+    p, s, m, u = _init(cfg, 3)
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(cfg.batch, 784).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, 10, cfg.batch).astype(np.int32))
+    step = jax.jit(
+        lambda p, s, m, u, t, k: M.train_step(cfg, p, s, m, u, t, jnp.float32(0.0), k, x, y)
+    )
+    # lr=0: params frozen, only running stats update
+    prev = None
+    for i in range(60):
+        p, s2, m, u, _, _ = step(p, s, m, u, jnp.float32(i), jax.random.PRNGKey(0))
+        s = {**s, **s2}
+    # with frozen params the batch mean is deterministic: rmean converges
+    rm = np.asarray(s["L00_rmean"])
+    p2, s3, *_ = M.train_step(
+        cfg, p, s, m, u, jnp.float32(99.0), jnp.float32(0.0), jax.random.PRNGKey(0), x, y
+    )
+    rm2 = np.asarray(s3["L00_rmean"])
+    assert np.abs(rm2 - rm).max() < np.abs(rm).max() * 0.05 + 1e-3
+    del prev, p2
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_binaryconnect_mode_keeps_float_activations(seed):
+    cfg = dataclasses.replace(BASE, mode="binaryconnect")
+    p, s, _, _ = _init(cfg, 4)
+    rng = np.random.RandomState(seed % 999)
+    x = jnp.asarray(rng.randn(cfg.batch, 784).astype(np.float32))
+    logits, _ = M.forward(cfg, {**p, **s}, x, train=True, key=jax.random.PRNGKey(0))
+    # hard-tanh activations are continuous: logits generically non-integer
+    l = np.asarray(logits)
+    assert np.abs(l - np.round(l)).max() > 1e-4

@@ -1,0 +1,135 @@
+"""Pallas op layer == jnp op layer — the guarantee behind the `_fast` configs.
+
+The long Table-3/Fig-1 trainings run artifacts built with use_pallas=False.
+These tests prove the two backends produce identical forward values AND
+identical gradients, so results from either artifact set are interchangeable.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.ops import make_ops
+
+OPS_P = make_ops(True)
+OPS_J = make_ops(False)
+
+
+def _r(shape, seed, scale=1.5):
+    return jnp.asarray((scale * np.random.RandomState(seed).randn(*shape)).astype(np.float32))
+
+
+@given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_matmul_forward_equal(m, k, n, seed):
+    a, b = _r((m, k), seed), _r((k, n), seed ^ 1)
+    np.testing.assert_allclose(
+        np.asarray(OPS_P.matmul(a, b)), np.asarray(OPS_J.matmul(a, b)), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_matmul_grads_equal():
+    a, b = _r((32, 48), 0), _r((48, 16), 1)
+
+    def loss(ops, a, b):
+        return jnp.sum(ops.matmul(a, b) ** 2)
+
+    ga_p, gb_p = jax.grad(lambda a, b: loss(OPS_P, a, b), argnums=(0, 1))(a, b)
+    ga_j, gb_j = jax.grad(lambda a, b: loss(OPS_J, a, b), argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga_p), np.asarray(ga_j), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gb_p), np.asarray(gb_j), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_grad_matches_jnp_dot_autodiff():
+    """Our hand-written GEMM VJP == jax autodiff of jnp.dot."""
+    a, b = _r((16, 32), 2), _r((32, 8), 3)
+
+    def loss_ours(a, b):
+        return jnp.sum(jnp.tanh(OPS_J.matmul(a, b)))
+
+    def loss_ad(a, b):
+        return jnp.sum(jnp.tanh(jnp.dot(a, b)))
+
+    for i in (0, 1):
+        g1 = jax.grad(loss_ours, argnums=i)(a, b)
+        g2 = jax.grad(loss_ad, argnums=i)(a, b)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)
+
+
+def test_conv_forward_equal():
+    x, w = _r((2, 10, 10, 3), 4), _r((3, 3, 3, 8), 5)
+    np.testing.assert_allclose(
+        np.asarray(OPS_P.conv2d_s1(x, w)), np.asarray(OPS_J.conv2d_s1(x, w)), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_conv_grads_equal_and_match_lax_autodiff():
+    x, w = _r((2, 8, 8, 2), 6), _r((3, 3, 2, 4), 7)
+
+    def loss_ours(x, w):
+        return jnp.sum(OPS_J.conv2d_s1(x, w) ** 2)
+
+    def loss_lax(x, w):
+        out = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.sum(out**2)
+
+    for i in (0, 1):
+        g1 = jax.grad(loss_ours, argnums=i)(x, w)
+        g2 = jax.grad(loss_lax, argnums=i)(x, w)
+        g3 = jax.grad(lambda x, w: jnp.sum(OPS_P.conv2d_s1(x, w) ** 2), argnums=i)(x, w)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(g3), np.asarray(g2), rtol=1e-3, atol=1e-3)
+
+
+def test_shift_bn_forward_equal():
+    x = _r((64, 40), 8, scale=3.0)
+    g = jnp.abs(_r((40,), 9)) + 0.5
+    b = _r((40,), 10)
+    np.testing.assert_allclose(
+        np.asarray(OPS_P.shift_bn(x, g, b)), np.asarray(OPS_J.shift_bn(x, g, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_shift_bn_grads_equal():
+    x = _r((32, 16), 11, scale=2.0)
+    g = jnp.abs(_r((16,), 12)) + 0.5
+    b = _r((16,), 13)
+
+    def loss(ops, x, g, b):
+        return jnp.sum(ops.shift_bn(x, g, b) ** 2)
+
+    for i in (0, 1, 2):
+        gp = jax.grad(lambda x, g, b: loss(OPS_P, x, g, b), argnums=i)(x, g, b)
+        gj = jax.grad(lambda x, g, b: loss(OPS_J, x, g, b), argnums=i)(x, g, b)
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gj), rtol=1e-4, atol=1e-3)
+
+
+def test_shift_bn_dx_is_centered():
+    """dx = s*gg*(g - mean(g)) => column means of dx are ~0 when upstream g
+    is arbitrary but the centering term is subtracted."""
+    x = _r((64, 8), 14, scale=2.0)
+    g = jnp.ones((8,), jnp.float32)
+    b = jnp.zeros((8,), jnp.float32)
+    dx = jax.grad(lambda x: jnp.sum(OPS_J.shift_bn(x, g, b) * _r((64, 8), 15)))(x)
+    np.testing.assert_allclose(np.asarray(dx).mean(axis=0), 0.0, atol=1e-5)
+
+
+def test_neuron_binarize_ste_gradient():
+    """Eq. 6: gradient passes iff |x| <= 1, for both backends."""
+    x = jnp.asarray([-2.0, -0.9, 0.0, 0.5, 1.0, 1.7], jnp.float32).reshape(1, 6)
+    for ops in (OPS_P, OPS_J):
+        g = jax.grad(lambda x: jnp.sum(ops.neuron_det(x)))(x)
+        np.testing.assert_array_equal(np.asarray(g)[0], [0, 1, 1, 1, 1, 0])
+        u = jnp.full(x.shape, 0.5, jnp.float32)
+        g = jax.grad(lambda x: jnp.sum(ops.neuron_stoch(x, u)))(x)
+        np.testing.assert_array_equal(np.asarray(g)[0], [0, 1, 1, 1, 1, 0])
+
+
+def test_weight_binarize_identity_ste():
+    """BinaryConnect rule: dL/dw == dL/dw_b verbatim."""
+    w = _r((8, 8), 16)
+    for ops in (OPS_P, OPS_J):
+        g = jax.grad(lambda w: jnp.sum(ops.weight_det(w) * 3.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 3.0)

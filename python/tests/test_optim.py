@@ -1,0 +1,75 @@
+"""S-AdaMax optimizer properties (paper sec. 3.4)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile import optim
+from compile.kernels import ref
+
+
+def test_betas_are_shift_friendly():
+    """b1 = 1 - 2^-3, b2 = 1 - 2^-10: multiplies become subtract-shifted-self."""
+    assert optim.BETA1 == 1.0 - 2.0**-3
+    assert optim.BETA2 == 1.0 - 2.0**-10
+
+
+def test_s_adamax_step_scale_is_power_of_two():
+    """The effective per-parameter multiplier AP2(lr_t)*AP2(1/u) must be an
+    exact power of two — i.e. realizable as a shift."""
+    g = jnp.asarray(np.random.RandomState(0).randn(64).astype(np.float32))
+    m = jnp.zeros(64)
+    u = jnp.zeros(64)
+    delta, m2, u2 = optim.s_adamax_update(g, m, u, jnp.float32(1.0), jnp.float32(2**-6))
+    # delta = -lr_t * m2 * ap2(1/u2); recover the multiplier
+    mult = np.asarray(-delta / np.asarray(m2))
+    mult = mult[np.isfinite(mult) & (mult > 0)]
+    exps = np.log2(mult)
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_s_adamax_close_to_adamax(seed):
+    """The shift approximation stays within a bounded factor of exact AdaMax
+    (each AP2 is within sqrt(2), so the product is within 2x)."""
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(128).astype(np.float32))
+    m = jnp.asarray(rng.randn(128).astype(np.float32) * 0.1)
+    u = jnp.asarray(np.abs(rng.randn(128)).astype(np.float32) + 0.1)
+    d_s, m_s, u_s = optim.s_adamax_update(g, m, u, jnp.float32(5.0), jnp.float32(2**-4))
+    d_e, m_e, u_e = optim.adamax_update(g, m, u, jnp.float32(5.0), jnp.float32(2**-4))
+    np.testing.assert_allclose(np.asarray(m_s), np.asarray(m_e))  # moments identical
+    np.testing.assert_allclose(np.asarray(u_s), np.asarray(u_e))
+    ratio = np.abs(np.asarray(d_s)) / (np.abs(np.asarray(d_e)) + 1e-12)
+    ok = ratio[np.abs(np.asarray(d_e)) > 1e-8]
+    assert (ok < 2.01).all() and (ok > 0.49).all()
+
+
+def test_u_is_infinity_norm_accumulator():
+    g1 = jnp.asarray([1.0, -4.0], jnp.float32)
+    m = jnp.zeros(2)
+    u = jnp.zeros(2)
+    _, m, u = optim.s_adamax_update(g1, m, u, jnp.float32(1.0), jnp.float32(0.01))
+    np.testing.assert_allclose(np.asarray(u), [1.0, 4.0])
+    g2 = jnp.asarray([0.5, -8.0], jnp.float32)
+    _, m, u = optim.s_adamax_update(g2, m, u, jnp.float32(2.0), jnp.float32(0.01))
+    # u decays by b2 but jumps to |g| when larger
+    np.testing.assert_allclose(np.asarray(u), [optim.BETA2 * 1.0, 8.0], rtol=1e-6)
+
+
+def test_sgd_keeps_state():
+    g = jnp.asarray([1.0, 2.0], jnp.float32)
+    m = jnp.asarray([3.0, 4.0], jnp.float32)
+    u = jnp.asarray([5.0, 6.0], jnp.float32)
+    d, m2, u2 = optim.sgd_update(g, m, u, jnp.float32(1.0), jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(d), [-0.5, -1.0])
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m))
+    np.testing.assert_allclose(np.asarray(u2), np.asarray(u))
+
+
+def test_square_hinge_loss_values():
+    logits = jnp.asarray([[2.0, -2.0], [0.0, 0.0]], jnp.float32)
+    y = jnp.asarray([[1.0, -1.0], [1.0, -1.0]], jnp.float32)
+    # row 0: margins max(0, 1-2)=0 twice -> 0; row 1: 1^2 + 1^2 = 2
+    loss = ref.square_hinge_loss(logits, y)
+    np.testing.assert_allclose(float(loss), 1.0)

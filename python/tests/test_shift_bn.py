@@ -1,0 +1,90 @@
+"""Shift-based BN kernel vs oracle + AP2 properties (paper Eqs. 7-10)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import shift_bn as ksbn
+
+
+def _xgb(b, f, seed, scale=3.0, mean=0.5):
+    rng = np.random.RandomState(seed)
+    x = (scale * rng.randn(b, f) + mean).astype(np.float32)
+    g = (rng.rand(f) + 0.5).astype(np.float32)
+    beta = rng.randn(f).astype(np.float32)
+    return x, g, beta
+
+
+@given(b=st.integers(2, 128), f=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_shift_bn_matches_ref(b, f, seed):
+    x, g, beta = _xgb(b, f, seed)
+    out = ksbn.shift_batch_norm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta))
+    exp = ref.shift_batch_norm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ap2_is_power_of_two(seed):
+    rng = np.random.RandomState(seed)
+    z = (10.0 * rng.randn(256)).astype(np.float32)
+    z = z[z != 0]
+    a = np.asarray(ref.ap2(jnp.asarray(z)))
+    # |AP2(z)| must be an exact power of two
+    exps = np.log2(np.abs(a))
+    np.testing.assert_allclose(exps, np.round(exps), atol=0)
+    # sign preserved
+    np.testing.assert_array_equal(np.sign(a), np.sign(z))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ap2_within_sqrt2_factor(seed):
+    """AP2(z) = 2^round(log2|z|) is within a factor sqrt(2) of z."""
+    rng = np.random.RandomState(seed)
+    z = np.abs(10.0 * rng.randn(256)).astype(np.float32) + 1e-3
+    a = np.abs(np.asarray(ref.ap2(jnp.asarray(z))))
+    ratio = a / z
+    assert (ratio <= np.sqrt(2.0) + 1e-4).all() and (ratio >= 1 / np.sqrt(2.0) - 1e-4).all()
+
+
+def test_ap2_zero_is_zero():
+    assert float(ref.ap2(jnp.float32(0.0))) == 0.0
+
+
+def test_shift_bn_approximates_exact_bn():
+    """The AP2 proxies stay within a bounded factor of exact BN, and the two
+    are strongly correlated (the property the paper relies on, sec. 3.3)."""
+    x, g, beta = _xgb(128, 64, 0)
+    sb = np.asarray(ref.shift_batch_norm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta)))
+    eb = np.asarray(ref.batch_norm_exact(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta)))
+    corr = np.corrcoef(sb.ravel(), eb.ravel())[0, 1]
+    assert corr > 0.9, corr
+    # centered scale within a factor of 2 of exact BN (AP2 twice -> 2x bound)
+    ratio = np.std(sb, axis=0) / np.std(eb, axis=0)
+    assert (ratio < 2.01).all() and (ratio > 0.49).all()
+
+
+def test_shift_bn_normalizes_mean():
+    """BN_AP2 output has exactly beta as its batch mean (centering is exact:
+    only the scale is approximated)."""
+    x, g, beta = _xgb(256, 32, 1)
+    out = np.asarray(ref.shift_batch_norm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta)))
+    np.testing.assert_allclose(out.mean(axis=0), beta, atol=1e-3)
+
+
+@pytest.mark.parametrize("f", [1, 127, 128, 129])
+def test_shift_bn_feature_tile_edges(f):
+    x, g, beta = _xgb(32, f, 2)
+    out = ksbn.shift_batch_norm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta))
+    exp = ref.shift_batch_norm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(beta))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-4, atol=1e-4)
+
+
+def test_shift_bn_constant_feature_no_nan():
+    """A zero-variance feature must not produce NaN (eps guard)."""
+    x = np.ones((16, 4), np.float32)
+    out = np.asarray(
+        ksbn.shift_batch_norm(jnp.asarray(x), jnp.ones(4, jnp.float32), jnp.zeros(4, jnp.float32))
+    )
+    assert np.isfinite(out).all()

@@ -1,0 +1,46 @@
+//! Bench: binary convolution — naive float, packed XNOR, and the sec. 4.2
+//! kernel-repetition (dedup) execution plan.
+
+use bdnn::benchkit::Bench;
+use bdnn::bitnet::{conv, dedup};
+use bdnn::tensor::{conv2d_nhwc, Tensor};
+use bdnn::util::Pcg32;
+use std::hint::black_box;
+
+fn rand_t(r: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| r.normal()).collect())
+}
+
+fn main() {
+    println!("== binary conv2d: float vs packed-XNOR vs dedup plan ==\n");
+    let mut bench = Bench::new(1.0);
+    // (n, hw, cin, cout): stage shapes of the scaled CIFAR net
+    for (n, hw, cin, cout) in [(8usize, 32usize, 32usize, 32usize), (8, 16, 64, 64), (8, 8, 128, 128)] {
+        let mut r = Pcg32::seeded(3);
+        let x = rand_t(&mut r, &[n, hw, hw, cin]);
+        let w = rand_t(&mut r, &[3, 3, cin, cout]);
+        let label = format!("{n}x{hw}x{hw}x{cin} -> {cout}");
+        let macs = (n * hw * hw * 9 * cin * cout) as f64;
+
+        let xb = x.sign_pm1();
+        let wb = w.sign_pm1();
+        bench.run(&format!("f32 conv   {label}"), Some(macs), || {
+            black_box(conv2d_nhwc(black_box(&xb), black_box(&wb), 1, true));
+        });
+        bench.run(&format!("xnor conv  {label}"), Some(macs), || {
+            black_box(conv::binary_conv2d(black_box(&x), black_box(&w), 1, true));
+        });
+        let plan = dedup::build_plan(&wb);
+        println!(
+            "  dedup plan: {} -> {} correlations ({:.2}x fewer)",
+            plan.naive_correlations,
+            plan.correlations,
+            plan.naive_correlations as f64 / plan.correlations as f64
+        );
+        bench.run(&format!("dedup conv {label}"), Some(macs), || {
+            black_box(dedup::conv2d_dedup(black_box(&x), black_box(&plan)));
+        });
+        println!();
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench target for Tables 1-2/sec. 4.1: prints the analytical energy model
+//! (it is a static model — "benchmarked" for a uniform `cargo bench` UX)
+//! and times the census itself to show it is negligible.
+
+use bdnn::benchkit::Bench;
+use bdnn::energy::census::{census_for_arch, paper_cifar_arch, paper_mnist_arch};
+use bdnn::energy::energy_report;
+use bdnn::exp;
+use std::hint::black_box;
+
+fn main() {
+    println!("{}", exp::table1("artifacts").unwrap());
+    println!("{}", exp::table2("artifacts").unwrap());
+    println!("{}", exp::energy("artifacts").unwrap());
+
+    let mut bench = Bench::new(0.5);
+    for arch in [paper_mnist_arch(), paper_cifar_arch()] {
+        bench.run(&format!("census+pricing {}", arch.name), None, || {
+            let c = census_for_arch(black_box(&arch));
+            black_box(energy_report(&arch, &c));
+        });
+    }
+}

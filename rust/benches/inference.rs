@@ -1,0 +1,55 @@
+//! Bench: deployed inference — packed XNOR engine vs float reference vs the
+//! XLA eval artifact, across batch sizes (the serving-path numbers quoted
+//! in EXPERIMENTS.md).
+
+use bdnn::benchkit::Bench;
+use bdnn::bitnet::network::{forward_float, PackedNet};
+use bdnn::config::RunConfig;
+use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
+use bdnn::data::Dataset;
+use std::hint::black_box;
+use std::sync::Arc;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("no artifacts/ — run `make artifacts` first");
+        return;
+    }
+    // quick-train an MLP to get realistic weights
+    let run = RunConfig {
+        name: "bench-inference".into(),
+        artifact: "mnist_mlp_small".into(),
+        dataset: "mnist".into(),
+        epochs: 2,
+        train_size: 2000,
+        test_size: 200,
+        out_dir: std::env::temp_dir().join("bdnn_bench").to_string_lossy().into_owned(),
+        ..RunConfig::default()
+    };
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::null()).unwrap();
+    let (train_ds, test_ds) = load_datasets(&run).unwrap();
+    trainer.train(Arc::clone(&train_ds), &test_ds).unwrap();
+    let params = trainer.params();
+    let arch = trainer.arch().clone();
+    let net = PackedNet::prepare(&arch, &params).unwrap();
+
+    println!("== inference latency/throughput (trained 3x256 MLP) ==\n");
+    let mut bench = Bench::new(1.5);
+    for batch in [1usize, 16, 64, 256, 1024] {
+        let ds = Dataset::synthesize("mnist", batch, 11).unwrap();
+        let idx: Vec<usize> = (0..batch).collect();
+        let (x, _) = ds.gather(&idx);
+        bench.run(&format!("packed xnor  batch={batch}"), Some(batch as f64), || {
+            black_box(net.infer(black_box(&x)).unwrap());
+        });
+        bench.run(&format!("float ref    batch={batch}"), Some(batch as f64), || {
+            black_box(forward_float(&arch, &params, black_box(&x)).unwrap());
+        });
+    }
+    // XLA eval artifact at its fixed batch
+    let eval_batch = arch.eval_batch;
+    let ds = Dataset::synthesize("mnist", eval_batch, 12).unwrap();
+    bench.run(&format!("xla eval artifact batch={eval_batch}"), Some(eval_batch as f64), || {
+        black_box(trainer.evaluate(black_box(&ds)).unwrap());
+    });
+}

@@ -1,0 +1,64 @@
+//! Bench: end-to-end training-chunk latency through PJRT for each artifact
+//! variant — the L3 hot loop. Compares the Pallas-kernel artifact against
+//! the jnp `_fast` artifact (same math; see test_ops_equiv.py) and measures
+//! the host<->device overhead amortization from K-step chunking.
+//!
+//! Requires `make artifacts`.
+
+use bdnn::benchkit::Bench;
+use bdnn::config::RunConfig;
+use bdnn::coordinator::{MetricsWriter, Trainer};
+use bdnn::data::Dataset;
+use std::hint::black_box;
+
+fn bench_artifact(bench: &mut Bench, artifact: &str, dataset: &str) {
+    let run = RunConfig {
+        name: format!("bench-{artifact}"),
+        artifact: artifact.into(),
+        dataset: dataset.into(),
+        epochs: 1,
+        train_size: 1024,
+        test_size: 128,
+        out_dir: std::env::temp_dir().join("bdnn_bench").to_string_lossy().into_owned(),
+        ..RunConfig::default()
+    };
+    let mut trainer = match Trainer::new(run.clone(), MetricsWriter::null()) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("skipping {artifact}: {e}");
+            return;
+        }
+    };
+    let arch = trainer.arch().clone();
+    let n = arch.k_steps * arch.batch;
+    let ds = Dataset::synthesize(dataset, n, 5).unwrap();
+    let idx: Vec<usize> = (0..n).collect();
+    let (x, y) = ds.gather(&idx);
+    let xs = x.data().to_vec();
+    let samples = n as f64;
+    bench.run(
+        &format!("{artifact} chunk (k={} batch={})", arch.k_steps, arch.batch),
+        Some(samples),
+        || {
+            let (loss, _, _) =
+                trainer.run_chunk(0.0625, black_box(xs.clone()), black_box(y.clone())).unwrap();
+            black_box(loss);
+        },
+    );
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("no artifacts/ — run `make artifacts` first");
+        return;
+    }
+    println!("== train-chunk latency through PJRT (samples/s = throughput) ==\n");
+    let mut bench = Bench::new(3.0);
+    bench.max_iters = 30;
+    bench_artifact(&mut bench, "mnist_mlp_small", "mnist"); // Pallas kernels
+    bench_artifact(&mut bench, "mnist_mlp", "mnist"); // Pallas, paper-scale
+    bench_artifact(&mut bench, "mnist_mlp_fast", "mnist"); // jnp path
+    bench_artifact(&mut bench, "cifar_cnn", "cifar10"); // Pallas CNN
+    bench_artifact(&mut bench, "cifar_cnn_fast", "cifar10"); // jnp CNN
+    println!("\nPallas-vs-fast gap = interpret-mode overhead (structure-only on CPU;\nsee DESIGN.md sec. 6 Hardware adaptation).");
+}

@@ -1,0 +1,147 @@
+//! Fig. 1: convergence curves from the trainer's JSONL metrics.
+//!
+//! The trainer (`coordinator::metrics`) appends one JSON object per epoch;
+//! this module parses those records back, extracts (epoch, train_loss,
+//! train_err, test_err, lr) series, locates the LR-shift epochs and renders
+//! the Fig. 1 style curve (CSV + ASCII).
+
+use crate::config::json::{self, Json};
+use crate::error::{BdnnError, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_err: f64,
+    pub test_err: Option<f64>,
+    pub lr: f64,
+}
+
+/// Parse JSONL metric lines (ignores non-epoch records).
+pub fn parse_jsonl(text: &str) -> Result<Vec<EpochRecord>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = json::parse(line)
+            .map_err(|e| BdnnError::Data(format!("metrics line {}: {}", i + 1, e)))?;
+        if j.get("kind").and_then(Json::as_str) != Some("epoch") {
+            continue;
+        }
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        out.push(EpochRecord {
+            epoch: f("epoch").unwrap_or(0.0) as usize,
+            train_loss: f("train_loss").unwrap_or(f64::NAN),
+            train_err: f("train_err").unwrap_or(f64::NAN),
+            test_err: f("test_err"),
+            lr: f("lr").unwrap_or(0.0),
+        });
+    }
+    Ok(out)
+}
+
+/// Epochs at which the learning rate dropped (Fig. 1's step markers).
+pub fn lr_shift_epochs(records: &[EpochRecord]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for w in records.windows(2) {
+        if w[1].lr < w[0].lr {
+            out.push(w[1].epoch);
+        }
+    }
+    out
+}
+
+/// CSV of the convergence series.
+pub fn to_csv(records: &[EpochRecord]) -> String {
+    let mut s = String::from("epoch,train_loss,train_err,test_err,lr\n");
+    for r in records {
+        s.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.epoch,
+            r.train_loss,
+            r.train_err,
+            r.test_err.map(|e| e.to_string()).unwrap_or_default(),
+            r.lr
+        ));
+    }
+    s
+}
+
+/// ASCII line plot of one series (Fig. 1 terminal rendering).
+pub fn ascii_plot(series: &[(usize, f64)], rows: usize, cols: usize, title: &str) -> String {
+    if series.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let ymax = series.iter().map(|(_, y)| *y).fold(f64::MIN, f64::max);
+    let ymin = series.iter().map(|(_, y)| *y).fold(f64::MAX, f64::min);
+    let span = (ymax - ymin).max(1e-12);
+    let xmax = series.iter().map(|(x, _)| *x).max().unwrap_or(1).max(1);
+    let mut grid = vec![vec![' '; cols]; rows];
+    for &(x, y) in series {
+        let cx = (x * (cols - 1)) / xmax;
+        let cy = ((ymax - y) / span * (rows - 1) as f64).round() as usize;
+        grid[cy.min(rows - 1)][cx] = '*';
+    }
+    let mut out = format!("{title}  [min {ymin:.4}, max {ymax:.4}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(cols));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+{"kind":"epoch","epoch":0,"train_loss":2.0,"train_err":0.8,"test_err":0.7,"lr":0.0625}
+{"kind":"chunk","step":3,"loss":1.9}
+{"kind":"epoch","epoch":1,"train_loss":1.5,"train_err":0.6,"test_err":0.5,"lr":0.0625}
+{"kind":"epoch","epoch":2,"train_loss":1.2,"train_err":0.5,"lr":0.03125}
+"#;
+
+    #[test]
+    fn parses_epoch_records_only() {
+        let recs = parse_jsonl(SAMPLE).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].epoch, 0);
+        assert_eq!(recs[2].test_err, None);
+        assert!((recs[1].train_loss - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lr_shifts_detected() {
+        let recs = parse_jsonl(SAMPLE).unwrap();
+        assert_eq!(lr_shift_epochs(&recs), vec![2]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let recs = parse_jsonl(SAMPLE).unwrap();
+        let csv = to_csv(&recs);
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.lines().nth(3).unwrap().ends_with("0.03125"));
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let series: Vec<(usize, f64)> = (0..20).map(|i| (i, (20 - i) as f64)).collect();
+        let txt = ascii_plot(&series, 8, 40, "loss");
+        assert!(txt.starts_with("loss"));
+        assert_eq!(txt.lines().count(), 10);
+        assert!(txt.contains('*'));
+    }
+
+    #[test]
+    fn bad_json_is_reported_with_line() {
+        let err = parse_jsonl("{notjson").unwrap_err();
+        assert!(format!("{err}").contains("line 1"));
+    }
+}

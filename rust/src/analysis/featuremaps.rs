@@ -1,0 +1,77 @@
+//! Fig. 3: binary feature maps — memory/bandwidth accounting and rendering.
+//!
+//! CNNs carry far more activations than weights; binarizing the neurons
+//! shrinks the feature-map traffic 32x, which the paper highlights as the
+//! enabler for resource-constrained devices.
+
+use crate::tensor::Tensor;
+
+/// Feature-map memory accounting for one activation tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct FeatureMapStats {
+    pub values: usize,
+    pub f32_bytes: usize,
+    pub packed_bytes: usize,
+    /// fraction of +1 activations (balance check; ~0.5 for healthy nets)
+    pub positive_fraction: f64,
+}
+
+pub fn stats(features: &Tensor) -> FeatureMapStats {
+    let values = features.len();
+    let pos = features.data().iter().filter(|&&v| v >= 0.0).count();
+    FeatureMapStats {
+        values,
+        f32_bytes: values * 4,
+        packed_bytes: values.div_ceil(8),
+        positive_fraction: pos as f64 / values.max(1) as f64,
+    }
+}
+
+impl FeatureMapStats {
+    pub fn bandwidth_reduction(&self) -> f64 {
+        self.f32_bytes as f64 / self.packed_bytes as f64
+    }
+}
+
+/// Render one channel of an NHWC feature-map tensor as ASCII (Fig. 3 visual).
+pub fn render_channel_ascii(features: &Tensor, sample: usize, channel: usize) -> String {
+    let s = features.shape();
+    assert_eq!(s.len(), 4, "expect NHWC features");
+    let (h, w, c) = (s[1], s[2], s[3]);
+    let mut out = String::new();
+    for y in 0..h {
+        for x in 0..w {
+            let v = features.data()[((sample * h + y) * w + x) * c + channel];
+            out.push(if v >= 0.0 { '█' } else { '·' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_is_32x() {
+        let t = Tensor::full(&[2, 8, 8, 16], 1.0);
+        let s = stats(&t);
+        assert_eq!(s.values, 2 * 8 * 8 * 16);
+        assert!((s.bandwidth_reduction() - 32.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn positive_fraction() {
+        let t = Tensor::new(&[1, 1, 1, 4], vec![1.0, -1.0, 1.0, 1.0]);
+        assert!((stats(&t).positive_fraction - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_shape() {
+        let t = Tensor::full(&[1, 3, 5, 2], -1.0);
+        let txt = render_channel_ascii(&t, 0, 1);
+        assert_eq!(txt.lines().count(), 3);
+        assert!(txt.lines().all(|l| l.chars().count() == 5));
+    }
+}

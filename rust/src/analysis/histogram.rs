@@ -1,0 +1,115 @@
+//! Fig. 4: distribution of the stored full-precision weights.
+//!
+//! After BBP training the clipped reference weights pile up at the ±1
+//! edges — the paper reports ~90% saturated in conv layers and ~75% in FC
+//! layers, and argues those could be stored with a single bit.
+
+/// A fixed-width histogram over [-1, 1].
+#[derive(Clone, Debug)]
+pub struct WeightHistogram {
+    pub bins: Vec<u64>,
+    pub lo: f32,
+    pub hi: f32,
+    pub n: u64,
+    pub saturated: u64,
+}
+
+/// |w| >= this counts as saturated (at the clip edge).
+pub const SATURATION_EDGE: f32 = 0.99;
+
+impl WeightHistogram {
+    pub fn compute(weights: &[f32], bins: usize) -> Self {
+        let (lo, hi) = (-1.0f32, 1.0f32);
+        let mut h = vec![0u64; bins];
+        let mut saturated = 0u64;
+        for &w in weights {
+            let w = w.clamp(lo, hi);
+            if w.abs() >= SATURATION_EDGE {
+                saturated += 1;
+            }
+            let idx = (((w - lo) / (hi - lo)) * bins as f32) as usize;
+            h[idx.min(bins - 1)] += 1;
+        }
+        Self { bins: h, lo, hi, n: weights.len() as u64, saturated }
+    }
+
+    /// Fraction of weights at the ±1 edges (paper: 0.75-0.90 after training).
+    pub fn saturation_fraction(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.saturated as f64 / self.n as f64
+        }
+    }
+
+    /// Render an ASCII bar chart (one row per bin).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let nb = self.bins.len();
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let center = self.lo + (self.hi - self.lo) * (i as f32 + 0.5) / nb as f32;
+            let bar = (c as usize * width) / max as usize;
+            out.push_str(&format!("{center:>6.2} | {}{}\n", "#".repeat(bar), if c > 0 && bar == 0 { "." } else { "" }));
+        }
+        out
+    }
+
+    /// CSV rows: bin_center,count
+    pub fn csv(&self) -> String {
+        let nb = self.bins.len();
+        let mut out = String::from("bin_center,count\n");
+        for (i, &c) in self.bins.iter().enumerate() {
+            let center = self.lo + (self.hi - self.lo) * (i as f32 + 0.5) / nb as f32;
+            out.push_str(&format!("{center:.4},{c}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn saturated_weights_are_counted() {
+        let w = vec![-1.0, -0.995, 0.0, 0.5, 0.995, 1.0];
+        let h = WeightHistogram::compute(&w, 10);
+        assert_eq!(h.saturated, 4);
+        assert!((h.saturation_fraction() - 4.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bins_total_matches_n() {
+        let mut r = Pcg32::seeded(0);
+        let w: Vec<f32> = (0..1000).map(|_| r.uniform(-1.0, 1.0)).collect();
+        let h = WeightHistogram::compute(&w, 32);
+        assert_eq!(h.bins.iter().sum::<u64>(), 1000);
+        assert_eq!(h.n, 1000);
+    }
+
+    #[test]
+    fn uniform_weights_have_low_saturation() {
+        let mut r = Pcg32::seeded(1);
+        let w: Vec<f32> = (0..10_000).map(|_| r.uniform(-1.0, 1.0)).collect();
+        let h = WeightHistogram::compute(&w, 32);
+        assert!(h.saturation_fraction() < 0.05);
+    }
+
+    #[test]
+    fn values_outside_range_clamp_into_edge_bins() {
+        let h = WeightHistogram::compute(&[-5.0, 5.0], 4);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[3], 1);
+        assert_eq!(h.saturated, 2);
+    }
+
+    #[test]
+    fn ascii_and_csv_render() {
+        let h = WeightHistogram::compute(&[-1.0, 1.0, 0.0, 0.0], 4);
+        assert_eq!(h.ascii(10).lines().count(), 4);
+        assert!(h.csv().starts_with("bin_center,count\n"));
+        assert_eq!(h.csv().lines().count(), 5);
+    }
+}

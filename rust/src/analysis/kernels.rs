@@ -1,0 +1,112 @@
+//! Fig. 2 / sec. 4.2: binary-kernel repetition analysis of a trained model.
+
+use crate::bitnet::dedup;
+use crate::tensor::Tensor;
+
+/// Per-layer kernel-repetition summary.
+#[derive(Clone, Debug)]
+pub struct LayerKernelStats {
+    pub layer: String,
+    pub total: usize,
+    pub unique: usize,
+    pub unique_with_inverse: usize,
+    pub per_input_unique_fraction: f64,
+    /// XNOR-popcount correlations saved by the dedup plan (naive / planned)
+    pub op_reduction: f64,
+}
+
+/// Analyze one conv layer's binarized weights (HWIO).
+pub fn layer_stats(name: &str, w: &Tensor) -> LayerKernelStats {
+    let wb = w.sign_pm1();
+    let census = dedup::census(&wb);
+    let per_input = dedup::per_input_unique_fraction(&wb);
+    let plan = dedup::build_plan(&wb);
+    LayerKernelStats {
+        layer: name.to_string(),
+        total: census.total,
+        unique: census.unique,
+        unique_with_inverse: census.unique_with_inverse,
+        per_input_unique_fraction: per_input,
+        op_reduction: plan.naive_correlations as f64 / plan.correlations as f64,
+    }
+}
+
+/// Average unique-kernel fraction across layers (the paper's "37% unique
+/// kernels per layer on average" figure for its CIFAR-10 net).
+pub fn average_unique_fraction(stats: &[LayerKernelStats]) -> f64 {
+    if stats.is_empty() {
+        return 1.0;
+    }
+    stats.iter().map(|s| s.unique as f64 / s.total as f64).sum::<f64>() / stats.len() as f64
+}
+
+/// ASCII rendering of a sample of binary 3x3 kernels (Fig. 2 visual).
+pub fn render_kernels_ascii(w: &Tensor, count: usize) -> String {
+    let s = w.shape();
+    let (kh, kw, cin, cout) = (s[0], s[1], s[2], s[3]);
+    let wb = w.sign_pm1();
+    let mut out = String::new();
+    let n = count.min(cin * cout);
+    for idx in 0..n {
+        let (ci, co) = (idx % cin, (idx / cin) % cout);
+        out.push_str(&format!("kernel ci={ci} co={co}  id={:03x}\n", dedup::encode_kernel(&wb, ci, co)));
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let v = wb.data()[((ky * kw + kx) * cin + ci) * cout + co];
+                out.push_str(if v > 0.0 { "█" } else { "·" });
+            }
+            out.push('\n');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_w(seed: u64, cin: usize, cout: usize) -> Tensor {
+        let mut r = Pcg32::seeded(seed);
+        let n = 9 * cin * cout;
+        Tensor::new(&[3, 3, cin, cout], (0..n).map(|_| r.uniform(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let w = rand_w(0, 16, 32);
+        let s = layer_stats("conv0", &w);
+        assert_eq!(s.total, 512);
+        assert!(s.unique <= 512);
+        assert!(s.unique_with_inverse <= s.unique);
+        assert!(s.op_reduction >= 1.0);
+        assert!(s.per_input_unique_fraction <= 1.0);
+    }
+
+    #[test]
+    fn wide_layers_repeat_more() {
+        // unique fraction must drop as cout grows beyond 512 possibilities
+        let narrow = layer_stats("n", &rand_w(1, 4, 16));
+        let wide = layer_stats("w", &rand_w(2, 4, 512));
+        let fn_narrow = narrow.unique as f64 / narrow.total as f64;
+        let fn_wide = wide.unique as f64 / wide.total as f64;
+        assert!(fn_wide < fn_narrow);
+        assert!(wide.op_reduction > 1.5, "op reduction {}", wide.op_reduction);
+    }
+
+    #[test]
+    fn average_fraction() {
+        let s = vec![layer_stats("a", &rand_w(3, 8, 64)), layer_stats("b", &rand_w(4, 8, 64))];
+        let avg = average_unique_fraction(&s);
+        assert!(avg > 0.0 && avg <= 1.0);
+    }
+
+    #[test]
+    fn ascii_kernels_render() {
+        let w = rand_w(5, 2, 2);
+        let txt = render_kernels_ascii(&w, 4);
+        assert_eq!(txt.matches("kernel ci=").count(), 4);
+        assert!(txt.contains('█') || txt.contains('·'));
+    }
+}

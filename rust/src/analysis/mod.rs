@@ -1,0 +1,16 @@
+//! Analysis suite: regenerates the paper's figures from trained checkpoints
+//! and run metrics.
+//!
+//! * [`histogram`]   — Fig. 4: full-precision weight distributions and the
+//!   saturation fractions (75-90% of weights at the ±1 clip edges).
+//! * [`kernels`]     — Fig. 2 / sec. 4.2: binary-kernel census, unique
+//!   fraction, op-reduction estimate (wraps `bitnet::dedup`).
+//! * [`featuremaps`] — Fig. 3: binary feature-map statistics and the memory
+//!   bandwidth reduction from 1-bit activations.
+//! * [`convergence`] — Fig. 1: loss/error curves from the trainer's JSONL
+//!   metrics, with the LR-shift drop markers.
+
+pub mod convergence;
+pub mod featuremaps;
+pub mod histogram;
+pub mod kernels;

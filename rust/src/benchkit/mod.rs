@@ -1,0 +1,133 @@
+//! Micro-benchmark harness — the criterion substitute (offline sandbox).
+//!
+//! Warms up, runs timed iterations until a wall-clock budget or iteration
+//! cap is reached, reports mean/std/min plus derived throughput. Used by all
+//! `rust/benches/*` targets (each is a `harness = false` binary).
+
+use crate::util::{RunningStats, Timer};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    /// optional work units per iteration (ops, bytes, samples)
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Work units per second (if work_per_iter was set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean_s)
+    }
+
+    pub fn report_line(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.3} Gops/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.3} Mops/s", t / 1e6),
+            Some(t) => format!("  {t:8.1} ops/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.3} ms ±{:>6.3} (min {:.3}, n={}){}",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters,
+            tput
+        )
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub max_iters: u64,
+    pub budget_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 2, max_iters: 200, budget_s: 2.0, results: vec![] }
+    }
+}
+
+impl Bench {
+    pub fn new(budget_s: f64) -> Self {
+        Self { budget_s, ..Default::default() }
+    }
+
+    /// Run one case. `f` must do one full unit of work per call; use
+    /// `std::hint::black_box` on its inputs/outputs.
+    pub fn run<F: FnMut()>(&mut self, name: &str, work_per_iter: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut stats = RunningStats::new();
+        let budget = Timer::start();
+        let mut iters = 0u64;
+        while iters < self.max_iters && (iters < 3 || budget.secs() < self.budget_s) {
+            let t = Timer::start();
+            f();
+            stats.push(t.secs());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: stats.mean(),
+            std_s: stats.std(),
+            min_s: stats.min(),
+            work_per_iter,
+        };
+        println!("{}", r.report_line());
+        self.results.push(r.clone());
+        r
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio of two completed cases' mean times (a / b).
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        let find = |n: &str| self.results.iter().find(|r| r.name == n);
+        Some(find(slow)?.mean_s / find(fast)?.mean_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench { warmup_iters: 1, max_iters: 10, budget_s: 0.2, results: vec![] };
+        let r = b.run("spin", Some(1000.0), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut b = Bench { warmup_iters: 0, max_iters: 5, budget_s: 0.2, results: vec![] };
+        b.run("slow", None, || std::thread::sleep(std::time::Duration::from_micros(300)));
+        b.run("fast", None, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        let s = b.speedup("slow", "fast").unwrap();
+        assert!(s > 1.5, "speedup {s}");
+        assert!(b.speedup("slow", "missing").is_none());
+    }
+}

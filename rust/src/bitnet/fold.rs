@@ -1,0 +1,169 @@
+//! BN folding: sign(BN(z)) as an integer threshold on the popcount output.
+//!
+//! At inference the binarized neuron computes sign(BN(z)) where z is the
+//! integer-valued XNOR-popcount pre-activation. With BN's per-feature affine
+//! form  BN(z) = (z - mu) * s * g + beta  (s = inv-std or its AP2 proxy,
+//! g = gamma or AP2(gamma)),
+//!
+//! ```text
+//! sign(BN(z)) = +1  <=>  (z - mu) * s * g >= -beta
+//!              <=>  z >= tau   when s*g > 0,  z <= tau  when s*g < 0
+//! with tau = mu - beta / (s * g).
+//! ```
+//!
+//! So the whole BN + binarize pair collapses to one integer comparison per
+//! neuron — no multiplications at all on the deployed path (the paper's
+//! "dedicated hardware" story, sec. 3.3 + discussion). The threshold is
+//! computed once from the checkpoint's running statistics.
+
+use crate::util::ap2;
+
+/// Folded threshold for one feature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Threshold {
+    /// compare value (in pre-activation units)
+    pub tau: f32,
+    /// +1 if the activation is >= tau ⇒ +1; -1 if the comparison flips
+    /// (negative combined scale)
+    pub dir: f32,
+}
+
+impl Threshold {
+    /// Apply to a pre-activation: returns ±1.
+    #[inline]
+    pub fn fire(&self, z: f32) -> f32 {
+        if self.dir >= 0.0 {
+            if z >= self.tau {
+                1.0
+            } else {
+                -1.0
+            }
+        } else if z <= self.tau {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// Fold BN parameters into thresholds.
+///
+/// `shift_bn` selects the paper's AP2 proxies (Eqs. 9-10) so the folded
+/// thresholds match the shift-based training graph's eval semantics;
+/// otherwise exact BN statistics are used.
+pub fn fold_bn(
+    gamma: &[f32],
+    beta: &[f32],
+    running_mean: &[f32],
+    running_var: &[f32],
+    eps: f32,
+    shift_bn: bool,
+) -> Vec<Threshold> {
+    assert_eq!(gamma.len(), beta.len());
+    assert_eq!(gamma.len(), running_mean.len());
+    assert_eq!(gamma.len(), running_var.len());
+    (0..gamma.len())
+        .map(|i| {
+            let (s, g) = if shift_bn {
+                (ap2(1.0 / (running_var[i].abs() + eps).sqrt()), ap2(gamma[i]))
+            } else {
+                (1.0 / (running_var[i] + eps).sqrt(), gamma[i])
+            };
+            let sg = s * g;
+            if sg == 0.0 {
+                // degenerate: BN output is constant beta — fire on its sign
+                let v = if beta[i] >= 0.0 { f32::NEG_INFINITY } else { f32::INFINITY };
+                Threshold { tau: v, dir: 1.0 }
+            } else {
+                Threshold { tau: running_mean[i] - beta[i] / sg, dir: sg.signum() }
+            }
+        })
+        .collect()
+}
+
+/// Fold a plain bias (bn="none" layers): sign(z + b) ⇔ z >= -b.
+pub fn fold_bias(bias: &[f32]) -> Vec<Threshold> {
+    bias.iter().map(|&b| Threshold { tau: -b, dir: 1.0 }).collect()
+}
+
+/// Reference BN eval (mirrors `model.py::_bn_eval`) used by tests.
+pub fn bn_eval(
+    z: f32,
+    gamma: f32,
+    beta: f32,
+    rm: f32,
+    rv: f32,
+    eps: f32,
+    shift_bn: bool,
+) -> f32 {
+    if shift_bn {
+        (z - rm) * ap2(1.0 / (rv.abs() + eps).sqrt()) * ap2(gamma) + beta
+    } else {
+        (z - rm) / (rv + eps).sqrt() * gamma + beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn sign(x: f32) -> f32 {
+        if x >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[test]
+    fn folded_threshold_matches_bn_sign_exact() {
+        let mut r = Pcg32::seeded(0);
+        for shift in [false, true] {
+            for _ in 0..200 {
+                let gamma = r.normal();
+                let beta = r.normal();
+                let rm = 3.0 * r.normal();
+                let rv = r.uniform(0.01, 4.0);
+                let th = &fold_bn(&[gamma], &[beta], &[rm], &[rv], 1e-4, shift)[0];
+                for _ in 0..20 {
+                    let z = 10.0 * r.normal();
+                    let expect = sign(bn_eval(z, gamma, beta, rm, rv, 1e-4, shift));
+                    assert_eq!(
+                        th.fire(z),
+                        expect,
+                        "z={z} gamma={gamma} beta={beta} rm={rm} rv={rv} shift={shift}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_fold_matches() {
+        let th = fold_bias(&[0.5, -2.0]);
+        assert_eq!(th[0].fire(-0.4), 1.0); // -0.4 + 0.5 >= 0
+        assert_eq!(th[0].fire(-0.6), -1.0);
+        assert_eq!(th[1].fire(1.9), -1.0); // 1.9 - 2.0 < 0
+        assert_eq!(th[1].fire(2.0), 1.0);
+    }
+
+    #[test]
+    fn zero_gamma_is_constant_output() {
+        let th = &fold_bn(&[0.0], &[0.7], &[0.0], &[1.0], 1e-4, false)[0];
+        for z in [-100.0, 0.0, 100.0] {
+            assert_eq!(th.fire(z), 1.0); // beta >= 0 -> always +1
+        }
+        let th = &fold_bn(&[0.0], &[-0.7], &[0.0], &[1.0], 1e-4, false)[0];
+        for z in [-100.0, 0.0, 100.0] {
+            assert_eq!(th.fire(z), -1.0);
+        }
+    }
+
+    #[test]
+    fn negative_gamma_flips_direction() {
+        let th = &fold_bn(&[-1.0], &[0.0], &[0.0], &[1.0], 1e-4, false)[0];
+        assert_eq!(th.fire(1.0), -1.0);
+        assert_eq!(th.fire(-1.0), 1.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Packed XNOR-popcount GEMM — the binary MAC engine (paper sec. 4).
+//!
+//! `xnor_gemm(a, bt)` computes `sign(A) @ sign(B)` where `a` packs the rows
+//! of A along K and `bt` packs the *columns* of B along K (so both operands
+//! stream contiguously). One u64 word carries 64 binary MACs:
+//!
+//! ```text
+//! dot += 2 * popcnt(!(aw ^ bw) & mask) - valid_bits
+//! ```
+//!
+//! The hot loop is pure `xor` + `not` + `count_ones` (x86 `popcnt`); the
+//! energy argument of paper sec. 4.1 maps each 64-lane word op to 64 2-bit
+//! adds. The masked variant additionally honours per-row validity masks so
+//! zero-padded conv borders contribute 0 (matching the Pallas/XLA oracle).
+
+use super::BitMatrix;
+
+/// out[i, j] = dot(signA_row_i, signB_col_j); out is row-major (m, n), i32.
+pub fn xnor_gemm(a: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
+    assert_eq!(a.cols(), bt.cols(), "contraction mismatch: {} vs {}", a.cols(), bt.cols());
+    let k = a.cols() as i32;
+    let (m, n) = (a.rows(), bt.rows());
+    let wpr = a.words_per_row();
+    let tail = a.tail_mask();
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let ar = a.row(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let br = bt.row(j);
+            let mut agree: u32 = 0;
+            // all-but-last words are fully valid
+            for w in 0..wpr - 1 {
+                agree += (!(ar[w] ^ br[w])).count_ones();
+            }
+            agree += (!(ar[wpr - 1] ^ br[wpr - 1]) & tail).count_ones();
+            *o = 2 * agree as i32 - k;
+        }
+    }
+    out
+}
+
+/// XNOR GEMM with per-row validity masks: bits where `valid` is 0 are
+/// treated as exact zeros (conv zero-padding), contributing nothing.
+///
+/// out[i, j] = sum over valid k of a[i,k] * b[k,j]
+///           = 2 * popcnt(!(a^b) & valid) - popcnt(valid)
+pub fn xnor_gemm_masked(a: &BitMatrix, valid: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
+    assert_eq!(a.cols(), bt.cols());
+    assert_eq!(a.rows(), valid.rows());
+    assert_eq!(a.cols(), valid.cols());
+    let (m, n) = (a.rows(), bt.rows());
+    let wpr = a.words_per_row();
+    let tail = a.tail_mask();
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let ar = a.row(i);
+        let vr = valid.row(i);
+        let mut vcount: i32 = 0;
+        for w in 0..wpr - 1 {
+            vcount += vr[w].count_ones() as i32;
+        }
+        vcount += (vr[wpr - 1] & tail).count_ones() as i32;
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let br = bt.row(j);
+            let mut agree: u32 = 0;
+            for w in 0..wpr - 1 {
+                agree += (!(ar[w] ^ br[w]) & vr[w]).count_ones();
+            }
+            agree += (!(ar[wpr - 1] ^ br[wpr - 1]) & vr[wpr - 1] & tail).count_ones();
+            *o = 2 * agree as i32 - vcount;
+        }
+    }
+    out
+}
+
+/// Float entry point used by the inference engine: binarize, pack, multiply.
+/// a: (m, k) row-major, b: (k, n) row-major; returns (m, n) f32.
+pub fn binary_matmul_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let ap = BitMatrix::from_pm1(m, k, a);
+    let bp = BitMatrix::from_pm1_transposed(k, n, b);
+    xnor_gemm(&ap, &bp).into_iter().map(|x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, Tensor};
+    use crate::util::Pcg32;
+
+    fn rand_mat(r: &mut Pcg32, m: usize, n: usize) -> Vec<f32> {
+        (0..m * n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn matches_float_reference() {
+        let mut r = Pcg32::seeded(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 64, 2), (5, 65, 7), (16, 130, 9), (10, 200, 10)] {
+            let a = rand_mat(&mut r, m, k);
+            let b = rand_mat(&mut r, k, n);
+            let got = binary_matmul_f32(m, k, n, &a, &b);
+            let ta = Tensor::new(&[m, k], a).sign_pm1();
+            let tb = Tensor::new(&[k, n], b).sign_pm1();
+            let expect = matmul(&ta, &tb);
+            for (g, e) in got.iter().zip(expect.data()) {
+                assert_eq!(*g, *e, "shape ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn output_parity_matches_k() {
+        // dot of ±1 vectors has the same parity as K
+        let mut r = Pcg32::seeded(1);
+        let (m, k, n) = (4, 77, 3);
+        let out = binary_matmul_f32(m, k, n, &rand_mat(&mut r, m, k), &rand_mat(&mut r, k, n));
+        for &v in &out {
+            assert_eq!((v as i64 - 77).rem_euclid(2), 0);
+        }
+    }
+
+    #[test]
+    fn identical_rows_give_plus_k() {
+        let vals = vec![1.0f32; 100];
+        let a = BitMatrix::from_pm1(1, 100, &vals);
+        let bt = BitMatrix::from_pm1(1, 100, &vals);
+        assert_eq!(xnor_gemm(&a, &bt), vec![100]);
+        let neg = vec![-1.0f32; 100];
+        let bneg = BitMatrix::from_pm1(1, 100, &neg);
+        assert_eq!(xnor_gemm(&a, &bneg), vec![-100]);
+    }
+
+    #[test]
+    fn masked_gemm_zeroes_padding() {
+        // row with half the bits invalid: result = dot over valid half only
+        let mut r = Pcg32::seeded(2);
+        let k = 96;
+        let a_vals = rand_mat(&mut r, 1, k);
+        let b_vals = rand_mat(&mut r, k, 1);
+        let a = BitMatrix::from_pm1(1, k, &a_vals);
+        let bt = BitMatrix::from_pm1_transposed(k, 1, &b_vals);
+        let mut valid = BitMatrix::zeros(1, k);
+        for j in 0..48 {
+            valid.set(0, j);
+        }
+        let got = xnor_gemm_masked(&a, &valid, &bt)[0];
+        let expect: f32 = (0..48)
+            .map(|j| {
+                let sa = if a_vals[j] >= 0.0 { 1.0 } else { -1.0 };
+                let sb = if b_vals[j] >= 0.0 { 1.0 } else { -1.0 };
+                sa * sb
+            })
+            .sum();
+        assert_eq!(got, expect as i32);
+    }
+
+    #[test]
+    fn masked_all_valid_equals_unmasked() {
+        let mut r = Pcg32::seeded(3);
+        let (m, k, n) = (6, 70, 4);
+        let a_vals = rand_mat(&mut r, m, k);
+        let b_vals = rand_mat(&mut r, k, n);
+        let a = BitMatrix::from_pm1(m, k, &a_vals);
+        let bt = BitMatrix::from_pm1_transposed(k, n, &b_vals);
+        let valid = BitMatrix::from_pm1(m, k, &vec![1.0; m * k]);
+        assert_eq!(xnor_gemm_masked(&a, &valid, &bt), xnor_gemm(&a, &bt));
+    }
+}

@@ -1,0 +1,219 @@
+//! XNOR-popcount binary inference engine — the paper's deployment claim.
+//!
+//! After BBP training the network is fully binary at test time: every MAC is
+//! an XNOR + population count (paper abstract / sec. 4). This module is that
+//! engine, for a real ISA: ±1 values are packed 64-per-word (bit = 1 ⇔ +1)
+//! and the GEMM inner loop is `popcnt(xnor(a, b))`, using the identity
+//!
+//! ```text
+//! dot(a, b) = 2 * popcount(XNOR(bits_a, bits_b)) - K    (a, b in {-1,+1}^K)
+//! ```
+//!
+//! pinned against the Pallas kernel by `python/tests/test_binary_matmul.py`
+//! and against `tensor::matmul` by the tests below.
+//!
+//! Submodules:
+//!  * [`gemm`]    — packed XNOR GEMM (+ masked variant for zero-padded rows)
+//!  * [`conv`]    — binary conv via packed im2col with border-validity masks
+//!  * [`dedup`]   — kernel-repetition optimizer (paper sec. 4.2, Fig. 2)
+//!  * [`fold`]    — BN folded into integer thresholds (sign(BN(z)) ≡ z ≥ τ)
+//!  * [`network`] — whole-network binary forward pass from a checkpoint
+
+pub mod conv;
+pub mod dedup;
+pub mod fold;
+pub mod gemm;
+pub mod network;
+
+pub use gemm::{xnor_gemm, xnor_gemm_masked};
+
+/// A matrix of packed ±1 values: `rows` logical rows of `cols` bits each,
+/// padded to whole 64-bit words (pad bits are zero and masked out of every
+/// popcount via `tail_mask`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let wpr = cols.div_ceil(64);
+        Self { rows, cols, words_per_row: wpr, data: vec![0; rows * wpr] }
+    }
+
+    /// Pack a row-major f32 matrix: bit = 1 iff value >= 0 (sign(0) = +1,
+    /// paper Eq. 5). Branchless hot path: the sign is read straight from
+    /// the IEEE sign bit, 64 values per output word (§Perf iteration 2).
+    pub fn from_pm1(rows: usize, cols: usize, vals: &[f32]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        let mut m = Self::zeros(rows, cols);
+        let wpr = m.words_per_row;
+        for i in 0..rows {
+            let row_vals = &vals[i * cols..(i + 1) * cols];
+            let row_words = &mut m.data[i * wpr..(i + 1) * wpr];
+            let mut chunks = row_vals.chunks_exact(64);
+            for (w, chunk) in row_words.iter_mut().zip(&mut chunks) {
+                let mut word = 0u64;
+                for (b, &v) in chunk.iter().enumerate() {
+                    // v >= 0 (incl. -0.0, matching the f32 compare) iff the
+                    // sign bit is clear or the value is -0.0; IEEE: v >= 0.0
+                    // is equivalent to (bits >> 31) == 0 || bits == 0x8000_0000
+                    let bit = ((v >= 0.0) as u64) << b;
+                    word |= bit;
+                }
+                *w = word;
+            }
+            let rem = chunks.remainder();
+            if !rem.is_empty() {
+                let mut word = 0u64;
+                for (b, &v) in rem.iter().enumerate() {
+                    word |= ((v >= 0.0) as u64) << b;
+                }
+                row_words[wpr - 1] = word;
+            }
+        }
+        m
+    }
+
+    /// Pack the *transpose* of a row-major f32 matrix (rows of the packed
+    /// matrix are the columns of `vals`): the layout `xnor_gemm` wants for
+    /// the weight operand.
+    pub fn from_pm1_transposed(rows: usize, cols: usize, vals: &[f32]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        let mut m = Self::zeros(cols, rows);
+        for i in 0..rows {
+            for j in 0..cols {
+                if vals[i * cols + j] >= 0.0 {
+                    m.set(j, i);
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.words_per_row + j / 64] |= 1u64 << (j % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        (self.data[i * self.words_per_row + j / 64] >> (j % 64)) & 1 == 1
+    }
+
+    /// Signed value at (i, j): +1.0 or -1.0.
+    #[inline]
+    pub fn pm1(&self, i: usize, j: usize) -> f32 {
+        if self.get(i, j) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.data[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u64] {
+        &mut self.data[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Mask selecting the valid bits of the final word of each row
+    /// (all-ones when cols is a multiple of 64).
+    #[inline]
+    pub fn tail_mask(&self) -> u64 {
+        let r = self.cols % 64;
+        if r == 0 {
+            u64::MAX
+        } else {
+            (1u64 << r) - 1
+        }
+    }
+
+    /// Unpack back to ±1 f32 (testing / analysis).
+    pub fn to_pm1_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.push(self.pm1(i, j));
+            }
+        }
+        out
+    }
+
+    /// Packed storage size in bytes (the >=16x memory-reduction claim of the
+    /// paper's discussion section is `rows*cols*4 / packed_bytes`).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn pack_roundtrip() {
+        let mut r = Pcg32::seeded(0);
+        let vals: Vec<f32> = (0..5 * 70).map(|_| r.normal()).collect();
+        let pm1: Vec<f32> = vals.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let m = BitMatrix::from_pm1(5, 70, &vals);
+        assert_eq!(m.to_pm1_vec(), pm1);
+    }
+
+    #[test]
+    fn sign_zero_packs_as_plus_one() {
+        let m = BitMatrix::from_pm1(1, 3, &[0.0, -0.0, -1.0]);
+        // IEEE -0.0 >= 0.0 is true, so -0.0 also packs as +1 — same as the
+        // python oracle (jnp.where(x >= 0, 1, -1)).
+        assert_eq!(m.to_pm1_vec(), vec![1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn transposed_pack_matches() {
+        let mut r = Pcg32::seeded(1);
+        let vals: Vec<f32> = (0..6 * 9).map(|_| r.normal()).collect();
+        let mt = BitMatrix::from_pm1_transposed(6, 9, &vals);
+        assert_eq!(mt.rows(), 9);
+        assert_eq!(mt.cols(), 6);
+        for i in 0..6 {
+            for j in 0..9 {
+                assert_eq!(mt.get(j, i), vals[i * 9 + j] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tail_mask_widths() {
+        assert_eq!(BitMatrix::zeros(1, 64).tail_mask(), u64::MAX);
+        assert_eq!(BitMatrix::zeros(1, 65).tail_mask(), 1);
+        assert_eq!(BitMatrix::zeros(1, 3).tail_mask(), 0b111);
+    }
+
+    #[test]
+    fn packed_bytes_is_32x_smaller_than_f32() {
+        let m = BitMatrix::zeros(1024, 1024);
+        let f32_bytes = 1024 * 1024 * 4;
+        assert_eq!(f32_bytes / m.packed_bytes(), 32);
+    }
+}

@@ -1,0 +1,255 @@
+//! Checkpoint store: versioned binary format with sha256 integrity, plus
+//! the 1-bit packed export backing the paper's >=16x memory-reduction claim.
+//!
+//! Layout of `.bdnn` files:
+//!
+//! ```text
+//! magic  "BDNNCKPT"                      8 bytes
+//! version u32 LE                         4
+//! header_len u32 LE                      4
+//! header JSON                            header_len   (names, shapes, meta)
+//! tensor data  f32 LE, header order      sum(len)*4
+//! sha256 of everything above             32
+//! ```
+//!
+//! The packed export (`.bbin`) stores 1 bit per weight (sign) for weight
+//! tensors and f32 for the small BN/bias vectors — what a deployed BDNN
+//! actually ships.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use sha2::{Digest, Sha256};
+
+use crate::config::json::{self, Json};
+use crate::error::{BdnnError, Result};
+use crate::tensor::Tensor;
+
+pub type Params = BTreeMap<String, Tensor>;
+
+const MAGIC: &[u8; 8] = b"BDNNCKPT";
+const VERSION: u32 = 1;
+
+/// Run metadata stored in the checkpoint header.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CheckpointMeta {
+    pub arch: String,
+    pub epoch: usize,
+    pub step: u64,
+}
+
+fn header_json(params: &Params, meta: &CheckpointMeta) -> String {
+    let mut tensors = Vec::new();
+    for (name, t) in params {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name.clone()));
+        o.insert(
+            "shape".to_string(),
+            Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        tensors.push(Json::Obj(o));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("arch".to_string(), Json::Str(meta.arch.clone()));
+    root.insert("epoch".to_string(), Json::Num(meta.epoch as f64));
+    root.insert("step".to_string(), Json::Num(meta.step as f64));
+    root.insert("tensors".to_string(), Json::Arr(tensors));
+    Json::Obj(root).to_string()
+}
+
+/// Save parameters to a `.bdnn` checkpoint.
+pub fn save(path: impl AsRef<Path>, params: &Params, meta: &CheckpointMeta) -> Result<()> {
+    let header = header_json(params, meta);
+    let mut buf = Vec::with_capacity(header.len() + 64);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    buf.extend_from_slice(header.as_bytes());
+    for t in params.values() {
+        for &v in t.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let digest = Sha256::digest(&buf);
+    buf.extend_from_slice(&digest);
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a `.bdnn` checkpoint, verifying magic, version and checksum.
+pub fn load(path: impl AsRef<Path>) -> Result<(Params, CheckpointMeta)> {
+    let buf = std::fs::read(&path)?;
+    if buf.len() < 48 || &buf[..8] != MAGIC {
+        return Err(BdnnError::Checkpoint("bad magic (not a .bdnn file)".into()));
+    }
+    let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(BdnnError::Checkpoint(format!("unsupported version {version}")));
+    }
+    let (body, digest) = buf.split_at(buf.len() - 32);
+    let expect = Sha256::digest(body);
+    if digest != expect.as_slice() {
+        return Err(BdnnError::Checkpoint("checksum mismatch (corrupt checkpoint)".into()));
+    }
+    let hlen = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    let header_end = 16 + hlen;
+    if header_end > body.len() {
+        return Err(BdnnError::Checkpoint("truncated header".into()));
+    }
+    let header = std::str::from_utf8(&buf[16..header_end])
+        .map_err(|_| BdnnError::Checkpoint("header not utf8".into()))?;
+    let j = json::parse(header).map_err(BdnnError::Checkpoint)?;
+    let meta = CheckpointMeta {
+        arch: j.get("arch").and_then(Json::as_str).unwrap_or_default().to_string(),
+        epoch: j.get("epoch").and_then(Json::as_usize).unwrap_or(0),
+        step: j.get("step").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+    };
+    let tensors = j
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| BdnnError::Checkpoint("header missing tensors".into()))?;
+    let mut params = Params::new();
+    let mut off = header_end;
+    for t in tensors {
+        let name = t
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| BdnnError::Checkpoint("tensor missing name".into()))?;
+        let shape: Vec<usize> = t
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| BdnnError::Checkpoint("tensor missing shape".into()))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let n: usize = shape.iter().product();
+        let end = off + n * 4;
+        if end > body.len() {
+            return Err(BdnnError::Checkpoint(format!("truncated data for '{name}'")));
+        }
+        let data: Vec<f32> = buf[off..end]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        params.insert(name.to_string(), Tensor::new(&shape, data));
+        off = end;
+    }
+    if off != body.len() {
+        return Err(BdnnError::Checkpoint("trailing data after tensors".into()));
+    }
+    Ok((params, meta))
+}
+
+/// Packed 1-bit export: weight tensors (`*_W`) stored as sign bits, other
+/// (small) tensors as f32. Returns total bytes written.
+pub fn export_packed(path: impl AsRef<Path>, params: &Params) -> Result<usize> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"BDNNBBIN");
+    for (name, t) in params {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.extend_from_slice(&(t.len() as u64).to_le_bytes());
+        if name.ends_with("_W") {
+            buf.push(1u8); // packed
+            let mut byte = 0u8;
+            for (i, &v) in t.data().iter().enumerate() {
+                if v >= 0.0 {
+                    byte |= 1 << (i % 8);
+                }
+                if i % 8 == 7 {
+                    buf.push(byte);
+                    byte = 0;
+                }
+            }
+            if t.len() % 8 != 0 {
+                buf.push(byte);
+            }
+        } else {
+            buf.push(0u8); // f32
+            for &v in t.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    std::fs::write(path, &buf)?;
+    Ok(buf.len())
+}
+
+/// f32 bytes a checkpoint's tensors occupy (for the memory-reduction table).
+pub fn f32_bytes(params: &Params) -> usize {
+    params.values().map(|t| t.len() * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn sample_params() -> Params {
+        let mut r = Pcg32::seeded(0);
+        let mut p = Params::new();
+        p.insert("L00_W".into(), Tensor::new(&[20, 30], (0..600).map(|_| r.uniform(-1.0, 1.0)).collect()));
+        p.insert("L00_b".into(), Tensor::new(&[30], (0..30).map(|_| r.normal()).collect()));
+        p.insert("L01_W".into(), Tensor::new(&[30, 10], (0..300).map(|_| r.uniform(-1.0, 1.0)).collect()));
+        p
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("bdnn_ckpt_test");
+        let path = dir.join("a.bdnn");
+        let params = sample_params();
+        let meta = CheckpointMeta { arch: "mnist_mlp".into(), epoch: 3, step: 1200 };
+        save(&path, &params, &meta).unwrap();
+        let (loaded, lmeta) = load(&path).unwrap();
+        assert_eq!(lmeta, meta);
+        assert_eq!(loaded.len(), 3);
+        for (k, t) in &params {
+            assert_eq!(loaded[k], *t);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = std::env::temp_dir().join("bdnn_ckpt_test");
+        let path = dir.join("b.bdnn");
+        save(&path, &sample_params(), &CheckpointMeta::default()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{}", load(&path).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = std::env::temp_dir().join("bdnn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bdnn");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn packed_export_is_much_smaller() {
+        let dir = std::env::temp_dir().join("bdnn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.bbin");
+        let params = sample_params();
+        let packed = export_packed(&path, &params).unwrap();
+        let full = f32_bytes(&params);
+        // weights dominate -> close to 16-32x smaller overall
+        assert!(full > 10 * packed, "full {full} packed {packed}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,134 @@
+//! Command-line argument parser — the clap substitute (offline sandbox).
+//!
+//! Grammar: `bdnn <command> [positional...] [--key value | --flag]`.
+//! Typed accessors with defaults and collected "unknown flag" diagnostics.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty flag '--'".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.str_opt(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Flags that were provided but never read by the command — catches
+    /// typos like `--epcohs`.
+    pub fn unknown_flags(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.flags.keys().filter(|k| !consumed.contains(*k)).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("train --config runs/a.toml --epochs 50 --quiet");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.str_opt("config"), Some("runs/a.toml"));
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 50);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("exp table3 --quick --seed=9");
+        assert_eq!(a.command.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 9);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let a = parse("train --epochs banana");
+        assert!(a.usize_or("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("train --config x --epcohs 5");
+        let _ = a.str_opt("config");
+        assert_eq!(a.unknown_flags(), vec!["epcohs".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --verbose --n 3");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,265 @@
+//! Config system: run configs (TOML) and model architecture descriptors
+//! (mirrors `python/compile/model.py::ModelConfig`, parsed back out of
+//! `artifacts/manifest.json` so Rust never hardcodes an architecture).
+
+pub mod json;
+pub mod toml;
+
+use crate::error::{BdnnError, Result};
+use json::Json;
+use toml::TomlValue;
+
+/// Model architecture — the Rust mirror of the python `ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelArch {
+    pub name: String,
+    pub arch: String, // "mlp" | "cnn"
+    pub mode: String, // "bdnn" | "binaryconnect" | "float"
+    pub in_shape: Vec<usize>,
+    pub classes: usize,
+    pub hidden: Vec<usize>,
+    pub maps: Vec<usize>,
+    pub fc: Vec<usize>,
+    pub bn: String, // "shift" | "exact" | "none"
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub k_steps: usize,
+    pub bn_eps: f32,
+}
+
+impl ModelArch {
+    /// Parse from a manifest artifact's "config" JSON object.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let req_str = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| BdnnError::Manifest(format!("config missing string '{k}'")))
+        };
+        let req_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| BdnnError::Manifest(format!("config missing int '{k}'")))
+        };
+        let arr = |k: &str| -> Vec<usize> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        Ok(Self {
+            name: req_str("name")?,
+            arch: req_str("arch")?,
+            mode: req_str("mode")?,
+            in_shape: arr("in_shape"),
+            classes: req_usize("classes")?,
+            hidden: arr("hidden"),
+            maps: arr("maps"),
+            fc: arr("fc"),
+            bn: req_str("bn")?,
+            batch: req_usize("batch")?,
+            eval_batch: req_usize("eval_batch")?,
+            k_steps: req_usize("k_steps")?,
+            bn_eps: j.get("bn_eps").and_then(|v| v.as_f64()).unwrap_or(1e-4) as f32,
+        })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    /// Layer widths of the dense trunk (mlp: hidden+out; cnn: fc+out).
+    pub fn is_cnn(&self) -> bool {
+        self.arch == "cnn"
+    }
+}
+
+/// A training-run configuration (the launcher's TOML).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    /// manifest artifact base name, e.g. "mnist_mlp_small" — the coordinator
+    /// loads `<artifact>_train` and `<artifact>_eval`.
+    pub artifact: String,
+    /// synthetic dataset family: "mnist" | "cifar10" | "svhn"
+    pub dataset: String,
+    pub epochs: usize,
+    /// initial learning rate; the paper uses powers of two
+    pub lr0: f32,
+    /// halve ("shift right") the LR every this many epochs (paper: 50)
+    pub lr_shift_every: usize,
+    pub seed: u64,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    /// checkpoint every N epochs (0 = only final)
+    pub checkpoint_every: usize,
+    /// evaluate every N epochs
+    pub eval_every: usize,
+    /// apply GCN+ZCA preprocessing (paper sec. 5.1.1; cifar/svhn only)
+    pub zca: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            artifact: "mnist_mlp_small".into(),
+            dataset: "mnist".into(),
+            epochs: 10,
+            lr0: 0.0625, // 2^-4
+            lr_shift_every: 50,
+            seed: 42,
+            train_size: 10_000,
+            test_size: 2_000,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            checkpoint_every: 0,
+            eval_every: 1,
+            zca: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_toml_str(s: &str) -> Result<Self> {
+        let doc = toml::parse(s).map_err(BdnnError::Config)?;
+        let mut cfg = Self::default();
+        let get = |sec: &str, key: &str| -> Option<&TomlValue> {
+            doc.get(sec).and_then(|m| m.get(key))
+        };
+        // flat keys may live at top level or under [run]/[train]
+        let lookup = |key: &str| get("", key).or_else(|| get("run", key)).or_else(|| get("train", key));
+        if let Some(v) = lookup("name") {
+            cfg.name = v.as_str().ok_or_else(|| bad("name"))?.to_string();
+        }
+        if let Some(v) = lookup("artifact") {
+            cfg.artifact = v.as_str().ok_or_else(|| bad("artifact"))?.to_string();
+        }
+        if let Some(v) = lookup("dataset") {
+            cfg.dataset = v.as_str().ok_or_else(|| bad("dataset"))?.to_string();
+        }
+        if let Some(v) = lookup("epochs") {
+            cfg.epochs = v.as_i64().ok_or_else(|| bad("epochs"))? as usize;
+        }
+        if let Some(v) = lookup("lr0") {
+            cfg.lr0 = v.as_f64().ok_or_else(|| bad("lr0"))? as f32;
+        }
+        if let Some(v) = lookup("lr_shift_every") {
+            cfg.lr_shift_every = v.as_i64().ok_or_else(|| bad("lr_shift_every"))? as usize;
+        }
+        if let Some(v) = lookup("seed") {
+            cfg.seed = v.as_i64().ok_or_else(|| bad("seed"))? as u64;
+        }
+        if let Some(v) = lookup("train_size") {
+            cfg.train_size = v.as_i64().ok_or_else(|| bad("train_size"))? as usize;
+        }
+        if let Some(v) = lookup("test_size") {
+            cfg.test_size = v.as_i64().ok_or_else(|| bad("test_size"))? as usize;
+        }
+        if let Some(v) = lookup("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str().ok_or_else(|| bad("artifacts_dir"))?.to_string();
+        }
+        if let Some(v) = lookup("out_dir") {
+            cfg.out_dir = v.as_str().ok_or_else(|| bad("out_dir"))?.to_string();
+        }
+        if let Some(v) = lookup("checkpoint_every") {
+            cfg.checkpoint_every = v.as_i64().ok_or_else(|| bad("checkpoint_every"))? as usize;
+        }
+        if let Some(v) = lookup("eval_every") {
+            cfg.eval_every = v.as_i64().ok_or_else(|| bad("eval_every"))? as usize;
+        }
+        if let Some(v) = lookup("zca") {
+            cfg.zca = v.as_bool().ok_or_else(|| bad("zca"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| BdnnError::Config(format!("read {path}: {e}")))?;
+        Self::from_toml_str(&s)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.dataset.as_str(), "mnist" | "cifar10" | "svhn") {
+            return Err(BdnnError::Config(format!("unknown dataset '{}'", self.dataset)));
+        }
+        if self.epochs == 0 {
+            return Err(BdnnError::Config("epochs must be >= 1".into()));
+        }
+        if self.lr0 <= 0.0 {
+            return Err(BdnnError::Config("lr0 must be > 0".into()));
+        }
+        if self.lr_shift_every == 0 {
+            return Err(BdnnError::Config("lr_shift_every must be >= 1".into()));
+        }
+        if self.train_size == 0 || self.test_size == 0 {
+            return Err(BdnnError::Config("train/test size must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+fn bad(key: &str) -> BdnnError {
+    BdnnError::Config(format!("bad type for key '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_config_from_toml() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+name = "mnist-bdnn"
+artifact = "mnist_mlp"
+dataset = "mnist"
+[train]
+epochs = 100
+lr0 = 0.0625
+lr_shift_every = 50
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "mnist-bdnn");
+        assert_eq!(cfg.epochs, 100);
+        assert_eq!(cfg.lr_shift_every, 50);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.eval_every, 1); // default survives
+    }
+
+    #[test]
+    fn validation_rejects_bad_dataset() {
+        assert!(RunConfig::from_toml_str("dataset = \"imagenet\"").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_epochs() {
+        assert!(RunConfig::from_toml_str("epochs = 0").is_err());
+    }
+
+    #[test]
+    fn model_arch_from_json() {
+        let j = json::parse(
+            r#"{"name":"m","arch":"cnn","mode":"bdnn","in_shape":[32,32,3],
+                "classes":10,"hidden":[],"maps":[32,64,128],"fc":[512,512],
+                "bn":"shift","batch":50,"eval_batch":100,"k_steps":4}"#,
+        )
+        .unwrap();
+        let a = ModelArch::from_json(&j).unwrap();
+        assert_eq!(a.maps, vec![32, 64, 128]);
+        assert_eq!(a.in_dim(), 3072);
+        assert!(a.is_cnn());
+    }
+
+    #[test]
+    fn model_arch_missing_field_errors() {
+        let j = json::parse(r#"{"name":"m"}"#).unwrap();
+        assert!(ModelArch::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! TOML-subset parser for run configs (`configs/*.toml`).
+//!
+//! Supported grammar: `[section]` headers, `key = value` with string, int,
+//! float, bool, and homogeneous inline arrays; `#` comments. This covers
+//! every config the launcher reads; exotic TOML (dates, nested tables,
+//! multi-line strings) is intentionally rejected with a clear error.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_arr(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Arr(v) => v.iter().map(|x| x.as_i64().map(|i| i as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value; keys before any section land in section "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(input: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let end = stripped.rfind('"').ok_or("unterminated string")?;
+        if end != stripped.len() - 1 {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(TomlValue::Str(stripped[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            split_top_level(inner).into_iter().map(|x| parse_value(x.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = parse(
+            r#"
+# top comment
+name = "run1"
+[train]
+epochs = 50          # inline comment
+lr = 0.0625
+shuffle = true
+hidden = [1024, 1024, 1024]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("run1"));
+        assert_eq!(doc["train"]["epochs"].as_i64(), Some(50));
+        assert_eq!(doc["train"]["lr"].as_f64(), Some(0.0625));
+        assert_eq!(doc["train"]["shuffle"].as_bool(), Some(true));
+        assert_eq!(doc["train"]["hidden"].as_usize_arr(), Some(vec![1024, 1024, 1024]));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn int_is_also_f64() {
+        let doc = parse("x = 2").unwrap();
+        assert_eq!(doc[""]["x"].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, ").is_err());
+        assert!(parse("[sec").is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Metric sinks: JSONL event log + stdout progress lines.
+//!
+//! One JSON object per line; `analysis::convergence` parses these back to
+//! regenerate Fig. 1. Kinds: "run" (header), "chunk" (per train-chunk),
+//! "epoch" (per epoch summary), "final".
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::error::Result;
+
+/// Append-only JSONL metrics writer.
+pub struct MetricsWriter {
+    file: Option<std::fs::File>,
+    pub echo: bool,
+}
+
+impl MetricsWriter {
+    pub fn to_file(path: impl AsRef<Path>, echo: bool) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self { file: Some(std::fs::File::create(path)?), echo })
+    }
+
+    /// In-memory sink (tests, benches).
+    pub fn null() -> Self {
+        Self { file: None, echo: false }
+    }
+
+    pub fn emit(&mut self, kind: &str, fields: &[(&str, Json)]) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str(kind.to_string()));
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        let line = Json::Obj(obj).to_string();
+        if let Some(f) = self.file.as_mut() {
+            writeln!(f, "{line}")?;
+        }
+        if self.echo {
+            println!("{line}");
+        }
+        Ok(())
+    }
+
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn s(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_jsonl() {
+        let path = std::env::temp_dir().join("bdnn_metrics_test.jsonl");
+        {
+            let mut w = MetricsWriter::to_file(&path, false).unwrap();
+            w.emit("run", &[("name", MetricsWriter::s("t"))]).unwrap();
+            w.emit(
+                "epoch",
+                &[("epoch", MetricsWriter::num(0.0)), ("train_loss", MetricsWriter::num(1.5))],
+            )
+            .unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let recs = crate::analysis::convergence::parse_jsonl(&text).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].train_loss, 1.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn null_sink_is_silent() {
+        let mut w = MetricsWriter::null();
+        w.emit("x", &[]).unwrap();
+    }
+}

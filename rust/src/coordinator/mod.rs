@@ -1,0 +1,14 @@
+//! L3 coordinator: the training orchestrator (paper Alg. 1's outer loop).
+//!
+//! * [`trainer`]  — epoch/chunk loop over the AOT train executable, eval,
+//!   checkpointing, metric emission, dataset loading.
+//! * [`schedule`] — the paper's power-of-two LR shift schedule.
+//! * [`metrics`]  — JSONL metric sink (parsed back by `analysis`).
+
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::MetricsWriter;
+pub use schedule::ShiftSchedule;
+pub use trainer::{load_datasets, EpochStats, Trainer, TrainSummary};

@@ -1,0 +1,80 @@
+//! Learning-rate shift schedule (paper sec. 5 / Fig. 1).
+//!
+//! "Since we can not use a standard decaying learning rate we shifted the
+//! learning rate to the right (multiplied by 0.5) every 50 iterations."
+//! The LR therefore stays an exact power of two at all times, which is what
+//! makes S-AdaMax's scaling a pure shift.
+
+/// Power-of-two LR schedule: lr(epoch) = lr0 * 2^-(epoch / shift_every).
+#[derive(Clone, Copy, Debug)]
+pub struct ShiftSchedule {
+    pub lr0: f32,
+    pub shift_every: usize,
+}
+
+impl ShiftSchedule {
+    pub fn new(lr0: f32, shift_every: usize) -> Self {
+        assert!(shift_every > 0);
+        Self { lr0, shift_every }
+    }
+
+    /// Smallest LR the schedule will emit: further right-shifts would
+    /// underflow f32 toward subnormals/zero and stall training silently.
+    pub const MIN_LR: f32 = 1.0 / (1u64 << 30) as f32; // 2^-30
+
+    pub fn lr_at(&self, epoch: usize) -> f32 {
+        let shifts = (epoch / self.shift_every) as i32;
+        (self.lr0 * (2.0f32).powi(-shifts)).max(Self::MIN_LR)
+    }
+
+    /// True on epochs where the LR just dropped (Fig. 1 markers).
+    pub fn is_shift_epoch(&self, epoch: usize) -> bool {
+        epoch > 0 && epoch % self.shift_every == 0
+    }
+}
+
+/// Round an arbitrary lr0 to the nearest power of two (the paper rounds the
+/// Glorot-initialized LR "to be integer of power 2").
+pub fn round_to_pow2(lr: f32) -> f32 {
+    crate::util::ap2(lr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halves_every_shift() {
+        let s = ShiftSchedule::new(0.0625, 50);
+        assert_eq!(s.lr_at(0), 0.0625);
+        assert_eq!(s.lr_at(49), 0.0625);
+        assert_eq!(s.lr_at(50), 0.03125);
+        assert_eq!(s.lr_at(149), 0.0625 / 4.0);
+    }
+
+    #[test]
+    fn lr_is_always_power_of_two() {
+        let s = ShiftSchedule::new(0.0625, 7);
+        for e in 0..100 {
+            let lr = s.lr_at(e);
+            let l2 = lr.log2();
+            assert!((l2 - l2.round()).abs() < 1e-6, "epoch {e}: lr {lr}");
+        }
+    }
+
+    #[test]
+    fn shift_epochs_flagged() {
+        let s = ShiftSchedule::new(0.5, 10);
+        assert!(!s.is_shift_epoch(0));
+        assert!(s.is_shift_epoch(10));
+        assert!(!s.is_shift_epoch(11));
+        assert!(s.is_shift_epoch(20));
+    }
+
+    #[test]
+    fn rounding_to_pow2() {
+        assert_eq!(round_to_pow2(0.09), 0.125); // 2^-3.47 rounds to 2^-3
+        assert_eq!(round_to_pow2(0.05), 0.0625); // 2^-4.32 rounds to 2^-4
+        assert_eq!(round_to_pow2(0.0625), 0.0625); // fixed point
+    }
+}

@@ -1,0 +1,466 @@
+//! The training orchestrator: owns the loop, the schedule, the data
+//! pipeline, metrics and checkpoints; PJRT executes the AOT train graph.
+//!
+//! The carried state (params, BN statistics, optimizer moments, step
+//! counter) is a flat vector aligned with the train executable's input
+//! order; after each chunk the executable's outputs are written back into
+//! the carry *by name* per the manifest contract (DESIGN.md sec. 8), so the
+//! Rust side never hardcodes a parameter layout.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::metrics::MetricsWriter;
+use super::schedule::ShiftSchedule;
+use crate::checkpoint::{self, CheckpointMeta};
+use crate::config::{ModelArch, RunConfig};
+use crate::data::pipeline::Prefetcher;
+use crate::data::Dataset;
+use crate::error::{BdnnError, Result};
+use crate::runtime::{Dtype, Engine, Executable, HostTensor};
+use crate::tensor::Tensor;
+use crate::util::{Pcg32, SplitMix64, Timer};
+
+/// Per-epoch record returned in the summary.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_err: f64,
+    pub test_err: Option<f64>,
+    pub lr: f32,
+    pub secs: f64,
+}
+
+/// Training-run summary.
+#[derive(Clone, Debug)]
+pub struct TrainSummary {
+    pub epochs: Vec<EpochStats>,
+    pub final_test_err: f64,
+    pub steps: u64,
+}
+
+pub struct Trainer {
+    run: RunConfig,
+    arch: ModelArch,
+    train_exe: std::rc::Rc<Executable>,
+    eval_exe: std::rc::Rc<Executable>,
+    /// flat carried state, aligned with train input order [0..carry_len)
+    carry: Vec<HostTensor>,
+    carry_len: usize,
+    /// input slot indices by role
+    idx_lr: usize,
+    idx_key: usize,
+    idx_xs: usize,
+    idx_ys: usize,
+    /// output name -> carry slot
+    out_to_carry: Vec<Option<usize>>,
+    idx_out_loss: usize,
+    idx_out_err: usize,
+    rng: Pcg32,
+    schedule: ShiftSchedule,
+    pub metrics: MetricsWriter,
+    steps: u64,
+}
+
+fn init_tensor(spec: &crate::runtime::IoSpec, rng: &mut Pcg32) -> Result<HostTensor> {
+    let n = spec.elements();
+    match (spec.dtype, spec.init.as_deref()) {
+        (Dtype::F32, Some("uniform_pm1")) => {
+            let mut v = vec![0.0f32; n];
+            rng.fill_uniform_pm1(&mut v);
+            Ok(HostTensor::F32(v, spec.shape.clone()))
+        }
+        (Dtype::F32, Some("zeros") | None) => Ok(HostTensor::F32(vec![0.0; n], spec.shape.clone())),
+        (Dtype::F32, Some("ones")) => Ok(HostTensor::F32(vec![1.0; n], spec.shape.clone())),
+        (d, i) => Err(BdnnError::Runtime(format!(
+            "no init rule for '{}' ({d:?}, {i:?})",
+            spec.name
+        ))),
+    }
+}
+
+impl Trainer {
+    pub fn new(run: RunConfig, metrics: MetricsWriter) -> Result<Self> {
+        let mut engine = Engine::cpu(&run.artifacts_dir)?;
+        let train_name = format!("{}_train", run.artifact);
+        let eval_name = format!("{}_eval", run.artifact);
+        let train_exe = engine.load(&train_name)?;
+        let eval_exe = engine.load(&eval_name)?;
+        let spec = train_exe.spec();
+        let arch = spec
+            .config
+            .clone()
+            .ok_or_else(|| BdnnError::Manifest(format!("{train_name}: missing config")))?;
+
+        // locate the non-carried inputs by role
+        let find = |role: &str| -> Result<usize> {
+            spec.inputs
+                .iter()
+                .position(|s| s.is_role(role))
+                .ok_or_else(|| BdnnError::Manifest(format!("{train_name}: no input role '{role}'")))
+        };
+        let idx_lr = find("lr")?;
+        let idx_key = find("rng")?;
+        let idx_xs = find("data_x")?;
+        let idx_ys = find("data_y")?;
+        let carry_len = *[idx_lr, idx_key, idx_xs, idx_ys].iter().min().unwrap();
+
+        // init the carry deterministically from the run seed
+        let mut sm = SplitMix64::new(run.seed);
+        let mut init_rng = Pcg32::seeded(sm.next_u64());
+        let data_seed = sm.next_u64();
+        let mut carry = Vec::with_capacity(carry_len);
+        for s in &spec.inputs[..carry_len] {
+            carry.push(init_tensor(s, &mut init_rng)?);
+        }
+
+        // map outputs back to carry slots by name
+        let name_to_slot: BTreeMap<&str, usize> = spec.inputs[..carry_len]
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), i))
+            .collect();
+        let out_to_carry: Vec<Option<usize>> = train_exe
+            .spec()
+            .outputs
+            .iter()
+            .map(|o| name_to_slot.get(o.name.as_str()).copied())
+            .collect();
+        let find_out = |role: &str| -> Result<usize> {
+            train_exe
+                .spec()
+                .outputs
+                .iter()
+                .position(|s| s.is_role(role))
+                .ok_or_else(|| BdnnError::Manifest(format!("{train_name}: no output role '{role}'")))
+        };
+        let idx_out_loss = find_out("loss")?;
+        let idx_out_err = find_out("err")?;
+
+        let schedule = ShiftSchedule::new(super::schedule::round_to_pow2(run.lr0), run.lr_shift_every);
+        Ok(Self {
+            run,
+            arch,
+            train_exe,
+            eval_exe,
+            carry,
+            carry_len,
+            idx_lr,
+            idx_key,
+            idx_xs,
+            idx_ys,
+            out_to_carry,
+            idx_out_loss,
+            idx_out_err,
+            rng: Pcg32::seeded(data_seed),
+            schedule,
+            metrics,
+            steps: 0,
+        })
+    }
+
+    pub fn arch(&self) -> &ModelArch {
+        &self.arch
+    }
+
+    pub fn run_config(&self) -> &RunConfig {
+        &self.run
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Current parameters + state as named tensors (for checkpoints,
+    /// analysis and the bitnet engine).
+    pub fn params(&self) -> checkpoint::Params {
+        let spec = self.train_exe.spec();
+        let mut out = checkpoint::Params::new();
+        for (s, t) in spec.inputs[..self.carry_len].iter().zip(&self.carry) {
+            if s.is_role("param") || s.is_role("state") {
+                if let Ok(v) = t.as_f32() {
+                    out.insert(s.name.clone(), Tensor::new(&s.shape, v.to_vec()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Overwrite carried params/state from named tensors (checkpoint
+    /// restore).
+    pub fn restore(&mut self, params: &checkpoint::Params) -> Result<()> {
+        let spec = self.train_exe.spec().clone();
+        for (i, s) in spec.inputs[..self.carry_len].iter().enumerate() {
+            if !(s.is_role("param") || s.is_role("state")) {
+                continue;
+            }
+            let t = params.get(&s.name).ok_or_else(|| {
+                BdnnError::Checkpoint(format!("restore: missing tensor '{}'", s.name))
+            })?;
+            if t.shape() != s.shape.as_slice() {
+                return Err(BdnnError::Checkpoint(format!(
+                    "restore: '{}' shape {:?} != expected {:?}",
+                    s.name,
+                    t.shape(),
+                    s.shape
+                )));
+            }
+            self.carry[i] = HostTensor::F32(t.data().to_vec(), s.shape.clone());
+        }
+        Ok(())
+    }
+
+    /// One training chunk (K minibatches inside the executable).
+    /// Returns (mean loss, error count, samples).
+    pub fn run_chunk(&mut self, lr: f32, xs: Vec<f32>, ys: Vec<i32>) -> Result<(f64, u64, u64)> {
+        let spec = self.train_exe.spec();
+        let xs_shape = spec.inputs[self.idx_xs].shape.clone();
+        let ys_shape = spec.inputs[self.idx_ys].shape.clone();
+        let samples = (ys_shape[0] * ys_shape[1]) as u64;
+
+        let mut args: Vec<HostTensor> = Vec::with_capacity(spec.inputs.len());
+        args.extend(self.carry.iter().cloned());
+        // remaining inputs in manifest order: t already in carry; lr, key, xs, ys
+        for i in self.carry_len..spec.inputs.len() {
+            if i == self.idx_lr {
+                args.push(HostTensor::scalar_f32(lr));
+            } else if i == self.idx_key {
+                args.push(HostTensor::U32(
+                    vec![self.rng.next_u32(), self.rng.next_u32()],
+                    vec![2],
+                ));
+            } else if i == self.idx_xs {
+                args.push(HostTensor::F32(xs.clone(), xs_shape.clone()));
+            } else if i == self.idx_ys {
+                args.push(HostTensor::I32(ys.clone(), ys_shape.clone()));
+            } else {
+                return Err(BdnnError::Runtime(format!(
+                    "unmapped train input #{i} '{}'",
+                    spec.inputs[i].name
+                )));
+            }
+        }
+
+        let outs = self.train_exe.run(&args)?;
+        let losses = outs[self.idx_out_loss].as_f32()?.to_vec();
+        let errs = outs[self.idx_out_err].as_f32()?.to_vec();
+        for (o, slot) in outs.into_iter().zip(&self.out_to_carry) {
+            if let Some(i) = slot {
+                self.carry[*i] = o;
+            }
+        }
+        self.steps += losses.len() as u64;
+        let mean_loss = losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len().max(1) as f64;
+        let err_count = errs.iter().map(|&x| x as f64).sum::<f64>() as u64;
+        Ok((mean_loss, err_count, samples))
+    }
+
+    /// Deterministic test-set evaluation; returns the error rate.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f64> {
+        let spec = self.eval_exe.spec().clone();
+        let x_idx = spec
+            .inputs
+            .iter()
+            .position(|s| s.is_role("data_x"))
+            .ok_or_else(|| BdnnError::Manifest("eval: no data_x input".into()))?;
+        let batch = spec.inputs[x_idx].shape[0];
+        // params for eval: match by name against the carry
+        let mut base: Vec<HostTensor> = Vec::with_capacity(spec.inputs.len() - 1);
+        for s in &spec.inputs[..x_idx] {
+            let (i, _) = self
+                .train_exe
+                .spec()
+                .input_named(&s.name)
+                .ok_or_else(|| BdnnError::Manifest(format!("eval input '{}' not in train", s.name)))?;
+            base.push(self.carry[i].clone());
+        }
+        let mut wrong = 0u64;
+        let mut seen = 0usize;
+        let dim = ds.image_dim();
+        while seen < ds.len() {
+            let take = (ds.len() - seen).min(batch);
+            let mut xs = Vec::with_capacity(batch * dim);
+            for i in seen..seen + take {
+                xs.extend_from_slice(ds.image(i));
+            }
+            // pad the ragged final batch with copies of the last row
+            for _ in take..batch {
+                let last = seen + take - 1;
+                xs.extend_from_slice(ds.image(last));
+            }
+            let mut args = base.clone();
+            args.push(HostTensor::F32(xs, spec.inputs[x_idx].shape.clone()));
+            let outs = self.eval_exe.run(&args)?;
+            let logits = outs[0].as_f32()?;
+            let classes = spec.outputs[0].shape[1];
+            for (row, i) in (0..take).map(|r| (r, seen + r)) {
+                let lrow = &logits[row * classes..(row + 1) * classes];
+                let pred = lrow
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                if pred as i32 != ds.labels[i] {
+                    wrong += 1;
+                }
+            }
+            seen += take;
+        }
+        Ok(wrong as f64 / ds.len() as f64)
+    }
+
+    /// The full training run (Alg. 1 outer loop + paper's LR shifting).
+    pub fn train(&mut self, train_ds: Arc<Dataset>, test_ds: &Dataset) -> Result<TrainSummary> {
+        let k = self.arch.k_steps;
+        let batch = self.arch.batch;
+        self.metrics.emit(
+            "run",
+            &[
+                ("name", MetricsWriter::s(&self.run.name)),
+                ("artifact", MetricsWriter::s(&self.run.artifact)),
+                ("dataset", MetricsWriter::s(&self.run.dataset)),
+                ("train_size", MetricsWriter::num(train_ds.len() as f64)),
+                ("test_size", MetricsWriter::num(test_ds.len() as f64)),
+                ("epochs", MetricsWriter::num(self.run.epochs as f64)),
+                ("lr0", MetricsWriter::num(self.schedule.lr0 as f64)),
+            ],
+        )?;
+        let prefetch = Prefetcher::spawn(
+            train_ds.clone(),
+            k,
+            batch,
+            self.run.epochs,
+            self.run.seed ^ 0xDA7A,
+            2,
+        );
+        let mut epochs: Vec<EpochStats> = Vec::with_capacity(self.run.epochs);
+        let mut cur_epoch = 0usize;
+        let mut ep_loss = 0.0f64;
+        let mut ep_err = 0u64;
+        let mut ep_samples = 0u64;
+        let mut ep_chunks = 0u64;
+        let mut timer = Timer::start();
+
+        let finish_epoch = |this: &mut Self,
+                                epoch: usize,
+                                ep_loss: f64,
+                                ep_err: u64,
+                                ep_samples: u64,
+                                ep_chunks: u64,
+                                timer: &mut Timer,
+                                test_ds: &Dataset,
+                                epochs: &mut Vec<EpochStats>|
+         -> Result<()> {
+            let lr = this.schedule.lr_at(epoch);
+            let train_loss = ep_loss / ep_chunks.max(1) as f64;
+            let train_err = ep_err as f64 / ep_samples.max(1) as f64;
+            let test_err = if this.run.eval_every > 0
+                && (epoch % this.run.eval_every == 0 || epoch + 1 == this.run.epochs)
+            {
+                Some(this.evaluate(test_ds)?)
+            } else {
+                None
+            };
+            let secs = timer.lap();
+            this.metrics.emit(
+                "epoch",
+                &[
+                    ("epoch", MetricsWriter::num(epoch as f64)),
+                    ("train_loss", MetricsWriter::num(train_loss)),
+                    ("train_err", MetricsWriter::num(train_err)),
+                    (
+                        "test_err",
+                        test_err.map(MetricsWriter::num).unwrap_or(crate::config::json::Json::Null),
+                    ),
+                    ("lr", MetricsWriter::num(lr as f64)),
+                    ("secs", MetricsWriter::num(secs)),
+                ],
+            )?;
+            if this.run.checkpoint_every > 0 && (epoch + 1) % this.run.checkpoint_every == 0 {
+                let path = format!("{}/{}/epoch{:04}.bdnn", this.run.out_dir, this.run.name, epoch);
+                checkpoint::save(
+                    &path,
+                    &this.params(),
+                    &CheckpointMeta { arch: this.arch.name.clone(), epoch, step: this.steps },
+                )?;
+            }
+            epochs.push(EpochStats { epoch, train_loss, train_err, test_err, lr, secs });
+            Ok(())
+        };
+
+        while let Some(chunk) = prefetch.next_chunk() {
+            if chunk.epoch != cur_epoch {
+                finish_epoch(
+                    self, cur_epoch, ep_loss, ep_err, ep_samples, ep_chunks, &mut timer, test_ds,
+                    &mut epochs,
+                )?;
+                cur_epoch = chunk.epoch;
+                ep_loss = 0.0;
+                ep_err = 0;
+                ep_samples = 0;
+                ep_chunks = 0;
+            }
+            let lr = self.schedule.lr_at(chunk.epoch);
+            let (loss, err, samples) = self.run_chunk(lr, chunk.xs, chunk.ys)?;
+            ep_loss += loss;
+            ep_err += err;
+            ep_samples += samples;
+            ep_chunks += 1;
+        }
+        finish_epoch(
+            self, cur_epoch, ep_loss, ep_err, ep_samples, ep_chunks, &mut timer, test_ds,
+            &mut epochs,
+        )?;
+
+        let final_test_err = match epochs.last().and_then(|e| e.test_err) {
+            Some(e) => e,
+            None => self.evaluate(test_ds)?,
+        };
+        // always save the final checkpoint
+        let path = format!("{}/{}/final.bdnn", self.run.out_dir, self.run.name);
+        checkpoint::save(
+            &path,
+            &self.params(),
+            &CheckpointMeta {
+                arch: self.arch.name.clone(),
+                epoch: self.run.epochs.saturating_sub(1),
+                step: self.steps,
+            },
+        )?;
+        self.metrics.emit(
+            "final",
+            &[
+                ("test_err", MetricsWriter::num(final_test_err)),
+                ("steps", MetricsWriter::num(self.steps as f64)),
+                ("checkpoint", MetricsWriter::s(&path)),
+            ],
+        )?;
+        Ok(TrainSummary { epochs, final_test_err, steps: self.steps })
+    }
+}
+
+/// Load datasets for a run config (with paper preprocessing where enabled).
+pub fn load_datasets(run: &RunConfig) -> Result<(Arc<Dataset>, Dataset)> {
+    let mut sm = SplitMix64::new(run.seed);
+    let train_seed = sm.next_u64();
+    let test_seed = sm.next_u64();
+    let mut train = Dataset::synthesize(&run.dataset, run.train_size, train_seed)?;
+    let mut test = Dataset::synthesize(&run.dataset, run.test_size, test_seed)?;
+    if run.zca {
+        let dim = train.image_dim();
+        // ZCA is exact up to `cap` features; CIFAR's 3072 would need a
+        // 3072^2 eigendecomposition (minutes on 1 core), so the default cap
+        // keeps GCN-only beyond 1024 (recorded in EXPERIMENTS.md).
+        let cap = 1024;
+        let n = train.len();
+        let w = crate::data::zca::gcn_zca(&mut train.images, n, dim, 1e-2, cap, run.seed)?;
+        crate::data::zca::gcn(&mut test.images, dim, 1e-4);
+        if let Some(w) = w {
+            let nt = test.len();
+            w.apply(&mut test.images, nt);
+        }
+    }
+    Ok((Arc::new(train), test))
+}

@@ -1,0 +1,159 @@
+//! Dataset substrate: synthetic MNIST/CIFAR-10/SVHN analogs + preprocessing.
+//!
+//! The sandbox has no network access and no copies of the real datasets, so
+//! per DESIGN.md sec. 5 this module synthesizes *structure-preserving*
+//! analogs with procedural generators:
+//!
+//! * [`synth::mnist`]   — 28x28 gray digit glyphs, rasterized from stroke
+//!   skeletons with per-sample affine jitter, stroke-width variation and
+//!   pixel noise (10 classes, permutation-invariant usage).
+//! * [`synth::cifar10`] — 3x32x32 color images: 10 procedural object
+//!   classes (textured blobs/gratings/gradients with class-specific
+//!   geometry + color statistics).
+//! * [`synth::svhn`]    — 32x32 color digits over cluttered backgrounds
+//!   with distractor digit fragments at the borders (harder MNIST, as in
+//!   the real SVHN).
+//!
+//! Preprocessing implements the paper's sec. 5.1.1 pipeline: global
+//! contrast normalization + ZCA whitening ([`zca`]), built on the in-repo
+//! Jacobi eigensolver.
+
+pub mod pipeline;
+pub mod synth;
+pub mod zca;
+
+use crate::error::{BdnnError, Result};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// An in-memory labeled dataset. Images are row-major f32, either flattened
+/// (MLP) or NHWC (CNN); `image_shape` excludes the batch axis.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub image_shape: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_dim(&self) -> usize {
+        self.image_shape.iter().product()
+    }
+
+    /// Borrow image i as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let d = self.image_dim();
+        &self.images[i * d..(i + 1) * d]
+    }
+
+    /// Copy rows `idx` into a dense batch tensor of shape (n, *image_shape).
+    pub fn gather(&self, idx: &[usize]) -> (Tensor, Vec<i32>) {
+        let d = self.image_dim();
+        let mut out = Vec::with_capacity(idx.len() * d);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            out.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        let mut shape = vec![idx.len()];
+        shape.extend(&self.image_shape);
+        (Tensor::new(&shape, out), labels)
+    }
+
+    /// Deterministic train/test generation for a dataset family.
+    pub fn synthesize(family: &str, n: usize, seed: u64) -> Result<Self> {
+        match family {
+            "mnist" => Ok(synth::mnist(n, seed)),
+            "cifar10" => Ok(synth::cifar10(n, seed)),
+            "svhn" => Ok(synth::svhn(n, seed)),
+            other => Err(BdnnError::Data(format!("unknown dataset family '{other}'"))),
+        }
+    }
+}
+
+/// Epoch-shuffled minibatch index iterator (drops the ragged tail so batch
+/// shapes stay static for the AOT executables).
+pub struct BatchIter {
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: &mut Pcg32) -> Self {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Self { order, batch, pos: 0 }
+    }
+
+    pub fn batches_per_epoch(n: usize, batch: usize) -> usize {
+        n / batch
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let out = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesize_families() {
+        for fam in ["mnist", "cifar10", "svhn"] {
+            let ds = Dataset::synthesize(fam, 64, 1).unwrap();
+            assert_eq!(ds.len(), 64);
+            assert_eq!(ds.classes, 10);
+            assert!(ds.labels.iter().all(|&l| (0..10).contains(&l)));
+        }
+        assert!(Dataset::synthesize("imagenet", 8, 1).is_err());
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let ds = Dataset::synthesize("mnist", 32, 2).unwrap();
+        let (x, y) = ds.gather(&[0, 5, 7]);
+        assert_eq!(x.shape(), &[3, 784]);
+        assert_eq!(y.len(), 3);
+        assert_eq!(&x.data()[784..1568], ds.image(5));
+    }
+
+    #[test]
+    fn batch_iter_partitions_epoch() {
+        let mut rng = Pcg32::seeded(0);
+        let batches: Vec<_> = BatchIter::new(103, 10, &mut rng).collect();
+        assert_eq!(batches.len(), 10); // tail dropped
+        let mut seen: Vec<usize> = batches.concat();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 100); // no repeats within an epoch
+    }
+
+    #[test]
+    fn batch_iter_reshuffles_with_seed() {
+        let mut r1 = Pcg32::seeded(1);
+        let mut r2 = Pcg32::seeded(2);
+        let b1: Vec<_> = BatchIter::new(50, 10, &mut r1).collect();
+        let b2: Vec<_> = BatchIter::new(50, 10, &mut r2).collect();
+        assert_ne!(b1, b2);
+    }
+}

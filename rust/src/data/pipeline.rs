@@ -1,0 +1,169 @@
+//! Prefetching data pipeline: a producer thread synthesizes/gathers batch
+//! chunks ahead of the training loop, with bounded-channel backpressure.
+//!
+//! The trainer consumes `Chunk`s of K minibatches (matching the AOT train
+//! executable's `k_steps`); while PJRT executes chunk t, the producer is
+//! already gathering chunk t+1 — classic two-stage pipeline. On the 1-core
+//! testbed this mostly hides the gather/copy cost, not synthesis (which is
+//! done once up front).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::{BatchIter, Dataset};
+use crate::util::Pcg32;
+
+/// K minibatches, densely packed for the train executable:
+/// xs: (k, batch, image_dim) row-major, ys: (k, batch).
+pub struct Chunk {
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    pub k: usize,
+    pub batch: usize,
+    pub epoch: usize,
+}
+
+/// Handle to the producer thread.
+pub struct Prefetcher {
+    rx: Receiver<Chunk>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn a producer generating `epochs` epochs of chunks. `depth` bounds
+    /// how many chunks may be in flight (backpressure).
+    pub fn spawn(
+        ds: Arc<Dataset>,
+        k_steps: usize,
+        batch: usize,
+        epochs: usize,
+        seed: u64,
+        depth: usize,
+    ) -> Self {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            let dim = ds.image_dim();
+            for epoch in 0..epochs {
+                let mut rng = Pcg32::new(seed, epoch as u64 + 1);
+                let mut iter = BatchIter::new(ds.len(), batch, &mut rng);
+                'outer: loop {
+                    let mut xs = Vec::with_capacity(k_steps * batch * dim);
+                    let mut ys = Vec::with_capacity(k_steps * batch);
+                    for _ in 0..k_steps {
+                        match iter.next() {
+                            Some(idx) => {
+                                for &i in &idx {
+                                    xs.extend_from_slice(ds.image(i));
+                                    ys.push(ds.labels[i]);
+                                }
+                            }
+                            None => break 'outer, // ragged tail dropped
+                        }
+                    }
+                    let chunk = Chunk { xs, ys, k: k_steps, batch, epoch };
+                    if tx.send(chunk).is_err() {
+                        return; // consumer hung up
+                    }
+                }
+            }
+        });
+        Self { rx, handle: Some(handle) }
+    }
+
+    /// Blocking receive of the next chunk (None when all epochs are done).
+    pub fn next_chunk(&self) -> Option<Chunk> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // drain so the producer unblocks, then join
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
+            let _ = h.join();
+        }
+    }
+}
+
+/// Chunks per epoch for a dataset/batch/k combination.
+pub fn chunks_per_epoch(n: usize, batch: usize, k_steps: usize) -> usize {
+    (n / batch) / k_steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ds(n: usize) -> Arc<Dataset> {
+        Arc::new(Dataset {
+            images: (0..n * 4).map(|i| i as f32).collect(),
+            labels: (0..n).map(|i| (i % 10) as i32).collect(),
+            image_shape: vec![4],
+            classes: 10,
+        })
+    }
+
+    #[test]
+    fn produces_expected_chunk_count() {
+        let ds = tiny_ds(100);
+        let pf = Prefetcher::spawn(ds, 2, 10, 3, 7, 2);
+        let mut count = 0;
+        while let Some(c) = pf.next_chunk() {
+            assert_eq!(c.xs.len(), 2 * 10 * 4);
+            assert_eq!(c.ys.len(), 20);
+            count += 1;
+        }
+        // 100/10 = 10 batches -> 5 chunks per epoch, 3 epochs
+        assert_eq!(count, 15);
+    }
+
+    #[test]
+    fn chunks_cover_epoch_without_repeats() {
+        let ds = tiny_ds(40);
+        let pf = Prefetcher::spawn(ds.clone(), 2, 10, 1, 3, 2);
+        let mut seen = Vec::new();
+        while let Some(c) = pf.next_chunk() {
+            // recover indices from the image payload (image = [4i, ...])
+            for row in c.xs.chunks_exact(4) {
+                seen.push((row[0] / 4.0) as usize);
+            }
+        }
+        seen.sort_unstable();
+        let uniq: Vec<_> = {
+            let mut s = seen.clone();
+            s.dedup();
+            s
+        };
+        assert_eq!(seen.len(), 40);
+        assert_eq!(uniq.len(), 40);
+    }
+
+    #[test]
+    fn epoch_order_differs() {
+        let ds = tiny_ds(40);
+        let pf = Prefetcher::spawn(ds, 4, 10, 2, 11, 4);
+        let mut epochs: Vec<Vec<i32>> = vec![vec![]; 2];
+        while let Some(c) = pf.next_chunk() {
+            epochs[c.epoch].extend(&c.ys);
+        }
+        assert_eq!(epochs[0].len(), 40);
+        assert_ne!(epochs[0], epochs[1]);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let ds = tiny_ds(1000);
+        let pf = Prefetcher::spawn(ds, 1, 10, 50, 1, 2);
+        let _first = pf.next_chunk();
+        drop(pf); // must join cleanly while producer is mid-stream
+    }
+
+    #[test]
+    fn chunks_per_epoch_math() {
+        assert_eq!(chunks_per_epoch(1000, 100, 4), 2);
+        assert_eq!(chunks_per_epoch(100, 10, 3), 3);
+    }
+}

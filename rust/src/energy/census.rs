@@ -1,0 +1,200 @@
+//! Static op / memory census of a model architecture.
+//!
+//! Counts, per inference sample: MACs per layer, neuron (activation) counts
+//! and weight counts — the inputs to the sec. 4.1 energy comparison. The
+//! census follows the architecture descriptor parsed from the manifest, so
+//! it prices exactly the network that was trained.
+
+use crate::config::ModelArch;
+
+/// One layer's counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerCensus {
+    pub name: String,
+    /// multiply-accumulate ops per sample
+    pub macs: u64,
+    /// output activations per sample (the paper's "neurons"; this is what
+    /// binarizing activations shrinks by 32x)
+    pub activations: u64,
+    /// weight parameters
+    pub weights: u64,
+}
+
+/// Whole-model census.
+#[derive(Clone, Debug)]
+pub struct ModelCensus {
+    pub layers: Vec<LayerCensus>,
+}
+
+impl ModelCensus {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_activations(&self) -> u64 {
+        self.layers.iter().map(|l| l.activations).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights).sum()
+    }
+
+    /// Paper sec. 1: CNNs have far more neurons than weights — the ratio
+    /// that makes neuron binarization matter.
+    pub fn activation_weight_ratio(&self) -> f64 {
+        self.total_activations() as f64 / self.total_weights() as f64
+    }
+}
+
+/// Census for an architecture (per sample, i.e. batch = 1).
+pub fn census_for_arch(arch: &ModelArch) -> ModelCensus {
+    let mut layers = Vec::new();
+    let mut li = 0usize;
+    if arch.is_cnn() {
+        let (mut h, mut w) = (arch.in_shape[0] as u64, arch.in_shape[1] as u64);
+        let mut cin = arch.in_shape[2] as u64;
+        for &m in &arch.maps {
+            let m = m as u64;
+            for rep in 0..2 {
+                // SAME conv: Ho*Wo = H*W at stride 1
+                let macs = h * w * 9 * cin * m;
+                let weights = 9 * cin * m;
+                if rep == 1 {
+                    h /= 2;
+                    w /= 2;
+                }
+                layers.push(LayerCensus {
+                    name: format!("conv{li}"),
+                    macs,
+                    activations: h * w * m,
+                    weights,
+                });
+                cin = m;
+                li += 1;
+            }
+        }
+        let mut d = h * w * cin;
+        for &f in &arch.fc {
+            let f = f as u64;
+            layers.push(LayerCensus {
+                name: format!("fc{li}"),
+                macs: d * f,
+                activations: f,
+                weights: d * f,
+            });
+            d = f;
+            li += 1;
+        }
+        layers.push(LayerCensus {
+            name: format!("out{li}"),
+            macs: d * arch.classes as u64,
+            activations: arch.classes as u64,
+            weights: d * arch.classes as u64,
+        });
+    } else {
+        let mut d = arch.in_dim() as u64;
+        for &hdim in &arch.hidden {
+            let hdim = hdim as u64;
+            layers.push(LayerCensus {
+                name: format!("fc{li}"),
+                macs: d * hdim,
+                activations: hdim,
+                weights: d * hdim,
+            });
+            d = hdim;
+            li += 1;
+        }
+        layers.push(LayerCensus {
+            name: format!("out{li}"),
+            macs: d * arch.classes as u64,
+            activations: arch.classes as u64,
+            weights: d * arch.classes as u64,
+        });
+    }
+    ModelCensus { layers }
+}
+
+/// The paper-scale CIFAR-10 architecture (128/256/512 maps, 1024/1024 FC) —
+/// used by the Table-1/2 reports so the numbers refer to the network the
+/// paper actually describes.
+pub fn paper_cifar_arch() -> ModelArch {
+    ModelArch {
+        name: "cifar_cnn_paper".into(),
+        arch: "cnn".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![32, 32, 3],
+        classes: 10,
+        hidden: vec![],
+        maps: vec![128, 256, 512],
+        fc: vec![1024, 1024],
+        bn: "shift".into(),
+        batch: 100,
+        eval_batch: 100,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    }
+}
+
+/// The paper's MNIST MLP (3 x 1024 hidden).
+pub fn paper_mnist_arch() -> ModelArch {
+    ModelArch {
+        name: "mnist_mlp_paper".into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![784],
+        classes: 10,
+        hidden: vec![1024, 1024, 1024],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 200,
+        eval_batch: 200,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_census_counts() {
+        let c = census_for_arch(&paper_mnist_arch());
+        // 784*1024 + 1024*1024*2 + 1024*10
+        assert_eq!(c.total_weights(), 784 * 1024 + 1024 * 1024 * 2 + 1024 * 10);
+        assert_eq!(c.total_macs(), c.total_weights()); // dense: macs == weights
+        assert_eq!(c.total_activations(), 1024 * 3 + 10);
+    }
+
+    #[test]
+    fn cnn_first_layer_matches_paper_text() {
+        // paper sec. 3.3: first conv layer turns 3x32x32 into 128x32x32
+        // (they quote 28x28 for VALID; we use SAME) — activations per sample
+        // are two orders of magnitude above its weights.
+        let c = census_for_arch(&paper_cifar_arch());
+        let l0 = &c.layers[0];
+        assert_eq!(l0.weights, 9 * 3 * 128);
+        assert_eq!(l0.activations, 32 * 32 * 128);
+        assert!(l0.activations as f64 / l0.weights as f64 > 30.0);
+    }
+
+    #[test]
+    fn cnn_neuron_to_weight_ratio_is_large_early() {
+        let c = census_for_arch(&paper_cifar_arch());
+        // early conv layers are activation-dominated (paper secs. 1, 3.3,
+        // 4.1: "CNNs use massive amount of neurons (much more than weight
+        // parameters)") while the FC trunk is weight-dominated.
+        assert!(c.layers[0].activations > 30 * c.layers[0].weights);
+        let fc = c.layers.iter().find(|l| l.name.starts_with("fc")).unwrap();
+        assert!(fc.weights > fc.activations);
+    }
+
+    #[test]
+    fn pooling_halves_spatial_dims() {
+        let c = census_for_arch(&paper_cifar_arch());
+        // stage outputs: 32x32x128 -> 16x16x128 after pool (layer idx 1)
+        assert_eq!(c.layers[0].activations, 32 * 32 * 128);
+        assert_eq!(c.layers[1].activations, 16 * 16 * 128);
+    }
+}

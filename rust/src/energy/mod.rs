@@ -1,0 +1,19 @@
+//! Energy & complexity cost model (paper sec. 4, Tables 1-2).
+//!
+//! The paper's efficiency argument is analytical: it prices every operation
+//! with Horowitz's ISSCC-2014 45nm numbers (Table 1: MUL vs ADD at several
+//! widths; Table 2: cache access by size) and counts the MACs a network
+//! performs. This module reproduces that model exactly:
+//!
+//! * [`tables`] — the pJ constants (paper Tables 1 & 2).
+//! * [`census`] — static MAC / memory-traffic counters per model arch.
+//! * [`report`] — the sec. 4.1 comparison: float DNN vs BinaryConnect vs
+//!   BBP, reproducing the ">= two orders of magnitude" headline.
+
+pub mod census;
+pub mod report;
+pub mod tables;
+
+pub use census::{census_for_arch, LayerCensus, ModelCensus};
+pub use report::{energy_report, EnergyBreakdown, EnergyReport};
+pub use tables::{MemoryEnergy, OpEnergy, MAC_POWER, MEMORY_POWER};

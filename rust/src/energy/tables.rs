@@ -1,0 +1,93 @@
+//! The pJ constants of paper Tables 1 & 2 (Horowitz, ISSCC 2014, 45nm).
+
+/// Energy per arithmetic op, picojoules (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpEnergy {
+    pub name: &'static str,
+    pub mul_pj: f64,
+    pub add_pj: f64,
+}
+
+/// Paper Table 1 rows, verbatim.
+pub const MAC_POWER: [OpEnergy; 4] = [
+    OpEnergy { name: "8bit Integer", mul_pj: 0.2, add_pj: 0.03 },
+    OpEnergy { name: "32bit Integer", mul_pj: 3.1, add_pj: 0.1 },
+    OpEnergy { name: "16bit Floating Point", mul_pj: 1.1, add_pj: 0.4 },
+    OpEnergy { name: "32bit Floating Point", mul_pj: 3.7, add_pj: 0.9 },
+];
+
+/// Energy per 64-bit cache access, picojoules (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryEnergy {
+    pub size: &'static str,
+    pub access_pj: f64,
+}
+
+/// Paper Table 2 rows, verbatim.
+pub const MEMORY_POWER: [MemoryEnergy; 3] = [
+    MemoryEnergy { size: "8K", access_pj: 10.0 },
+    MemoryEnergy { size: "32K", access_pj: 20.0 },
+    MemoryEnergy { size: "1M", access_pj: 100.0 },
+];
+
+/// The paper's basic energy unit: one 8-bit integer add = 0.03 pJ
+/// (sec. 4, "this will serve as our basic energy unit").
+pub const BASE_ADD_8BIT_PJ: f64 = 0.03;
+
+/// Paper sec. 4: integer-add energy is assumed linear in bit width, so a
+/// 2-bit add (the ±1 accumulate) costs a quarter of the 8-bit unit.
+pub const ADD_2BIT_PJ: f64 = BASE_ADD_8BIT_PJ / 4.0;
+
+/// One float-32 MAC: one multiply + one add (Table 1, bottom row).
+pub const MAC_FP32_PJ: f64 = 3.7 + 0.9;
+
+/// One float-16 MAC.
+pub const MAC_FP16_PJ: f64 = 1.1 + 0.4;
+
+/// One BinaryConnect MAC at test time: the multiply disappears (±1 weight),
+/// leaving a float add (sec. 4.1: "replaced approximately two thirds of the
+/// multiplication operations with addition").
+pub const MAC_BINARYCONNECT_PJ: f64 = 0.9;
+
+/// One BBP MAC: XNOR + 2-bit accumulate (sec. 4.1).
+pub const MAC_BBP_PJ: f64 = ADD_2BIT_PJ;
+
+/// Lookup Table-1 row by name.
+pub fn op_energy(name: &str) -> Option<OpEnergy> {
+    MAC_POWER.iter().copied().find(|e| e.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_match_paper() {
+        assert_eq!(op_energy("8bit Integer").unwrap().add_pj, 0.03);
+        assert_eq!(op_energy("32bit Floating Point").unwrap().mul_pj, 3.7);
+        assert_eq!(op_energy("16bit Floating Point").unwrap().mul_pj, 1.1);
+        assert!(op_energy("4bit Imaginary").is_none());
+    }
+
+    #[test]
+    fn table2_values_match_paper() {
+        assert_eq!(MEMORY_POWER[0].access_pj, 10.0);
+        assert_eq!(MEMORY_POWER[2].access_pj, 100.0);
+    }
+
+    #[test]
+    fn bbp_mac_is_two_orders_below_fp32() {
+        // the headline of sec. 4.1
+        let ratio = MAC_FP32_PJ / MAC_BBP_PJ;
+        assert!(ratio >= 100.0, "ratio {ratio}");
+        // and at least an order of magnitude under fp16 adders
+        assert!(MAC_FP16_PJ / MAC_BBP_PJ >= 100.0);
+    }
+
+    #[test]
+    fn binaryconnect_halves_ish_fp32() {
+        // sec. 4.1: "reducing the energy demand by roughly 2"
+        let ratio = MAC_FP32_PJ / MAC_BINARYCONNECT_PJ;
+        assert!(ratio > 2.0 && ratio < 10.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Unified error type for the bdnn crate.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum BdnnError {
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, BdnnError>;

@@ -1,0 +1,375 @@
+//! Individual experiment generators (all but Table 3, which has its own
+//! module because it orchestrates multiple training runs).
+
+
+
+use crate::analysis::{convergence, featuremaps, histogram::WeightHistogram, kernels};
+use crate::checkpoint::{self, Params};
+use crate::config::{ModelArch, RunConfig};
+use crate::coordinator::{load_datasets, MetricsWriter, Trainer};
+use crate::data::Dataset;
+use crate::energy::{census_for_arch, energy_report, tables};
+use crate::error::{BdnnError, Result};
+use crate::report::Table;
+use crate::runtime::{Engine, HostTensor, Manifest};
+use crate::tensor::Tensor;
+
+/// Table 1: MAC power constants + what they imply per network.
+pub fn table1(artifacts_dir: &str) -> Result<String> {
+    let mut out = String::from("Table 1 — MAC power consumption (Horowitz 2014, 45nm)\n\n");
+    let mut t = Table::new(&["Operation", "MUL (pJ)", "ADD (pJ)"]);
+    for row in tables::MAC_POWER {
+        t.row(&[row.name.to_string(), format!("{}", row.mul_pj), format!("{}", row.add_pj)]);
+    }
+    out.push_str(&t.text());
+    out.push_str("\nPer-inference compute pricing (MACs x Table-1 rates):\n\n");
+    let mut t2 = Table::new(&["network", "MACs", "fp32 (uJ)", "fp16 (uJ)", "BBP xnor-popcnt (uJ)", "fp32/BBP"]);
+    for arch in experiment_archs(artifacts_dir)? {
+        let c = census_for_arch(&arch);
+        let macs = c.total_macs();
+        let fp32 = macs as f64 * tables::MAC_FP32_PJ * 1e-6;
+        let fp16 = macs as f64 * tables::MAC_FP16_PJ * 1e-6;
+        let bbp = macs as f64 * tables::MAC_BBP_PJ * 1e-6;
+        t2.row(&[
+            arch.name.clone(),
+            format!("{macs}"),
+            format!("{fp32:.2}"),
+            format!("{fp16:.2}"),
+            format!("{bbp:.4}"),
+            format!("{:.0}x", fp32 / bbp),
+        ]);
+    }
+    out.push_str(&t2.text());
+    Ok(out)
+}
+
+/// Table 2: memory power constants + activation/weight traffic pricing.
+pub fn table2(artifacts_dir: &str) -> Result<String> {
+    let mut out = String::from("Table 2 — memory power consumption (Horowitz 2014)\n\n");
+    let mut t = Table::new(&["Memory size", "64bit access (pJ)"]);
+    for row in tables::MEMORY_POWER {
+        t.row(&[row.size.to_string(), format!("{}", row.access_pj)]);
+    }
+    out.push_str(&t.text());
+    out.push_str("\nPer-inference memory traffic (1M-cache rate):\n\n");
+    let mut t2 = Table::new(&[
+        "network",
+        "activations",
+        "weights",
+        "f32 traffic (uJ)",
+        "1-bit traffic (uJ)",
+        "reduction",
+    ]);
+    for arch in experiment_archs(artifacts_dir)? {
+        let c = census_for_arch(&arch);
+        let rep = energy_report(&arch, &c);
+        t2.row(&[
+            arch.name.clone(),
+            format!("{}", c.total_activations()),
+            format!("{}", c.total_weights()),
+            format!("{:.3}", rep.float32.memory_uj),
+            format!("{:.3}", rep.bbp.memory_uj),
+            format!("{:.1}x", rep.memory_reduction()),
+        ]);
+    }
+    out.push_str(&t2.text());
+    Ok(out)
+}
+
+/// sec. 4.1: full energy comparison across the three regimes.
+pub fn energy(artifacts_dir: &str) -> Result<String> {
+    let mut out = String::from("sec. 4.1 — energy per inference (compute + memory)\n\n");
+    let mut t = Table::new(&[
+        "network",
+        "fp32 (uJ)",
+        "BinaryConnect (uJ)",
+        "BBP (uJ)",
+        "compute redn",
+        "total redn",
+    ]);
+    for arch in experiment_archs(artifacts_dir)? {
+        let rep = energy_report(&arch, &census_for_arch(&arch));
+        t.row(&[
+            arch.name.clone(),
+            format!("{:.2}", rep.float32.total_uj()),
+            format!("{:.2}", rep.binaryconnect.total_uj()),
+            format!("{:.3}", rep.bbp.total_uj()),
+            format!("{:.0}x", rep.compute_reduction()),
+            format!("{:.0}x", rep.total_reduction()),
+        ]);
+    }
+    out.push_str(&t.text());
+    out.push_str(
+        "\npaper claim: BBP replaces every MAC with XNOR + 2-bit accumulate\n\
+         (0.0075 pJ vs 4.6 pJ for a fp32 MAC) => >= two orders of magnitude\n\
+         compute-energy reduction; activation/weight traffic shrinks 32x.\n",
+    );
+    Ok(out)
+}
+
+/// Networks the energy tables price: the paper-scale archs + any archs in
+/// the local manifest.
+fn experiment_archs(artifacts_dir: &str) -> Result<Vec<ModelArch>> {
+    let mut archs = vec![
+        crate::energy::census::paper_mnist_arch(),
+        crate::energy::census::paper_cifar_arch(),
+    ];
+    if let Ok(man) = Manifest::load(artifacts_dir) {
+        for (name, spec) in &man.artifacts {
+            if name.ends_with("_train") && !name.contains("fast") {
+                if let Some(cfg) = &spec.config {
+                    archs.push(cfg.clone());
+                }
+            }
+        }
+    }
+    Ok(archs)
+}
+
+/// Options shared by the checkpoint-consuming figures.
+pub struct FigOpts {
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub checkpoint: Option<String>,
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            checkpoint: None,
+            quick: true,
+            seed: 42,
+        }
+    }
+}
+
+/// Get a trained CNN checkpoint: load the provided one, or train a quick
+/// run of `cifar_cnn_fast` on synthetic CIFAR.
+pub fn trained_cnn(opts: &FigOpts) -> Result<(Params, ModelArch, RunConfig)> {
+    if let Some(path) = &opts.checkpoint {
+        let (params, meta) = checkpoint::load(path)?;
+        let man = Manifest::load(&opts.artifacts_dir)?;
+        let arch = man
+            .get(&format!("{}_train", meta.arch))?
+            .config
+            .clone()
+            .ok_or_else(|| BdnnError::Manifest(format!("{}: no config", meta.arch)))?;
+        let dataset = if arch.is_cnn() { "cifar10" } else { "mnist" };
+        let run = RunConfig {
+            artifact: meta.arch,
+            dataset: dataset.into(),
+            ..RunConfig::default()
+        };
+        return Ok((params, arch, run));
+    }
+    let run = RunConfig {
+        name: "fig-cnn".into(),
+        artifact: "cifar_cnn_fast".into(),
+        dataset: "cifar10".into(),
+        epochs: if opts.quick { 3 } else { 30 },
+        train_size: if opts.quick { 2000 } else { 10000 },
+        test_size: if opts.quick { 500 } else { 2000 },
+        seed: opts.seed,
+        artifacts_dir: opts.artifacts_dir.clone(),
+        out_dir: opts.out_dir.clone(),
+        ..RunConfig::default()
+    };
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::null())?;
+    let (train_ds, test_ds) = load_datasets(&run)?;
+    trainer.train(train_ds, &test_ds)?;
+    Ok((trainer.params(), trainer.arch().clone(), run))
+}
+
+/// Fig. 1: convergence curve of a CIFAR-analog training with LR shifting.
+pub fn fig1(opts: &FigOpts) -> Result<String> {
+    let run = RunConfig {
+        name: "fig1".into(),
+        artifact: "cifar_cnn_fast".into(),
+        dataset: "cifar10".into(),
+        // quick mode shifts every 4 epochs over 12 epochs so the Fig. 1
+        // "drop at every shift" shape is visible on the small budget
+        epochs: if opts.quick { 12 } else { 150 },
+        lr_shift_every: if opts.quick { 4 } else { 50 },
+        train_size: if opts.quick { 2000 } else { 20000 },
+        test_size: if opts.quick { 500 } else { 2000 },
+        seed: opts.seed,
+        artifacts_dir: opts.artifacts_dir.clone(),
+        out_dir: opts.out_dir.clone(),
+        ..RunConfig::default()
+    };
+    let metrics_path = format!("{}/{}/metrics.jsonl", run.out_dir, run.name);
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::to_file(&metrics_path, false)?)?;
+    let (train_ds, test_ds) = load_datasets(&run)?;
+    trainer.train(train_ds, &test_ds)?;
+
+    let text = std::fs::read_to_string(&metrics_path)?;
+    let recs = convergence::parse_jsonl(&text)?;
+    let csv_path = format!("{}/{}/fig1.csv", run.out_dir, run.name);
+    std::fs::write(&csv_path, convergence::to_csv(&recs))?;
+
+    let mut out = String::from("Fig. 1 — convergence with power-of-2 LR shifting\n\n");
+    let loss: Vec<(usize, f64)> = recs.iter().map(|r| (r.epoch, r.train_loss)).collect();
+    out.push_str(&convergence::ascii_plot(&loss, 12, 60, "train loss"));
+    let err: Vec<(usize, f64)> = recs
+        .iter()
+        .filter_map(|r| r.test_err.map(|e| (r.epoch, e)))
+        .collect();
+    out.push_str(&convergence::ascii_plot(&err, 12, 60, "test error"));
+    out.push_str(&format!("LR shifts at epochs: {:?}\n", convergence::lr_shift_epochs(&recs)));
+    out.push_str(&format!("series written to {csv_path}\n"));
+    Ok(out)
+}
+
+/// Fig. 2: binary kernel repetition census of a trained CNN.
+pub fn fig2(opts: &FigOpts) -> Result<String> {
+    let (params, arch, _) = trained_cnn(opts)?;
+    let mut out = String::from("Fig. 2 / sec. 4.2 — binary kernel repetitions\n\n");
+    let mut t = Table::new(&[
+        "layer",
+        "kernels",
+        "unique",
+        "unique frac",
+        "unique w/ inverse",
+        "op reduction",
+    ]);
+    let mut stats = Vec::new();
+    let n_conv = arch.maps.len() * 2;
+    for li in 0..n_conv {
+        let name = format!("L{li:02}_W");
+        let w = params
+            .get(&name)
+            .ok_or_else(|| BdnnError::Checkpoint(format!("missing {name}")))?;
+        let s = kernels::layer_stats(&format!("conv{li}"), w);
+        t.row(&[
+            s.layer.clone(),
+            format!("{}", s.total),
+            format!("{}", s.unique),
+            format!("{:.1}%", 100.0 * s.unique as f64 / s.total as f64),
+            format!("{}", s.unique_with_inverse),
+            format!("{:.2}x", s.op_reduction),
+        ]);
+        stats.push(s);
+    }
+    out.push_str(&t.text());
+    out.push_str(&format!(
+        "\naverage unique fraction: {:.1}% (paper: ~37% on its 128-512 map net)\n\n",
+        100.0 * kernels::average_unique_fraction(&stats)
+    ));
+    out.push_str("sample conv1 kernels:\n");
+    out.push_str(&kernels::render_kernels_ascii(&params["L00_W"], 6));
+    Ok(out)
+}
+
+/// Fig. 3: binarized first-layer feature maps via the features artifact.
+pub fn fig3(opts: &FigOpts) -> Result<String> {
+    let (params, arch, run) = trained_cnn(opts)?;
+    let mut engine = Engine::cpu(&opts.artifacts_dir)?;
+    let feat_exe = engine.load(&format!("{}_features", arch.name))?;
+    let spec = feat_exe.spec().clone();
+    // assemble inputs: params by name, then a batch of images
+    let ds = Dataset::synthesize(&run.dataset, arch.eval_batch, opts.seed ^ 0xF16)?;
+    let idx: Vec<usize> = (0..arch.eval_batch).collect();
+    let (x, _) = ds.gather(&idx);
+    let mut args: Vec<HostTensor> = Vec::new();
+    for s in &spec.inputs {
+        if s.is_role("data_x") {
+            args.push(HostTensor::F32(x.data().to_vec(), s.shape.clone()));
+        } else {
+            let t = params
+                .get(&s.name)
+                .ok_or_else(|| BdnnError::Checkpoint(format!("missing {}", s.name)))?;
+            args.push(HostTensor::F32(t.data().to_vec(), s.shape.clone()));
+        }
+    }
+    let outs = feat_exe.run(&args)?;
+    let fshape = spec.outputs[0].shape.clone();
+    let features = Tensor::new(&fshape, outs[0].as_f32()?.to_vec());
+
+    let st = featuremaps::stats(&features);
+    let mut out = String::from("Fig. 3 — binary feature maps (conv1)\n\n");
+    out.push_str(&format!(
+        "feature values: {}  f32 bytes: {}  packed bytes: {}  bandwidth reduction: {:.0}x\n",
+        st.values,
+        st.f32_bytes,
+        st.packed_bytes,
+        st.bandwidth_reduction()
+    ));
+    out.push_str(&format!("positive fraction: {:.3}\n\n", st.positive_fraction));
+    for ch in 0..3.min(fshape[3]) {
+        out.push_str(&format!("sample 0, channel {ch}:\n"));
+        out.push_str(&featuremaps::render_channel_ascii(&features, 0, ch));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Fig. 4: full-precision weight histograms + saturation fractions.
+pub fn fig4(opts: &FigOpts) -> Result<String> {
+    let (params, arch, _) = trained_cnn(opts)?;
+    let mut out = String::from("Fig. 4 — stored full-precision weight distributions\n\n");
+    let first = &params["L00_W"];
+    // last *hidden* layer index: conv trunk + fc trunk for CNNs, hidden
+    // trunk for MLPs (the layer before the L2-SVM output)
+    // NOTE: MLP configs still carry the dataclass-default `maps`; only
+    // count the conv trunk for actual CNNs.
+    let n_conv = if arch.is_cnn() { arch.maps.len() * 2 } else { 0 };
+    let trunk_len = if arch.is_cnn() { arch.fc.len() } else { arch.hidden.len() };
+    let last_hidden_idx = (n_conv + trunk_len).saturating_sub(1);
+    let last_fc = &params[&format!("L{last_hidden_idx:02}_W")];
+
+    let first_label = if arch.is_cnn() { "first conv layer" } else { "first FC layer" };
+    for (name, w, paper) in [
+        (first_label, first, "~90% (conv)"),
+        ("last hidden FC layer", last_fc, "~75%"),
+    ] {
+        let h = WeightHistogram::compute(w.data(), 24);
+        out.push_str(&format!(
+            "{name}: n={} saturation={:.1}% (paper: {paper})\n",
+            h.n,
+            100.0 * h.saturation_fraction()
+        ));
+        out.push_str(&h.ascii(48));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Discussion-section claim: >=16x memory reduction of the deployed model.
+pub fn memory(opts: &FigOpts) -> Result<String> {
+    let (params, _arch, run) = trained_cnn(opts)?;
+    let packed_path = format!("{}/{}/packed.bbin", run.out_dir, run.name);
+    std::fs::create_dir_all(format!("{}/{}", run.out_dir, run.name)).ok();
+    let packed = checkpoint::export_packed(&packed_path, &params)?;
+    let full = checkpoint::f32_bytes(&params);
+    let mut out = String::from("Discussion — deployed model memory footprint\n\n");
+    let mut t = Table::new(&["representation", "bytes", "reduction"]);
+    t.row(&["f32 checkpoint".into(), format!("{full}"), "1x".into()]);
+    t.row(&[
+        "1-bit packed weights (+f32 BN)".into(),
+        format!("{packed}"),
+        format!("{:.1}x", full as f64 / packed as f64),
+    ]);
+    out.push_str(&t.text());
+    out.push_str("\npaper claim: >= 16x (fp16 -> 1 bit); f32 -> 1 bit gives ~32x on weights.\n");
+    Ok(out)
+}
+
+/// Manifest listing (`bdnn info`).
+pub fn info(artifacts_dir: &str) -> Result<String> {
+    let man = Manifest::load(artifacts_dir)?;
+    let mut t = Table::new(&["artifact", "kind", "inputs", "outputs", "file"]);
+    for (name, spec) in &man.artifacts {
+        t.row(&[
+            name.clone(),
+            spec.kind.clone(),
+            format!("{}", spec.inputs.len()),
+            format!("{}", spec.outputs.len()),
+            spec.file.file_name().unwrap_or_default().to_string_lossy().into_owned(),
+        ]);
+    }
+    Ok(t.text())
+}

@@ -1,0 +1,23 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (`bdnn exp <id>`). Each function returns the rendered report text and
+//! writes machine-readable artifacts next to the run outputs.
+//!
+//! | id     | paper artifact                          |
+//! |--------|------------------------------------------|
+//! | table1 | MAC power constants + per-network pricing|
+//! | table2 | memory power constants + traffic pricing |
+//! | energy | sec. 4.1 float vs BinaryConnect vs BBP   |
+//! | table3 | test-error comparison across modes       |
+//! | fig1   | convergence curve with LR-shift drops    |
+//! | fig2   | binary kernel census (~37% unique)       |
+//! | fig3   | binary feature maps + bandwidth          |
+//! | fig4   | weight histograms + saturation           |
+//! | memory | >=16x packed checkpoint reduction        |
+
+pub mod ablations;
+pub mod experiments;
+pub mod table3;
+
+pub use ablations::ablations;
+pub use experiments::*;
+pub use table3::{table3, Table3Opts};

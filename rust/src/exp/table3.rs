@@ -1,0 +1,157 @@
+//! Table 3: classification test error across binarization regimes.
+//!
+//! Trains the same architecture in three modes on each dataset analog:
+//!   * BDNN (our network)      — binary weights + neurons, train & test
+//!   * BinaryConnect           — binary weights, float neurons
+//!   * No reg (float baseline) — no binarization
+//!
+//! The paper's numbers (MNIST 1.4%/1.29%/1.3%, CIFAR-10 10.15%/9.9%/10.94%,
+//! SVHN 2.53%/2.44%/2.44%) are reproduced in *shape*: BDNN lands within a
+//! few points of the float baseline on the same data (see DESIGN.md sec. 4
+//! for the synthetic-data caveat). Runs use the `_fast` artifacts (pure-jnp
+//! forward, proven bit-identical to the Pallas kernels by
+//! python/tests/test_ops_equiv.py) so the full table fits the CPU budget.
+
+use crate::config::RunConfig;
+use crate::coordinator::{load_datasets, MetricsWriter, Trainer};
+use crate::error::Result;
+use crate::report::Table;
+
+#[derive(Clone, Debug)]
+pub struct Table3Opts {
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub quick: bool,
+    pub seed: u64,
+    /// dataset families to include
+    pub datasets: Vec<String>,
+}
+
+impl Default for Table3Opts {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            quick: true,
+            seed: 42,
+            datasets: vec!["mnist".into(), "cifar10".into(), "svhn".into()],
+        }
+    }
+}
+
+struct ModeSpec {
+    label: &'static str,
+    mlp_artifact: &'static str,
+    cnn_artifact: &'static str,
+}
+
+const MODES: [ModeSpec; 3] = [
+    ModeSpec {
+        label: "BDNN (binary weights+neurons, train+test)",
+        mlp_artifact: "mnist_mlp_fast",
+        cnn_artifact: "cifar_cnn_fast",
+    },
+    ModeSpec {
+        label: "BinaryConnect (binary weights only)",
+        mlp_artifact: "mnist_mlp_bc_fast",
+        cnn_artifact: "cifar_cnn_bc_fast",
+    },
+    ModeSpec {
+        label: "No reg (float baseline)",
+        mlp_artifact: "mnist_mlp_float_fast",
+        cnn_artifact: "cifar_cnn_float_fast",
+    },
+];
+
+/// Paper Table 3 values for the side-by-side print.
+fn paper_value(mode_idx: usize, dataset: &str) -> &'static str {
+    match (mode_idx, dataset) {
+        (0, "mnist") => "1.40%",
+        (0, "svhn") => "2.53%",
+        (0, "cifar10") => "10.15%",
+        (1, "mnist") => "1.29%",
+        (1, "svhn") => "2.44%",
+        (1, "cifar10") => "9.90%",
+        (2, "mnist") => "1.30%",
+        (2, "svhn") => "2.44%",
+        (2, "cifar10") => "10.94%",
+        _ => "-",
+    }
+}
+
+/// One training run; returns the final test error.
+pub fn run_one(
+    opts: &Table3Opts,
+    artifact: &str,
+    dataset: &str,
+    name: String,
+) -> Result<f64> {
+    let run = RunConfig {
+        name,
+        artifact: artifact.into(),
+        dataset: dataset.into(),
+        // conv datasets need a longer quick budget: binarized nets converge
+        // slower (the paper trains 500 epochs), and at <200 steps even the
+        // float baseline sits near chance on the SVHN analog
+        epochs: if opts.quick {
+            if dataset == "mnist" { 4 } else { 10 }
+        } else {
+            40
+        },
+        lr0: 0.0625,
+        lr_shift_every: if opts.quick { 4 } else { 50 },
+        seed: opts.seed,
+        train_size: if opts.quick {
+            if dataset == "mnist" { 4000 } else { 3000 }
+        } else if dataset == "svhn" {
+            20000
+        } else {
+            10000
+        },
+        test_size: if opts.quick { 1000 } else { 2000 },
+        artifacts_dir: opts.artifacts_dir.clone(),
+        out_dir: opts.out_dir.clone(),
+        checkpoint_every: 0,
+        eval_every: 0, // only final eval (eval_every=0 -> final-epoch eval)
+        zca: false,
+    };
+    let metrics_path = format!("{}/{}/metrics.jsonl", run.out_dir, run.name);
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::to_file(&metrics_path, false)?)?;
+    let (train_ds, test_ds) = load_datasets(&run)?;
+    let summary = trainer.train(train_ds, &test_ds)?;
+    Ok(summary.final_test_err)
+}
+
+/// The full Table 3 sweep.
+pub fn table3(opts: &Table3Opts) -> Result<String> {
+    let mut out = format!(
+        "Table 3 — classification test error ({} mode)\n\n",
+        if opts.quick { "quick" } else { "full" }
+    );
+    let mut headers: Vec<String> = vec!["regime".into()];
+    for d in &opts.datasets {
+        headers.push(format!("{d} (ours)"));
+        headers.push(format!("{d} (paper)"));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for (mi, mode) in MODES.iter().enumerate() {
+        let mut row = vec![mode.label.to_string()];
+        for dataset in &opts.datasets {
+            let artifact =
+                if dataset == "mnist" { mode.mlp_artifact } else { mode.cnn_artifact };
+            let name = format!("table3-{}-{}", dataset, mi);
+            let err = run_one(opts, artifact, dataset, name)?;
+            row.push(format!("{:.2}%", err * 100.0));
+            row.push(paper_value(mi, dataset).to_string());
+        }
+        t.row(&row);
+    }
+    out.push_str(&t.text());
+    out.push_str(
+        "\nshape expectations (DESIGN.md sec. 4): BDNN within a few points of\n\
+         the float baseline on the same synthetic data; BinaryConnect between.\n\
+         Absolute values are NOT comparable to the paper's (synthetic analogs).\n",
+    );
+    Ok(out)
+}

@@ -1,0 +1,30 @@
+//! # BDNN — Binarized Deep Neural Networks (Hubara, Soudry & El-Yaniv, 2016)
+//!
+//! Full-system reproduction: a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **L3 (this crate)** — coordinator: training orchestration over
+//!   AOT-compiled XLA graphs, the XNOR-popcount binary inference engine,
+//!   energy model, analysis suite, CLI.
+//! * **L2** — `python/compile/model.py`: BBP training graphs in JAX.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (binary GEMM,
+//!   binarization, shift-based batch norm).
+//!
+//! Python never runs at request time: `make artifacts` lowers the graphs to
+//! HLO text once; the `bdnn` binary loads them via PJRT (`runtime`).
+pub mod analysis;
+pub mod bitnet;
+pub mod benchkit;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod error;
+pub mod exp;
+pub mod proptest;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,320 @@
+//! `bdnn` — the launcher/CLI for the BDNN reproduction.
+//!
+//! Commands:
+//!   train   --config <toml> | [--artifact A --dataset D --epochs N ...]
+//!   eval    --checkpoint <path> [--dataset D --n N]
+//!   infer   --checkpoint <path> [--engine packed|float] [--n N]
+//!   exp     <table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory> [--quick|--full]
+//!   info    [--artifacts DIR]
+//!
+//! Run `bdnn help` for details. Python is never invoked here: artifacts
+//! must exist (`make artifacts`).
+
+use bdnn::bitnet::network::{forward_float, PackedNet};
+use bdnn::checkpoint;
+use bdnn::cli::Args;
+use bdnn::config::RunConfig;
+use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
+use bdnn::data::Dataset;
+use bdnn::error::Result;
+use bdnn::exp;
+use bdnn::runtime::Manifest;
+use bdnn::util::Timer;
+
+const HELP: &str = r#"bdnn — Binarized Deep Neural Networks (Hubara, Soudry & El-Yaniv, 2016)
+
+USAGE:
+  bdnn train  --config runs/mnist.toml
+  bdnn train  --artifact mnist_mlp_fast --dataset mnist --epochs 20
+              [--train-size N] [--test-size N] [--lr0 F] [--lr-shift-every N]
+              [--seed N] [--out-dir D] [--artifacts DIR] [--name S] [--zca]
+  bdnn eval   --checkpoint runs/x/final.bdnn [--dataset mnist] [--n 2000]
+  bdnn infer  --checkpoint runs/x/final.bdnn [--engine packed|float] [--n 256]
+  bdnn serve  --checkpoint runs/x/final.bdnn [--addr 127.0.0.1:7979]
+              [--max-batch 64] [--max-wait-ms 2]
+  bdnn exp    table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory
+              [--quick|--full] [--checkpoint P] [--datasets mnist,cifar10]
+  bdnn info   [--artifacts DIR]
+
+Artifacts are built once with `make artifacts` (python/jax AOT -> HLO text);
+this binary is self-contained afterwards.
+"#;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => {
+            let unknown = args.unknown_flags();
+            if !unknown.is_empty() {
+                eprintln!("warning: unused flags: {}", unknown.join(", "));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("eval") => cmd_eval(args),
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some("exp") => cmd_exp(args),
+        Some("info") => {
+            let dir = args.str_or("artifacts", "artifacts");
+            println!("{}", exp::info(&dir)?);
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cfg_err(e: String) -> bdnn::error::BdnnError {
+    bdnn::error::BdnnError::Config(e)
+}
+
+fn run_config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.str_opt("config") {
+        RunConfig::from_toml_file(path)?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(v) = args.str_opt("artifact") {
+        cfg.artifact = v.to_string();
+    }
+    if let Some(v) = args.str_opt("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = args.str_opt("name") {
+        cfg.name = v.to_string();
+    } else if args.str_opt("config").is_none() {
+        cfg.name = format!("{}-{}", cfg.artifact, cfg.dataset);
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs).map_err(cfg_err)?;
+    cfg.train_size = args.usize_or("train-size", cfg.train_size).map_err(cfg_err)?;
+    cfg.test_size = args.usize_or("test-size", cfg.test_size).map_err(cfg_err)?;
+    cfg.lr0 = args.f32_or("lr0", cfg.lr0).map_err(cfg_err)?;
+    cfg.lr_shift_every = args.usize_or("lr-shift-every", cfg.lr_shift_every).map_err(cfg_err)?;
+    cfg.seed = args.u64_or("seed", cfg.seed).map_err(cfg_err)?;
+    cfg.artifacts_dir = args.str_or("artifacts", &cfg.artifacts_dir);
+    cfg.out_dir = args.str_or("out-dir", &cfg.out_dir);
+    cfg.checkpoint_every =
+        args.usize_or("checkpoint-every", cfg.checkpoint_every).map_err(cfg_err)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every).map_err(cfg_err)?;
+    if args.flag("zca") {
+        cfg.zca = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let run = run_config_from_args(args)?;
+    let metrics_path = format!("{}/{}/metrics.jsonl", run.out_dir, run.name);
+    println!(
+        "training '{}' artifact={} dataset={} epochs={} (metrics -> {metrics_path})",
+        run.name, run.artifact, run.dataset, run.epochs
+    );
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::to_file(&metrics_path, true)?)?;
+    let (train_ds, test_ds) = load_datasets(&run)?;
+    let timer = Timer::start();
+    let summary = trainer.train(train_ds, &test_ds)?;
+    println!(
+        "done: {} steps in {:.1}s, final test error {:.2}%  (checkpoint: {}/{}/final.bdnn)",
+        summary.steps,
+        timer.secs(),
+        summary.final_test_err * 100.0,
+        run.out_dir,
+        run.name
+    );
+    Ok(())
+}
+
+fn load_checkpoint_arch(
+    args: &Args,
+) -> Result<(checkpoint::Params, bdnn::config::ModelArch, String)> {
+    let path = args
+        .str_opt("checkpoint")
+        .ok_or_else(|| cfg_err("--checkpoint is required".into()))?
+        .to_string();
+    let (params, meta) = checkpoint::load(&path)?;
+    let man = Manifest::load(args.str_or("artifacts", "artifacts"))?;
+    let arch = man
+        .get(&format!("{}_train", meta.arch))?
+        .config
+        .clone()
+        .ok_or_else(|| bdnn::error::BdnnError::Manifest(format!("{}: no config", meta.arch)))?;
+    Ok((params, arch, path))
+}
+
+fn dataset_for_arch(arch: &bdnn::config::ModelArch, args: &Args, n: usize) -> Result<Dataset> {
+    let default = if arch.is_cnn() { "cifar10" } else { "mnist" };
+    let family = args.str_or("dataset", default);
+    Dataset::synthesize(&family, n, args.u64_or("seed", 7).unwrap_or(7))
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (params, arch, path) = load_checkpoint_arch(args)?;
+    let n = args.usize_or("n", 2000).map_err(cfg_err)?;
+    let ds = dataset_for_arch(&arch, args, n)?;
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let (x, y) = ds.gather(&idx);
+    let logits = forward_float(&arch, &params, &x)?;
+    let wrong =
+        logits.argmax_rows().iter().zip(&y).filter(|(p, l)| **p as i32 != **l).count();
+    println!(
+        "{path}: {n} samples, test error {:.2}% (float reference path)",
+        100.0 * wrong as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let (params, arch, path) = load_checkpoint_arch(args)?;
+    let engine = args.str_or("engine", "packed");
+    let n = args.usize_or("n", 256).map_err(cfg_err)?;
+    let ds = dataset_for_arch(&arch, args, n)?;
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    let (x, y) = ds.gather(&idx);
+
+    let timer = Timer::start();
+    let logits = match engine.as_str() {
+        "packed" => {
+            let net = PackedNet::prepare(&arch, &params)?;
+            let prep_ms = timer.millis();
+            let t2 = Timer::start();
+            let out = net.infer(&x)?;
+            println!(
+                "packed XNOR engine: prepare {prep_ms:.1} ms, infer {:.1} ms ({:.0} samples/s), packed weights {} bytes",
+                t2.millis(),
+                n as f64 / t2.secs(),
+                net.packed_weight_bytes()
+            );
+            out
+        }
+        "float" => {
+            let out = forward_float(&arch, &params, &x)?;
+            println!(
+                "float reference: infer {:.1} ms ({:.0} samples/s)",
+                timer.millis(),
+                n as f64 / timer.secs()
+            );
+            out
+        }
+        other => return Err(cfg_err(format!("unknown engine '{other}' (packed|float)"))),
+    };
+    let wrong =
+        logits.argmax_rows().iter().zip(&y).filter(|(p, l)| **p as i32 != **l).count();
+    println!("{path}: {n} samples, error {:.2}%", 100.0 * wrong as f64 / n as f64);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use bdnn::serve::{serve, BatcherConfig, ServeConfig};
+    let (params, arch, path) = load_checkpoint_arch(args)?;
+    let addr = args.str_or("addr", "127.0.0.1:7979");
+    let max_batch = args.usize_or("max-batch", 64).map_err(cfg_err)?;
+    let max_wait_ms = args.u64_or("max-wait-ms", 2).map_err(cfg_err)?;
+    let net = std::sync::Arc::new(PackedNet::prepare(&arch, &params)?);
+    println!(
+        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={max_batch}, max_wait={max_wait_ms}ms]",
+        arch.name,
+        net.packed_weight_bytes()
+    );
+    println!("protocol: one JSON line per request: {{\"id\": n, \"pixels\": [f32; {}]}}", arch.in_dim());
+    let server = serve(
+        &arch,
+        net,
+        ServeConfig {
+            addr,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(max_wait_ms),
+                queue_depth: 1024,
+            },
+        },
+    )?;
+    println!("listening on {} (ctrl-c to stop)", server.local_addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| {
+            cfg_err(
+                "exp: which experiment? (table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory)"
+                    .into(),
+            )
+        })?
+        .clone();
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    let quick = !args.flag("full");
+    let _ = args.flag("quick"); // accepted for symmetry
+    let opts = exp::FigOpts {
+        artifacts_dir: artifacts_dir.clone(),
+        out_dir: args.str_or("out-dir", "runs"),
+        checkpoint: args.str_opt("checkpoint").map(String::from),
+        quick,
+        seed: args.u64_or("seed", 42).map_err(cfg_err)?,
+    };
+    let report = match id.as_str() {
+        "table1" => exp::table1(&artifacts_dir)?,
+        "table2" => exp::table2(&artifacts_dir)?,
+        "energy" => exp::energy(&artifacts_dir)?,
+        "table3" => {
+            let datasets: Vec<String> = args
+                .str_or("datasets", "mnist,cifar10,svhn")
+                .split(',')
+                .map(String::from)
+                .collect();
+            exp::table3(&exp::Table3Opts {
+                artifacts_dir,
+                out_dir: opts.out_dir.clone(),
+                quick,
+                seed: opts.seed,
+                datasets,
+            })?
+        }
+        "ablations" => exp::ablations(&exp::Table3Opts {
+            artifacts_dir,
+            out_dir: opts.out_dir.clone(),
+            quick,
+            seed: opts.seed,
+            datasets: vec![],
+        })?,
+        "fig1" => exp::fig1(&opts)?,
+        "fig2" => exp::fig2(&opts)?,
+        "fig3" => exp::fig3(&opts)?,
+        "fig4" => exp::fig4(&opts)?,
+        "memory" => exp::memory(&opts)?,
+        other => return Err(cfg_err(format!("unknown experiment '{other}'"))),
+    };
+    println!("{report}");
+    // archive the report for EXPERIMENTS.md
+    let dir = format!("{}/reports", opts.out_dir);
+    std::fs::create_dir_all(&dir).ok();
+    std::fs::write(format!("{dir}/{id}.txt"), &report)?;
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Minimal property-based testing framework — the proptest substitute
+//! (offline sandbox).
+//!
+//! A property is a closure over a [`Gen`] source; `check` runs it across
+//! `cases` random seeds and, on failure, retries the failing seed with
+//! smaller size hints (a crude but effective shrink) before reporting the
+//! seed so the case can be replayed deterministically.
+
+use crate::util::Pcg32;
+
+/// Random-input source handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// size hint in [0.0, 1.0]; shrunken reruns lower it
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::seeded(seed), size: 1.0 }
+    }
+
+    /// usize in [lo, hi], scaled toward lo when shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span as u32 + 1) as usize }
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| scale * self.rng.normal()).collect()
+    }
+
+    pub fn vec_pm1(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| if self.rng.below(2) == 1 { 1.0 } else { -1.0 }).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Result of a property run.
+pub enum PropResult {
+    Pass,
+    Fail(String),
+}
+
+impl From<()> for PropResult {
+    fn from(_: ()) -> Self {
+        PropResult::Pass
+    }
+}
+
+impl From<Result<(), String>> for PropResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => PropResult::Pass,
+            Err(e) => PropResult::Fail(e),
+        }
+    }
+}
+
+/// Run `prop` across `cases` seeds derived from `base_seed`. Panics with the
+/// failing seed (and the smallest failing size tried) on the first failure.
+pub fn check<F, R>(name: &str, base_seed: u64, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> R,
+    R: Into<PropResult>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let PropResult::Fail(msg) = prop(&mut g).into() {
+            // shrink: rerun the same seed at smaller sizes, keep the
+            // smallest size that still fails
+            let mut smallest = (1.0f64, msg.clone());
+            for &size in &[0.5, 0.25, 0.1, 0.0] {
+                let mut g = Gen::new(seed);
+                g.size = size;
+                if let PropResult::Fail(m) = prop(&mut g).into() {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, smallest failing size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("adds-commute", 1, 50, |g| {
+            count += 1;
+            let (a, b) = (g.normal(), g.normal());
+            ensure((a + b - (b + a)).abs() < 1e-9, "not commutative")
+        });
+        assert_eq!(count, 50 );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 2, 10, |g| {
+            let n = g.usize_in(0, 10);
+            ensure(n > 100, format!("n = {n}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 3, 100, |g| {
+            let n = g.usize_in(3, 17);
+            ensure((3..=17).contains(&n), format!("out of range: {n}"))?;
+            let f = g.f32_in(-2.0, 5.0);
+            ensure((-2.0..5.0).contains(&f), format!("f out of range: {f}"))?;
+            let v = g.vec_pm1(8);
+            ensure(v.iter().all(|&x| x == 1.0 || x == -1.0), "not pm1")
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, run many.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text* is
+//! the interchange format (see `aot.py` and /opt/xla-example/README.md).
+//! Executables are cached per artifact name; values cross the boundary as
+//! [`HostTensor`]s (dtype-tagged host buffers) so the rest of the crate
+//! never touches `xla::Literal` directly.
+
+use std::collections::HashMap;
+
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest};
+use crate::error::{BdnnError, Result};
+
+/// A dtype-tagged host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) | HostTensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+            HostTensor::U32(..) => Dtype::U32,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            other => Err(BdnnError::Runtime(format!("expected f32, got {:?}", other.dtype()))),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            other => Err(BdnnError::Runtime(format!("expected f32, got {:?}", other.dtype()))),
+        }
+    }
+
+    pub fn first_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?.first().copied().unwrap_or(0.0))
+    }
+
+    fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v, _) => Literal::vec1(v),
+            HostTensor::I32(v, _) => Literal::vec1(v),
+            HostTensor::U32(v, _) => Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &Literal, spec: &super::manifest::IoSpec) -> Result<Self> {
+        let shape = spec.shape.clone();
+        let ty = lit.ty()?;
+        let t = match ty {
+            ElementType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, shape),
+            ElementType::S32 => HostTensor::I32(lit.to_vec::<i32>()?, shape),
+            ElementType::U32 => HostTensor::U32(lit.to_vec::<u32>()?, shape),
+            other => {
+                return Err(BdnnError::Runtime(format!(
+                    "unsupported output element type {other:?} for '{}'",
+                    spec.name
+                )))
+            }
+        };
+        Ok(t)
+    }
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with host tensors; validates count, dtype and shape against
+    /// the manifest before touching PJRT.
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.spec.inputs.len() {
+            return Err(BdnnError::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            )));
+        }
+        for (a, s) in args.iter().zip(&self.spec.inputs) {
+            if a.dtype() != s.dtype || a.shape() != s.shape.as_slice() {
+                return Err(BdnnError::Runtime(format!(
+                    "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    a.dtype(),
+                    a.shape()
+                )));
+            }
+        }
+        let literals: Vec<Literal> = args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            return Err(BdnnError::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            )));
+        }
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Engine {
+    /// CPU PJRT client over the artifacts in `dir`.
+    pub fn cpu(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = spec.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = std::rc::Rc::new(Executable { spec, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need real artifacts live in rust/tests/;
+    // here we only cover the host-tensor plumbing.
+
+    #[test]
+    fn host_tensor_roundtrip_literal() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let spec = crate::runtime::manifest::IoSpec {
+            name: "x".into(),
+            dtype: Dtype::F32,
+            shape: vec![2, 2],
+            init: None,
+            role: None,
+        };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_f32() {
+        let t = HostTensor::scalar_f32(7.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.first_f32().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let t = HostTensor::I32(vec![1], vec![1]);
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! `artifacts/manifest.json` parsing — the L2↔L3 contract (DESIGN.md §8).
+//!
+//! The manifest is written by `python/compile/aot.py` and is the only
+//! source of truth for executable I/O layouts: ordered input/output specs
+//! with dtype, shape, init hint and role. Rust never guesses an ordering.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::{self, Json};
+use crate::config::ModelArch;
+use crate::error::{BdnnError, Result};
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            "uint32" => Ok(Dtype::U32),
+            other => Err(BdnnError::Manifest(format!("unsupported dtype '{other}'"))),
+        }
+    }
+}
+
+/// One input or output tensor spec.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// init hint for inputs: "uniform_pm1" | "zeros" | "ones" (params/opt)
+    pub init: Option<String>,
+    /// role: "param" | "state" | "opt" | "step" | "lr" | "rng" | "data_x" |
+    /// "data_y" | "loss" | "err" | "logits" | "features"
+    pub role: Option<String>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_role(&self, role: &str) -> bool {
+        self.role.as_deref() == Some(role)
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub sha256: Option<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub config: Option<ModelArch>,
+}
+
+impl ArtifactSpec {
+    /// Indices of inputs with the given role.
+    pub fn input_indices(&self, role: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_role(role))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn input_named(&self, name: &str) -> Option<(usize, &IoSpec)> {
+        self.inputs.iter().enumerate().find(|(_, s)| s.name == name)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_iospec(j: &Json) -> Result<IoSpec> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| BdnnError::Manifest("io spec missing name".into()))?
+        .to_string();
+    let dtype = Dtype::parse(
+        j.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| BdnnError::Manifest(format!("{name}: missing dtype")))?,
+    )?;
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| BdnnError::Manifest(format!("{name}: missing shape")))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| BdnnError::Manifest(format!("{name}: bad shape"))))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name,
+        dtype,
+        shape,
+        init: j.get("init").and_then(Json::as_str).map(String::from),
+        role: j.get("role").and_then(Json::as_str).map(String::from),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            BdnnError::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = json::parse(text).map_err(BdnnError::Manifest)?;
+        if j.get("format").and_then(Json::as_f64) != Some(1.0) {
+            return Err(BdnnError::Manifest("unsupported manifest format".into()));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| BdnnError::Manifest("missing artifacts object".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| BdnnError::Manifest(format!("{name}: missing file")))?;
+            let kind = entry
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<IoSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| BdnnError::Manifest(format!("{name}: missing {key}")))?
+                    .iter()
+                    .map(parse_iospec)
+                    .collect()
+            };
+            let config = match entry.get("config") {
+                Some(c) => Some(ModelArch::from_json(c)?),
+                None => None,
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    kind,
+                    sha256: entry.get("sha256").and_then(Json::as_str).map(String::from),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    config,
+                },
+            );
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            let known: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+            BdnnError::Manifest(format!(
+                "artifact '{name}' not in manifest (known: {})",
+                known.join(", ")
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": {
+        "smoke": {
+          "file": "smoke.hlo.txt",
+          "kind": "smoke",
+          "sha256": "ab",
+          "inputs": [
+            {"name": "x", "dtype": "float32", "shape": [4], "role": "data_x"},
+            {"name": "y", "dtype": "int32", "shape": [2, 2], "init": "zeros"}
+          ],
+          "outputs": [
+            {"name": "out", "dtype": "float32", "shape": [4], "role": "logits"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.get("smoke").unwrap();
+        assert_eq!(a.file, PathBuf::from("/tmp/a/smoke.hlo.txt"));
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.inputs[1].elements(), 4);
+        assert_eq!(a.inputs[1].init.as_deref(), Some("zeros"));
+        assert_eq!(a.input_indices("data_x"), vec![0]);
+        assert_eq!(a.outputs[0].shape, vec![4]);
+    }
+
+    #[test]
+    fn unknown_artifact_lists_known() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let err = format!("{}", m.get("nope").unwrap_err());
+        assert!(err.contains("smoke"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 9, "artifacts": {}}"#, PathBuf::from(".")).is_err());
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("int32", "complex128");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration hook: validates the aot.py output when artifacts exist
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.contains_key("smoke"));
+            let t = m.get("mnist_mlp_small_train").unwrap();
+            assert_eq!(t.kind, "train");
+            assert!(t.config.is_some());
+            let last = t.inputs.last().unwrap();
+            assert_eq!(last.name, "ys");
+            assert_eq!(last.dtype, Dtype::I32);
+        }
+    }
+}

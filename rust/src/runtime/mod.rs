@@ -1,0 +1,12 @@
+//! Runtime bridge: PJRT client + artifact manifest (the L2↔L3 boundary).
+//!
+//! Python lowers the training/eval graphs once (`make artifacts`); this
+//! module loads the HLO text, compiles it on the PJRT CPU client and
+//! executes it from the coordinator's hot loop. Python never runs at
+//! request time.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};

@@ -1,0 +1,333 @@
+//! Dynamic batcher: coalesce concurrent requests into one engine call.
+//!
+//! Policy (the classic latency/throughput knob pair):
+//!  * flush when `max_batch` requests are waiting, or
+//!  * when the oldest waiting request has aged `max_wait`;
+//!  * a bounded submit queue applies backpressure to the acceptors.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::bitnet::network::PackedNet;
+use crate::error::{BdnnError, Result};
+use crate::tensor::Tensor;
+
+/// One inference request travelling through the batcher.
+pub struct InferRequest {
+    pub id: u64,
+    pub pixels: Vec<f32>,
+    pub enqueued: Instant,
+    /// oneshot reply channel
+    pub reply: Sender<InferReply>,
+}
+
+/// Reply for one request.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub infer_us: u64,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(2), queue_depth: 1024 }
+    }
+}
+
+/// Served-traffic counters (read by the stats endpoint / tests).
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub flush_full: AtomicU64,
+    pub flush_timeout: AtomicU64,
+}
+
+impl BatchStats {
+    /// Mean batch size so far.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// The batcher: submit handle + worker thread.
+pub struct Batcher {
+    tx: SyncSender<InferRequest>,
+    pub stats: Arc<BatchStats>,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the worker around a prepared engine. `in_dim` validates
+    /// request payloads before they reach the engine.
+    pub fn spawn(net: Arc<PackedNet>, in_dim: usize, in_shape: Vec<usize>, cfg: BatcherConfig) -> Self {
+        let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_depth);
+        let stats = Arc::new(BatchStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let worker_stats = stats.clone();
+        let worker_stop = stop.clone();
+        let worker = std::thread::spawn(move || {
+            run_worker(net, in_dim, in_shape, cfg, rx, worker_stats, worker_stop);
+        });
+        Self { tx, stats, stop, worker: Some(worker) }
+    }
+
+    /// Submit a request (blocks when the queue is full — backpressure).
+    pub fn submit(&self, req: InferRequest) -> Result<()> {
+        self.tx
+            .send(req)
+            .map_err(|_| BdnnError::Runtime("batcher worker has shut down".into()))
+    }
+
+    /// Convenience: submit and wait for the reply.
+    pub fn infer_blocking(&self, id: u64, pixels: Vec<f32>) -> Result<InferReply> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: reply_tx })?;
+        reply_rx
+            .recv()
+            .map_err(|_| BdnnError::Runtime("batcher dropped the request".into()))
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the worker's recv by dropping our sender clone
+        let (dead_tx, _) = sync_channel(1);
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_worker(
+    net: Arc<PackedNet>,
+    in_dim: usize,
+    in_shape: Vec<usize>,
+    cfg: BatcherConfig,
+    rx: Receiver<InferRequest>,
+    stats: Arc<BatchStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<InferRequest> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        // wait for the first request of a batch
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let deadline = first.enqueued + cfg.max_wait;
+        pending.push(first);
+        // coalesce until full or the oldest request times out
+        let mut timed_out = false;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                timed_out = true;
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    timed_out = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if timed_out {
+            stats.flush_timeout.fetch_add(1, Ordering::Relaxed);
+        } else {
+            stats.flush_full.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // assemble the batch (validated payloads only)
+        let mut rows: Vec<&InferRequest> = Vec::with_capacity(pending.len());
+        for r in &pending {
+            if r.pixels.len() == in_dim {
+                rows.push(r);
+            }
+        }
+        let infer_started = Instant::now();
+        let logits = if rows.is_empty() {
+            None
+        } else {
+            let mut data = Vec::with_capacity(rows.len() * in_dim);
+            for r in &rows {
+                data.extend_from_slice(&r.pixels);
+            }
+            let mut shape = vec![rows.len()];
+            shape.extend(&in_shape);
+            net.infer(&Tensor::new(&shape, data)).ok()
+        };
+        let infer_us = infer_started.elapsed().as_micros() as u64;
+
+        stats.requests.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+
+        // scatter replies
+        let classes = logits.as_ref().map(|l| l.shape()[1]).unwrap_or(0);
+        let mut row_i = 0usize;
+        for r in pending.drain(..) {
+            if r.pixels.len() != in_dim {
+                // invalid payload: reply with an empty logits vector
+                let _ = r.reply.send(InferReply {
+                    id: r.id,
+                    pred: usize::MAX,
+                    logits: vec![],
+                    queue_us: r.enqueued.elapsed().as_micros() as u64,
+                    infer_us: 0,
+                });
+                continue;
+            }
+            if let Some(l) = &logits {
+                let row = &l.data()[row_i * classes..(row_i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let _ = r.reply.send(InferReply {
+                    id: r.id,
+                    pred,
+                    logits: row.to_vec(),
+                    queue_us: (infer_started - r.enqueued).as_micros() as u64,
+                    infer_us,
+                });
+                row_i += 1;
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelArch;
+    use crate::util::Pcg32;
+
+    fn tiny_net() -> (Arc<PackedNet>, usize, Vec<usize>) {
+        let arch = ModelArch {
+            name: "t".into(),
+            arch: "mlp".into(),
+            mode: "bdnn".into(),
+            in_shape: vec![12],
+            classes: 4,
+            hidden: vec![16],
+            maps: vec![],
+            fc: vec![],
+            bn: "none".into(),
+            batch: 4,
+            eval_batch: 4,
+            k_steps: 1,
+            bn_eps: 1e-4,
+        };
+        let mut r = Pcg32::seeded(0);
+        let mut p = crate::bitnet::network::Params::new();
+        p.insert("L00_W".into(), Tensor::new(&[12, 16], (0..192).map(|_| r.uniform(-1.0, 1.0)).collect()));
+        p.insert("L00_b".into(), Tensor::new(&[16], (0..16).map(|_| 0.1 * r.normal()).collect()));
+        p.insert("L01_W".into(), Tensor::new(&[16, 4], (0..64).map(|_| r.uniform(-1.0, 1.0)).collect()));
+        p.insert("L01_b".into(), Tensor::new(&[4], (0..4).map(|_| 0.1 * r.normal()).collect()));
+        let net = PackedNet::prepare(&arch, &p).unwrap();
+        (Arc::new(net), 12, vec![12])
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (net, dim, shape) = tiny_net();
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        let mut r = Pcg32::seeded(1);
+        let reply = b.infer_blocking(7, (0..12).map(|_| r.normal()).collect()).unwrap();
+        assert_eq!(reply.id, 7);
+        assert!(reply.pred < 4);
+        assert_eq!(reply.logits.len(), 4);
+    }
+
+    #[test]
+    fn batched_requests_all_answered_and_coalesced() {
+        let (net, dim, shape) = tiny_net();
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20), queue_depth: 64 };
+        let b = Arc::new(Batcher::spawn(net, dim, shape, cfg));
+        let mut handles = Vec::new();
+        for i in 0..24u64 {
+            let b2 = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut r = Pcg32::seeded(i);
+                b2.infer_blocking(i, (0..12).map(|_| r.normal()).collect()).unwrap()
+            }));
+        }
+        let replies: Vec<InferReply> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(replies.len(), 24);
+        let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<_>>());
+        // coalescing actually happened: fewer batches than requests
+        let batches = b.stats.batches.load(Ordering::Relaxed);
+        assert!(batches < 24, "no batching: {batches} batches for 24 requests");
+        assert!((b.stats.mean_batch() - 24.0 / batches as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_predictions_match_direct_inference() {
+        let (net, dim, shape) = tiny_net();
+        let mut r = Pcg32::seeded(3);
+        let pixels: Vec<f32> = (0..12).map(|_| r.normal()).collect();
+        let direct = net.infer(&Tensor::new(&[1, 12], pixels.clone())).unwrap();
+        let direct_pred = direct.argmax_rows()[0];
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        for _ in 0..3 {
+            let reply = b.infer_blocking(1, pixels.clone()).unwrap();
+            assert_eq!(reply.pred, direct_pred);
+        }
+    }
+
+    #[test]
+    fn invalid_payload_gets_error_reply_without_poisoning_batch() {
+        let (net, dim, shape) = tiny_net();
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        let bad = b.infer_blocking(9, vec![1.0; 5]).unwrap();
+        assert_eq!(bad.pred, usize::MAX);
+        assert!(bad.logits.is_empty());
+        // the batcher still serves good requests afterwards
+        let mut r = Pcg32::seeded(4);
+        let good = b.infer_blocking(10, (0..12).map(|_| r.normal()).collect()).unwrap();
+        assert_eq!(good.logits.len(), 4);
+    }
+
+    #[test]
+    fn drop_shuts_worker_down() {
+        let (net, dim, shape) = tiny_net();
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        drop(b); // must join without hanging
+    }
+}

@@ -1,0 +1,27 @@
+//! Inference serving layer: request router + dynamic batcher over the
+//! packed XNOR engine — the deployment story of the paper's discussion
+//! section ("BBP would enable a wide variety of DNNs to run on mobile
+//! devices"), shaped like a miniature vLLM-style router.
+//!
+//! Architecture (all std, no async runtime — offline sandbox):
+//!
+//! ```text
+//!   clients ── TCP, JSON-lines ──▶ acceptor threads
+//!                                      │  (bounded submit queue: backpressure)
+//!                                      ▼
+//!                               dynamic batcher ──▶ worker thread
+//!                               (max_batch / max_wait)   PackedNet::infer
+//!                                      ▲                      │
+//!                                      └── oneshot reply ◀────┘
+//! ```
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"id": 7, "pixels": [f32; in_dim]}
+//!   response: {"id": 7, "pred": 3, "logits": [...], "queue_us": n, "infer_us": n}
+//!   errors:   {"id": 7, "error": "..."}
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{BatchStats, Batcher, BatcherConfig, InferRequest};
+pub use server::{serve, ServeConfig};

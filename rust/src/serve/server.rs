@@ -1,0 +1,252 @@
+//! TCP front-end: JSON-lines protocol over the dynamic batcher.
+//!
+//! One thread per connection (requests on a connection are pipelined: the
+//! reader thread submits, replies return in completion order). `serve`
+//! blocks; tests drive it through a real socket on 127.0.0.1:0.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::{Batcher, BatcherConfig, InferRequest};
+use crate::bitnet::network::PackedNet;
+use crate::config::json::{self, Json};
+use crate::config::ModelArch;
+use crate::error::{BdnnError, Result};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7979".into(), batcher: BatcherConfig::default() }
+    }
+}
+
+/// Running server handle (listener thread + batcher).
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub batcher: Arc<Batcher>,
+}
+
+impl Server {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the listener so accept() returns
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start serving a packed network. Returns a handle; callers connect with
+/// JSON-lines: {"id": n, "pixels": [...]} -> one JSON reply line each.
+pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<Server> {
+    let in_dim = arch.in_dim();
+    let in_shape = arch.in_shape.clone();
+    let batcher = Arc::new(Batcher::spawn(net, in_dim, in_shape, cfg.batcher));
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| BdnnError::Runtime(format!("bind {}: {e}", cfg.addr)))?;
+    let local_addr = listener.local_addr().map_err(BdnnError::Io)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_stop = stop.clone();
+    let accept_batcher = batcher.clone();
+    let accept_thread = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if accept_stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match stream {
+                Ok(s) => {
+                    let b = accept_batcher.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(s, b, in_dim);
+                    });
+                }
+                Err(_) => return,
+            }
+        }
+    });
+    Ok(Server { local_addr, stop, accept_thread: Some(accept_thread), batcher })
+}
+
+fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, _in_dim: usize) -> Result<()> {
+    let peer = stream.try_clone().map_err(BdnnError::Io)?;
+    let reader = BufReader::new(stream);
+    let mut writer = peer;
+    for line in reader.lines() {
+        let line = line.map_err(BdnnError::Io)?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Ok((id, pixels)) => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                batcher.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })?;
+                match rx.recv() {
+                    Ok(rep) if rep.pred != usize::MAX => {
+                        let mut obj = std::collections::BTreeMap::new();
+                        obj.insert("id".to_string(), Json::Num(rep.id as f64));
+                        obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
+                        obj.insert(
+                            "logits".to_string(),
+                            Json::Arr(rep.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        );
+                        obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
+                        obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
+                        Json::Obj(obj).to_string()
+                    }
+                    Ok(rep) => error_json(rep.id, "payload size mismatch"),
+                    Err(_) => error_json(id, "batcher dropped request"),
+                }
+            }
+            Err(e) => error_json(0, &e),
+        };
+        writer.write_all(response.as_bytes()).map_err(BdnnError::Io)?;
+        writer.write_all(b"\n").map_err(BdnnError::Io)?;
+    }
+    Ok(())
+}
+
+fn parse_request(line: &str) -> std::result::Result<(u64, Vec<f32>), String> {
+    let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let id = j.get("id").and_then(Json::as_f64).ok_or("missing 'id'")? as u64;
+    let pixels = j
+        .get("pixels")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'pixels'")?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32).ok_or("non-numeric pixel"))
+        .collect::<std::result::Result<Vec<f32>, _>>()?;
+    Ok((id, pixels))
+}
+
+fn error_json(id: u64, msg: &str) -> String {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Pcg32;
+
+    fn tiny() -> (ModelArch, Arc<PackedNet>) {
+        let arch = ModelArch {
+            name: "t".into(),
+            arch: "mlp".into(),
+            mode: "bdnn".into(),
+            in_shape: vec![8],
+            classes: 3,
+            hidden: vec![8],
+            maps: vec![],
+            fc: vec![],
+            bn: "none".into(),
+            batch: 2,
+            eval_batch: 2,
+            k_steps: 1,
+            bn_eps: 1e-4,
+        };
+        let mut r = Pcg32::seeded(0);
+        let mut p = crate::bitnet::network::Params::new();
+        p.insert("L00_W".into(), Tensor::new(&[8, 8], (0..64).map(|_| r.uniform(-1.0, 1.0)).collect()));
+        p.insert("L00_b".into(), Tensor::new(&[8], vec![0.0; 8]));
+        p.insert("L01_W".into(), Tensor::new(&[8, 3], (0..24).map(|_| r.uniform(-1.0, 1.0)).collect()));
+        p.insert("L01_b".into(), Tensor::new(&[3], vec![0.0; 3]));
+        (arch.clone(), Arc::new(PackedNet::prepare(&arch, &p).unwrap()))
+    }
+
+    fn request_line(id: u64, pixels: &[f32]) -> String {
+        let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();
+        format!("{{\"id\": {id}, \"pixels\": [{}]}}", px.join(","))
+    }
+
+    #[test]
+    fn end_to_end_over_socket() {
+        let (arch, net) = tiny();
+        let server = serve(
+            &arch,
+            net,
+            ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        let mut r = Pcg32::seeded(9);
+        let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        conn.write_all(request_line(5, &pixels).as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(5.0));
+        let pred = j.get("pred").and_then(Json::as_f64).unwrap();
+        assert!((0.0..3.0).contains(&pred));
+        assert_eq!(j.get("logits").and_then(Json::as_arr).unwrap().len(), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_error_lines() {
+        let (arch, net) = tiny();
+        let server = serve(
+            &arch,
+            net,
+            ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        conn.write_all(b"{not json}\n").unwrap();
+        conn.write_all(b"{\"id\": 1}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("error"), "{line}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_connections_are_served() {
+        let (arch, net) = tiny();
+        let server = serve(
+            &arch,
+            net,
+            ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr;
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            handles.push(std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut r = Pcg32::seeded(i);
+                let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+                conn.write_all(request_line(i, &pixels).as_bytes()).unwrap();
+                conn.write_all(b"\n").unwrap();
+                let mut reader = BufReader::new(conn);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = json::parse(&line).unwrap();
+                j.get("id").and_then(Json::as_f64).unwrap() as u64
+            }));
+        }
+        let mut ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,188 @@
+//! Reference conv2d / im2col / pooling over NHWC tensors.
+//!
+//! The im2col column layout is the repo-wide contract: (kh, kw, cin)
+//! row-major — identical to `python/compile/kernels/binary_conv.py` and to
+//! `bitnet::conv`'s packed path; python tests and rust tests both pin it.
+
+use super::Tensor;
+use crate::util::ceil_div;
+
+/// XLA-convention SAME padding amounts for one spatial axis.
+fn same_pad(input: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = ceil_div(input, stride);
+    let pad = ((out - 1) * stride + k).saturating_sub(input);
+    (pad / 2, pad - pad / 2)
+}
+
+/// im2col over an NHWC tensor -> ((n*ho*wo, kh*kw*cin), ho, wo).
+pub fn im2col_nhwc(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    same: bool,
+) -> (Tensor, usize, usize) {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "im2col expects NHWC");
+    let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+    let ((pt, _pb), (pl, _pr), ho, wo) = if same {
+        let (pt, pb) = same_pad(h, kh, stride);
+        let (pl, pr) = same_pad(w, kw, stride);
+        (
+            (pt, pb),
+            (pl, pr),
+            ceil_div(h, stride),
+            ceil_div(w, stride),
+        )
+    } else {
+        ((0, 0), (0, 0), (h - kh) / stride + 1, (w - kw) / stride + 1)
+    };
+    let cols_w = kh * kw * c;
+    let mut out = vec![0.0f32; n * ho * wo * cols_w];
+    let xd = x.data();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((b * ho + oy) * wo + ox) * cols_w;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        let dst = base + (ky * kw + kx) * c;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                            out[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                        } // else: zero padding (already zeroed)
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(&[n * ho * wo, cols_w], out), ho, wo)
+}
+
+/// conv2d over NHWC input with HWIO weights (reference implementation).
+pub fn conv2d_nhwc(x: &Tensor, w: &Tensor, stride: usize, same: bool) -> Tensor {
+    let ws = w.shape();
+    assert_eq!(ws.len(), 4, "weights must be HWIO");
+    let (kh, kw, cin, cout) = (ws[0], ws[1], ws[2], ws[3]);
+    assert_eq!(x.shape()[3], cin, "cin mismatch");
+    let n = x.shape()[0];
+    let (cols, ho, wo) = im2col_nhwc(x, kh, kw, stride, same);
+    let wmat = Tensor::new(&[kh * kw * cin, cout], w.data().to_vec());
+    let out = super::linalg::matmul(&cols, &wmat);
+    out.reshape(&[n, ho, wo, cout])
+}
+
+/// 2x2 max pooling, stride 2, VALID, NHWC.
+pub fn max_pool_2x2(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    assert_eq!(s.len(), 4);
+    let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; n * ho * wo * c];
+    let xd = x.data();
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let src = ((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c;
+                        let dst = ((b * ho + oy) * wo + ox) * c;
+                        for ch in 0..c {
+                            let v = xd[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, ho, wo, c], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn same_pad_matches_xla() {
+        // h=16 k=3 s=1 -> pad 1/1; h=16 k=3 s=2 -> out 8, pad total 1 (0,1)
+        assert_eq!(same_pad(16, 3, 1), (1, 1));
+        assert_eq!(same_pad(16, 3, 2), (0, 1));
+        assert_eq!(same_pad(15, 3, 2), (1, 1));
+    }
+
+    #[test]
+    fn identity_kernel_reproduces_input() {
+        // 1x1 kernel with identity channel mix == input
+        let mut r = Pcg32::seeded(0);
+        let x = Tensor::new(&[1, 4, 4, 2], (0..32).map(|_| r.normal()).collect());
+        let mut wd = vec![0.0; 2 * 2];
+        wd[0] = 1.0; // (0,0,0,0)
+        wd[3] = 1.0; // (0,0,1,1)
+        let w = Tensor::new(&[1, 1, 2, 2], wd);
+        let y = conv2d_nhwc(&x, &w, 1, true);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn conv_counts_window_sums() {
+        // all-ones input and 3x3 all-ones kernel: interior = 9, corner = 4
+        let x = Tensor::full(&[1, 5, 5, 1], 1.0);
+        let w = Tensor::full(&[3, 3, 1, 1], 1.0);
+        let y = conv2d_nhwc(&x, &w, 1, true);
+        assert_eq!(y.shape(), &[1, 5, 5, 1]);
+        let d = y.data();
+        assert_eq!(d[0], 4.0); // corner
+        assert_eq!(d[2 * 5 + 2], 9.0); // center
+        assert_eq!(d[1], 6.0); // edge
+    }
+
+    #[test]
+    fn valid_conv_shape() {
+        let x = Tensor::zeros(&[2, 8, 8, 3]);
+        let w = Tensor::zeros(&[3, 3, 3, 4]);
+        let y = conv2d_nhwc(&x, &w, 1, false);
+        assert_eq!(y.shape(), &[2, 6, 6, 4]);
+    }
+
+    #[test]
+    fn stride2_shape_same() {
+        let x = Tensor::zeros(&[1, 15, 17, 2]);
+        let w = Tensor::zeros(&[3, 3, 2, 5]);
+        let y = conv2d_nhwc(&x, &w, 2, true);
+        assert_eq!(y.shape(), &[1, 8, 9, 5]);
+    }
+
+    #[test]
+    fn im2col_interior_patch_layout() {
+        // pins the (kh, kw, cin) row-major contract (mirrors python test)
+        let mut r = Pcg32::seeded(1);
+        let x = Tensor::new(&[1, 8, 8, 2], (0..128).map(|_| r.normal()).collect());
+        let (cols, ho, wo) = im2col_nhwc(&x, 3, 3, 1, true);
+        assert_eq!((ho, wo), (8, 8));
+        // patch centered at (3,4): rows 2..5, cols 3..6
+        let patch_idx = 3 * 8 + 4;
+        let got = &cols.data()[patch_idx * 18..(patch_idx + 1) * 18];
+        let mut expect = Vec::new();
+        for ky in 2..5 {
+            for kx in 3..6 {
+                for ch in 0..2 {
+                    expect.push(x.data()[((ky * 8) + kx) * 2 + ch]);
+                }
+            }
+        }
+        assert_eq!(got, expect.as_slice());
+    }
+
+    #[test]
+    fn max_pool_known() {
+        let x = Tensor::new(&[1, 4, 4, 1], (0..16).map(|i| i as f32).collect());
+        let y = max_pool_2x2(&x);
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Dense linear algebra: blocked matmul and a Jacobi symmetric eigensolver.
+//!
+//! The eigensolver powers the ZCA whitening preprocessing (paper sec. 5.1.1
+//! applies Goodfellow-style GCN + ZCA to CIFAR-10/SVHN); the matmuls are the
+//! float reference against which `bitnet`'s XNOR-popcount GEMM is validated.
+
+use super::Tensor;
+
+/// C = A @ B for 2-D tensors (ikj loop order for cache-friendly streaming).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape().len(), 2);
+    assert_eq!(b.shape().len(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul dim mismatch {:?} @ {:?}", a.shape(), b.shape());
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = ad[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// C = A^T @ B without materializing A^T.
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape().len(), 2);
+    assert_eq!(b.shape().len(), 2);
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aki = arow[i];
+            if aki == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aki * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Returns (eigenvalues, eigenvectors) with `a ~= V diag(w) V^T`; the
+/// eigenvectors are the *columns* of V. Converges quadratically; `sweeps`
+/// caps the cyclic passes (30 is far beyond what covariance matrices need).
+pub fn jacobi_eigh(a: &Tensor, sweeps: usize) -> (Vec<f32>, Tensor) {
+    assert_eq!(a.shape().len(), 2);
+    let n = a.shape()[0];
+    assert_eq!(n, a.shape()[1], "jacobi_eigh needs a square matrix");
+    let mut m: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    for _ in 0..sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for i in 0..n {
+                    let mip = m[i * n + p];
+                    let miq = m[i * n + q];
+                    m[i * n + p] = c * mip - s * miq;
+                    m[i * n + q] = s * mip + c * miq;
+                }
+                for i in 0..n {
+                    let mpi = m[p * n + i];
+                    let mqi = m[q * n + i];
+                    m[p * n + i] = c * mpi - s * mqi;
+                    m[q * n + i] = s * mpi + c * mqi;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    let w: Vec<f32> = (0..n).map(|i| m[i * n + i] as f32).collect();
+    let vecs = Tensor::new(&[n, n], v.into_iter().map(|x| x as f32).collect());
+    (w, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_at_b_equals_transpose_then_matmul() {
+        let mut r = Pcg32::seeded(2);
+        let a = Tensor::new(&[7, 5], (0..35).map(|_| r.normal()).collect());
+        let b = Tensor::new(&[7, 4], (0..28).map(|_| r.normal()).collect());
+        let direct = matmul_at_b(&a, &b);
+        let viat = matmul(&a.transpose2(), &b);
+        assert!(direct.max_abs_diff(&viat) < 1e-4);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_matrix() {
+        let mut r = Pcg32::seeded(4);
+        let n = 12;
+        // random symmetric PSD: G G^T
+        let g = Tensor::new(&[n, n], (0..n * n).map(|_| r.normal()).collect());
+        let a = matmul(&g, &g.transpose2());
+        let (w, v) = jacobi_eigh(&a, 30);
+        // rebuild V diag(w) V^T
+        let mut vd = v.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vd.data_mut()[i * n + j] *= w[j];
+            }
+        }
+        let rec = matmul(&vd, &v.transpose2());
+        assert!(rec.max_abs_diff(&a) < 1e-2, "diff {}", rec.max_abs_diff(&a));
+        // eigenvalues of PSD are non-negative
+        assert!(w.iter().all(|&x| x > -1e-3));
+    }
+
+    #[test]
+    fn jacobi_eigenvectors_orthonormal() {
+        let mut r = Pcg32::seeded(6);
+        let n = 8;
+        let g = Tensor::new(&[n, n], (0..n * n).map(|_| r.normal()).collect());
+        let a = matmul(&g, &g.transpose2());
+        let (_, v) = jacobi_eigh(&a, 30);
+        let vtv = matmul(&v.transpose2(), &v);
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at2(i, j) - expect).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_diagonal_matrix_is_trivial() {
+        let a = Tensor::new(&[3, 3], vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let (mut w, _) = jacobi_eigh(&a, 10);
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(w, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal dense f32 tensor substrate (row-major, contiguous).
+//!
+//! This is deliberately small: just what the float reference path of the
+//! inference engine, the ZCA whitening pipeline and the analysis suite need.
+//! It is NOT on the training hot path (that's the AOT-compiled XLA graphs)
+//! and NOT the binary hot path (that's `bitnet`'s packed kernels) — it is
+//! the correctness yardstick both are measured against.
+
+mod conv;
+mod linalg;
+
+pub use conv::{conv2d_nhwc, im2col_nhwc, max_pool_2x2};
+pub use linalg::{jacobi_eigh, matmul, matmul_at_b};
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows when viewed as 2-D (first axis).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Row-major 2-D access helper.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len(), "reshape size mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise sign with sign(0) = +1 (paper Eq. 5).
+    pub fn sign_pm1(&self) -> Self {
+        self.map(|x| if x >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Self { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Self { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|x| x * s)
+    }
+
+    pub fn transpose2(&self) -> Self {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Self { shape: vec![n, m], data: out }
+    }
+
+    /// Slice of rows [lo, hi) of a 2-D (or higher: leading axis) tensor.
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Self {
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Self { shape, data: self.data[lo * row..hi * row].to_vec() }
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    /// Row-wise argmax of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2);
+        let n = self.shape[1];
+        self.data
+            .chunks_exact(n)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.at2(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_reshape_panics() {
+        Tensor::zeros(&[2, 2]).reshape(&[3]);
+    }
+
+    #[test]
+    fn sign_pm1_zero_is_plus() {
+        let t = Tensor::new(&[3], vec![-0.5, 0.0, 0.5]);
+        assert_eq!(t.sign_pm1().data(), &[-1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn rows_slice_takes_rows() {
+        let t = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.rows_slice(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Small shared substrates: PRNGs, timers, running statistics.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::{Pcg32, SplitMix64};
+pub use stats::RunningStats;
+pub use timer::Timer;
+
+/// Nearest power-of-two proxy AP2(z) = sign(z) * 2^round(log2|z|)
+/// (paper sec. 3.3). AP2(0) = 0. Mirrors `kernels/ref.py::ap2`.
+#[inline]
+pub fn ap2(z: f32) -> f32 {
+    if z == 0.0 || !z.is_finite() {
+        return 0.0;
+    }
+    let mag = z.abs().log2().round().exp2();
+    mag.copysign(z)
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ap2_powers_of_two_are_fixed_points() {
+        for e in -10..10 {
+            let z = (2.0f32).powi(e);
+            assert_eq!(ap2(z), z);
+            assert_eq!(ap2(-z), -z);
+        }
+    }
+
+    #[test]
+    fn ap2_zero() {
+        assert_eq!(ap2(0.0), 0.0);
+    }
+
+    #[test]
+    fn ap2_within_sqrt2() {
+        let mut r = rng::Pcg32::seeded(1);
+        for _ in 0..1000 {
+            let z = r.uniform(0.001, 100.0);
+            let a = ap2(z);
+            let ratio = a / z;
+            assert!(ratio <= std::f32::consts::SQRT_2 + 1e-5);
+            assert!(ratio >= 1.0 / std::f32::consts::SQRT_2 - 1e-5);
+        }
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Wall-clock timing helpers for the coordinator's metrics and benchkit.
+
+use std::time::Instant;
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Restart and return the elapsed seconds of the previous lap.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap = t.lap();
+        assert!(lap >= 0.001);
+        assert!(t.secs() < lap + 0.5);
+    }
+}

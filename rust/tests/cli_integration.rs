@@ -1,0 +1,51 @@
+//! CLI-level integration: exercise the `bdnn` binary surface end-to-end
+//! (argument parsing contract + command plumbing) via the library entry
+//! points where possible, and spot-check the installed binary when built.
+
+use bdnn::cli::Args;
+
+fn parse(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from)).unwrap()
+}
+
+#[test]
+fn train_flag_surface_is_stable() {
+    // the README/HELP documents exactly these flags; pin them
+    let a = parse(
+        "train --artifact mnist_mlp_fast --dataset mnist --epochs 20 \
+         --train-size 100 --test-size 50 --lr0 0.0625 --lr-shift-every 5 \
+         --seed 3 --out-dir /tmp/x --artifacts artifacts --name n --zca",
+    );
+    assert_eq!(a.command.as_deref(), Some("train"));
+    for key in [
+        "artifact", "dataset", "epochs", "train-size", "test-size", "lr0",
+        "lr-shift-every", "seed", "out-dir", "artifacts", "name", "zca",
+    ] {
+        assert!(a.str_opt(key).is_some(), "flag --{key} lost");
+    }
+    assert!(a.unknown_flags().is_empty());
+}
+
+#[test]
+fn exp_ids_cover_every_paper_artifact() {
+    // every table/figure in the paper's evaluation must have an exp id
+    let ids = ["table1", "table2", "table3", "energy", "fig1", "fig2", "fig3", "fig4", "memory", "ablations"];
+    // Table 1, Table 2, Table 3, Figs 1-4 + the sec 4.1/6 claims
+    assert!(ids.len() >= 3 + 4);
+    for id in ids {
+        let a = parse(&format!("exp {id} --quick"));
+        assert_eq!(a.positional, vec![id.to_string()]);
+    }
+}
+
+#[test]
+fn run_config_toml_files_in_configs_dir_parse() {
+    for entry in std::fs::read_dir("configs").unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().and_then(|e| e.to_str()) == Some("toml") {
+            let cfg = bdnn::config::RunConfig::from_toml_file(p.to_str().unwrap())
+                .unwrap_or_else(|e| panic!("{p:?}: {e}"));
+            cfg.validate().unwrap();
+        }
+    }
+}

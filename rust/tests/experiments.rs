@@ -1,0 +1,78 @@
+//! Experiment-harness smoke tests: every `bdnn exp` generator must run and
+//! produce a sane report (quick settings; requires artifacts).
+
+use bdnn::exp;
+
+fn ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn opts() -> exp::FigOpts {
+    exp::FigOpts {
+        artifacts_dir: "artifacts".into(),
+        out_dir: std::env::temp_dir().join("bdnn_exp_test").to_string_lossy().into_owned(),
+        checkpoint: None,
+        quick: true,
+        seed: 3,
+    }
+}
+
+#[test]
+fn table1_report() {
+    let r = exp::table1("artifacts").unwrap();
+    assert!(r.contains("32bit Floating Point"));
+    assert!(r.contains("3.7"));
+    assert!(r.contains("613x")); // fp32 MAC / BBP MAC = 4.6 / 0.0075
+}
+
+#[test]
+fn table2_report() {
+    let r = exp::table2("artifacts").unwrap();
+    assert!(r.contains("1M"));
+    assert!(r.contains("100"));
+    assert!(r.contains("32.0x") || r.contains("32x") || r.contains("31."));
+}
+
+#[test]
+fn energy_report_headline() {
+    let r = exp::energy("artifacts").unwrap();
+    assert!(r.contains("two orders of magnitude"));
+    // both paper-scale nets priced
+    assert!(r.contains("mnist_mlp_paper"));
+    assert!(r.contains("cifar_cnn_paper"));
+}
+
+// The training-backed figures share one quick CNN run via the checkpoint
+// option so this file stays within the CPU budget.
+#[test]
+fn figs_2_3_4_and_memory_from_one_checkpoint() {
+    if !ready() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let o = opts();
+    let (params, arch, run) = exp::trained_cnn(&o).unwrap();
+    // persist so the figs reuse it
+    let ckpt = format!("{}/shared.bdnn", o.out_dir);
+    bdnn::checkpoint::save(
+        &ckpt,
+        &params,
+        &bdnn::checkpoint::CheckpointMeta { arch: arch.name.clone(), epoch: 0, step: 0 },
+    )
+    .unwrap();
+    let _ = run;
+    let with_ckpt = exp::FigOpts { checkpoint: Some(ckpt), ..o };
+
+    let f2 = exp::fig2(&with_ckpt).unwrap();
+    assert!(f2.contains("unique"), "{f2}");
+    assert!(f2.contains("conv0"));
+
+    let f3 = exp::fig3(&with_ckpt).unwrap();
+    assert!(f3.contains("bandwidth reduction: 32x"), "{f3}");
+
+    let f4 = exp::fig4(&with_ckpt).unwrap();
+    assert!(f4.contains("saturation"), "{f4}");
+
+    let m = exp::memory(&with_ckpt).unwrap();
+    assert!(m.contains("1-bit packed"), "{m}");
+}

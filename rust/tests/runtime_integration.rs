@@ -1,0 +1,177 @@
+//! Integration: load real AOT artifacts through PJRT and run them.
+//!
+//! Requires `make artifacts` to have produced artifacts/ — all tests skip
+//! gracefully when it hasn't (so `cargo test` stays green on a fresh clone),
+//! but the Makefile test target always builds artifacts first.
+
+use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
+use bdnn::config::RunConfig;
+use bdnn::runtime::{Engine, HostTensor};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn smoke_artifact_runs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::cpu("artifacts").unwrap();
+    let exe = engine.load("smoke").unwrap();
+    let out = exe
+        .run(&[
+            HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![4]),
+            HostTensor::F32(vec![10.0, 20.0, 30.0, 40.0], vec![4]),
+        ])
+        .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &[12.0, 24.0, 36.0, 48.0]);
+}
+
+#[test]
+fn smoke_artifact_rejects_bad_shapes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut engine = Engine::cpu("artifacts").unwrap();
+    let exe = engine.load("smoke").unwrap();
+    // wrong arity
+    assert!(exe.run(&[HostTensor::F32(vec![1.0; 4], vec![4])]).is_err());
+    // wrong shape
+    assert!(exe
+        .run(&[
+            HostTensor::F32(vec![1.0; 2], vec![2]),
+            HostTensor::F32(vec![1.0; 4], vec![4]),
+        ])
+        .is_err());
+    // wrong dtype
+    assert!(exe
+        .run(&[
+            HostTensor::I32(vec![1; 4], vec![4]),
+            HostTensor::F32(vec![1.0; 4], vec![4]),
+        ])
+        .is_err());
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut engine = Engine::cpu("artifacts").unwrap();
+    let err = match engine.load("does_not_exist") {
+        Err(e) => format!("{e}"),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("does_not_exist"));
+}
+
+fn tiny_run(artifact: &str, dataset: &str, epochs: usize) -> RunConfig {
+    RunConfig {
+        name: format!("itest-{artifact}"),
+        artifact: artifact.into(),
+        dataset: dataset.into(),
+        epochs,
+        lr0: 0.0625,
+        lr_shift_every: 50,
+        seed: 7,
+        train_size: 800,
+        test_size: 200,
+        artifacts_dir: "artifacts".into(),
+        out_dir: std::env::temp_dir().join("bdnn_itest").to_string_lossy().into_owned(),
+        checkpoint_every: 0,
+        eval_every: 1,
+        zca: false,
+    }
+}
+
+#[test]
+fn mlp_trains_and_learns_on_synthetic_mnist() {
+    if !artifacts_ready() {
+        return;
+    }
+    let run = tiny_run("mnist_mlp_small", "mnist", 3);
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::null()).unwrap();
+    let (train_ds, test_ds) = load_datasets(&run).unwrap();
+    let summary = trainer.train(train_ds, &test_ds).unwrap();
+    assert_eq!(summary.epochs.len(), 3);
+    // learned something: well below the 90% random-chance error
+    assert!(
+        summary.final_test_err < 0.5,
+        "final test err {}",
+        summary.final_test_err
+    );
+    // loss decreased epoch over epoch
+    assert!(summary.epochs[2].train_loss < summary.epochs[0].train_loss);
+    // checkpoint written and loadable
+    let ckpt = format!("{}/{}/final.bdnn", run.out_dir, run.name);
+    let (params, meta) = bdnn::checkpoint::load(&ckpt).unwrap();
+    assert_eq!(meta.arch, "mnist_mlp_small");
+    assert!(params.contains_key("L00_W"));
+    // weights are clipped to [-1, 1] (Alg. 1)
+    let w = &params["L00_W"];
+    assert!(w.data().iter().all(|&v| (-1.0..=1.0).contains(&v)));
+}
+
+#[test]
+fn trainer_restore_roundtrip() {
+    if !artifacts_ready() {
+        return;
+    }
+    let run = tiny_run("mnist_mlp_small", "mnist", 1);
+    let t1 = Trainer::new(run.clone(), MetricsWriter::null()).unwrap();
+    let p1 = t1.params();
+    let mut t2 = Trainer::new(
+        RunConfig { seed: 99, ..run.clone() },
+        MetricsWriter::null(),
+    )
+    .unwrap();
+    // different seed -> different init
+    assert_ne!(p1["L00_W"], t2.params()["L00_W"]);
+    t2.restore(&p1).unwrap();
+    assert_eq!(p1["L00_W"], t2.params()["L00_W"]);
+}
+
+#[test]
+fn packed_inference_agrees_with_eval_artifact() {
+    if !artifacts_ready() {
+        return;
+    }
+    use bdnn::bitnet::network::{forward_float, PackedNet};
+    let run = tiny_run("mnist_mlp_small", "mnist", 1);
+    let mut trainer = Trainer::new(run.clone(), MetricsWriter::null()).unwrap();
+    let (train_ds, test_ds) = load_datasets(&run).unwrap();
+    trainer.train(train_ds, &test_ds).unwrap();
+    let params = trainer.params();
+    let arch = trainer.arch().clone();
+
+    // 64 test samples through both paths
+    let idx: Vec<usize> = (0..64).collect();
+    let (x, _) = test_ds.gather(&idx);
+    let float_logits = forward_float(&arch, &params, &x).unwrap();
+    let net = PackedNet::prepare(&arch, &params).unwrap();
+    let packed_logits = net.infer(&x).unwrap();
+    assert!(
+        float_logits.max_abs_diff(&packed_logits) < 1e-3,
+        "packed vs float diff {}",
+        float_logits.max_abs_diff(&packed_logits)
+    );
+
+    // and the float path agrees with the XLA eval artifact on predictions
+    let err_xla = trainer.evaluate(&test_ds).unwrap();
+    let mut wrong = 0usize;
+    let all: Vec<usize> = (0..test_ds.len()).collect();
+    let (xa, ya) = test_ds.gather(&all);
+    let logits = net.infer(&xa).unwrap();
+    for (row, &label) in logits.argmax_rows().iter().zip(&ya) {
+        if *row as i32 != label {
+            wrong += 1;
+        }
+    }
+    let err_packed = wrong as f64 / test_ds.len() as f64;
+    assert!(
+        (err_xla - err_packed).abs() < 0.02,
+        "xla {err_xla} vs packed {err_packed}"
+    );
+}

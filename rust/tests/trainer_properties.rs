@@ -1,0 +1,228 @@
+//! Property-based tests on the coordinator and engine invariants
+//! (routing/batching/state per the mini proptest framework in
+//! `bdnn::proptest`), plus failure-injection tests on the persistence and
+//! manifest layers.
+
+use bdnn::bitnet::{dedup, fold, gemm, BitMatrix};
+use bdnn::checkpoint;
+use bdnn::config::json;
+use bdnn::coordinator::ShiftSchedule;
+use bdnn::data::{BatchIter, Dataset};
+use bdnn::proptest::{check, ensure, Gen};
+use bdnn::tensor::{conv2d_nhwc, matmul, Tensor};
+use bdnn::util::Pcg32;
+
+// ---------------------------------------------------------------------------
+// engine invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_xnor_gemm_equals_float_sign_gemm() {
+    check("xnor == sign-gemm", 0xA1, 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 200);
+        let n = g.usize_in(1, 24);
+        let a = g.vec_f32(m * k, 2.0);
+        let b = g.vec_f32(k * n, 2.0);
+        let got = gemm::binary_matmul_f32(m, k, n, &a, &b);
+        let expect = matmul(&Tensor::new(&[m, k], a).sign_pm1(), &Tensor::new(&[k, n], b).sign_pm1());
+        for (x, y) in got.iter().zip(expect.data()) {
+            ensure(x == y, format!("mismatch {x} vs {y} at ({m},{k},{n})"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitmatrix_pack_roundtrip() {
+    check("pack/unpack roundtrip", 0xA2, 60, |g: &mut Gen| {
+        let r = g.usize_in(1, 20);
+        let c = g.usize_in(1, 200);
+        let vals = g.vec_pm1(r * c);
+        let m = BitMatrix::from_pm1(r, c, &vals);
+        ensure(m.to_pm1_vec() == vals, format!("roundtrip failed at {r}x{c}"))
+    });
+}
+
+#[test]
+fn prop_binary_conv_matches_reference() {
+    check("packed conv == float conv", 0xA3, 15, |g: &mut Gen| {
+        let n = g.usize_in(1, 2);
+        let hw = g.usize_in(4, 12);
+        let cin = g.usize_in(1, 6);
+        let cout = g.usize_in(1, 6);
+        let stride = *g.choose(&[1usize, 2]);
+        let x = Tensor::new(&[n, hw, hw, cin], g.vec_f32(n * hw * hw * cin, 1.5));
+        let w = Tensor::new(&[3, 3, cin, cout], g.vec_f32(9 * cin * cout, 1.5));
+        let got = bdnn::bitnet::conv::binary_conv2d(&x, &w, stride, true);
+        let expect = conv2d_nhwc(&x.sign_pm1(), &w.sign_pm1(), stride, true);
+        ensure(
+            got.max_abs_diff(&expect) < 1e-4,
+            format!("conv mismatch {} at {n}x{hw}x{cin}->{cout} s{stride}", got.max_abs_diff(&expect)),
+        )
+    });
+}
+
+#[test]
+fn prop_dedup_plan_covers_every_pair_once() {
+    check("dedup consumer coverage", 0xA4, 25, |g: &mut Gen| {
+        let cin = g.usize_in(1, 6);
+        let cout = g.usize_in(1, 40);
+        let w = Tensor::new(&[3, 3, cin, cout], g.vec_pm1(9 * cin * cout));
+        let plan = dedup::build_plan(&w);
+        let mut seen = vec![false; cout * cin];
+        for (ci, groups) in plan.per_input.iter().enumerate() {
+            for (_, consumers) in groups {
+                for &(co, sign) in consumers {
+                    ensure(sign == 1.0 || sign == -1.0, "bad sign")?;
+                    ensure(!seen[ci * cout + co], format!("pair ({ci},{co}) consumed twice"))?;
+                    seen[ci * cout + co] = true;
+                }
+            }
+        }
+        ensure(seen.iter().all(|&b| b), "some (ci,co) pair never consumed")?;
+        ensure(plan.correlations <= plan.naive_correlations, "plan grew work")
+    });
+}
+
+#[test]
+fn prop_threshold_fold_matches_bn_sign() {
+    check("fold(BN) == sign(BN)", 0xA5, 60, |g: &mut Gen| {
+        let shift = g.bool();
+        let gamma = g.normal();
+        let beta = g.normal();
+        let rm = 3.0 * g.normal();
+        let rv = g.f32_in(0.01, 5.0);
+        let th = &fold::fold_bn(&[gamma], &[beta], &[rm], &[rv], 1e-4, shift)[0];
+        for _ in 0..10 {
+            let z = 20.0 * g.normal();
+            let bn = fold::bn_eval(z, gamma, beta, rm, rv, 1e-4, shift);
+            let expect = if bn >= 0.0 { 1.0 } else { -1.0 };
+            ensure(
+                th.fire(z) == expect,
+                format!("fold mismatch z={z} gamma={gamma} beta={beta} rm={rm} rv={rv} shift={shift}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants: batching, schedule, state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_iter_is_exact_partition() {
+    check("batch iter partitions", 0xB1, 40, |g: &mut Gen| {
+        let n = g.usize_in(1, 500);
+        let batch = g.usize_in(1, 64);
+        let mut rng = Pcg32::seeded(g.usize_in(0, 1 << 30) as u64);
+        let batches: Vec<_> = BatchIter::new(n, batch, &mut rng).collect();
+        ensure(batches.len() == n / batch, "wrong batch count")?;
+        let mut seen: Vec<usize> = batches.concat();
+        ensure(seen.iter().all(|&i| i < n), "index out of range")?;
+        let len = seen.len();
+        seen.sort_unstable();
+        seen.dedup();
+        ensure(seen.len() == len, "duplicate index within epoch")
+    });
+}
+
+#[test]
+fn prop_lr_schedule_is_power_of_two_and_monotone() {
+    check("lr schedule", 0xB2, 40, |g: &mut Gen| {
+        let shift_every = g.usize_in(1, 60);
+        let s = ShiftSchedule::new(0.0625, shift_every);
+        let mut prev = f32::INFINITY;
+        for e in 0..200 {
+            let lr = s.lr_at(e);
+            let l2 = lr.log2();
+            ensure((l2 - l2.round()).abs() < 1e-6, format!("lr {lr} not pow2 at epoch {e}"))?;
+            ensure(lr <= prev, "lr increased")?;
+            prev = lr;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_gather_preserves_rows() {
+    check("gather rows", 0xB3, 20, |g: &mut Gen| {
+        let n = g.usize_in(4, 60);
+        let ds = Dataset::synthesize("mnist", n, 9).map_err(|e| e.to_string())?;
+        let i = g.usize_in(0, n - 1);
+        let j = g.usize_in(0, n - 1);
+        let (x, y) = ds.gather(&[i, j]);
+        ensure(x.data()[..784] == *ds.image(i), "row 0 mismatch")?;
+        ensure(x.data()[784..] == *ds.image(j), "row 1 mismatch")?;
+        ensure(y == vec![ds.labels[i], ds.labels[j]], "labels mismatch")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// failure injection: persistence + manifest robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_checkpoint_bitflip_never_loads_silently() {
+    let dir = std::env::temp_dir().join("bdnn_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    check("checkpoint bitflip detected", 0xC1, 25, |g: &mut Gen| {
+        let path = dir.join(format!("p{}.bdnn", g.usize_in(0, 1 << 20)));
+        let mut params = checkpoint::Params::new();
+        let n = g.usize_in(1, 64);
+        params.insert("L00_W".into(), Tensor::new(&[n], g.vec_f32(n, 1.0)));
+        checkpoint::save(&path, &params, &Default::default()).map_err(|e| e.to_string())?;
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let pos = g.usize_in(0, bytes.len() - 1);
+        let bit = 1u8 << g.usize_in(0, 7);
+        bytes[pos] ^= bit;
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        let res = checkpoint::load(&path);
+        std::fs::remove_file(&path).ok();
+        ensure(res.is_err(), format!("bitflip at byte {pos} loaded silently"))
+    });
+}
+
+#[test]
+fn prop_manifest_truncations_error_cleanly() {
+    let good = r#"{"format":1,"artifacts":{"a":{"file":"a.hlo.txt","kind":"train",
+        "inputs":[{"name":"x","dtype":"float32","shape":[2]}],
+        "outputs":[{"name":"y","dtype":"float32","shape":[2]}]}}}"#;
+    // sanity: full text parses
+    assert!(bdnn::runtime::Manifest::parse(good, std::path::PathBuf::from(".")).is_ok());
+    check("manifest truncation", 0xC2, 40, |g: &mut Gen| {
+        let cut = g.usize_in(1, good.len() - 1);
+        let res = bdnn::runtime::Manifest::parse(&good[..cut], std::path::PathBuf::from("."));
+        ensure(res.is_err(), format!("truncated manifest at {cut} parsed"))
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json value roundtrip", 0xC3, 40, |g: &mut Gen| {
+        // build a random JSON tree, serialize, reparse, compare
+        fn build(g: &mut Gen, depth: usize) -> json::Json {
+            if depth == 0 || g.bool() {
+                match g.usize_in(0, 3) {
+                    0 => json::Json::Num((g.normal() * 100.0).round() as f64),
+                    1 => json::Json::Bool(g.bool()),
+                    2 => json::Json::Str(format!("s{}-\"quoted\"\n", g.usize_in(0, 99))),
+                    _ => json::Json::Null,
+                }
+            } else if g.bool() {
+                json::Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect())
+            } else {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..g.usize_in(0, 4) {
+                    m.insert(format!("k{i}"), build(g, depth - 1));
+                }
+                json::Json::Obj(m)
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).map_err(|e| format!("reparse failed: {e} for {text}"))?;
+        ensure(back == v, format!("roundtrip mismatch: {text}"))
+    });
+}
