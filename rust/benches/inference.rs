@@ -1,18 +1,93 @@
-//! Bench: deployed inference — packed XNOR engine vs float reference vs the
-//! XLA eval artifact, across batch sizes (the serving-path numbers quoted
-//! in EXPERIMENTS.md).
+//! Bench: deployed inference — packed XNOR engine (scalar vs tiled vs
+//! threaded GEMM configs) vs float reference vs the XLA eval artifact,
+//! across batch sizes (the serving-path numbers quoted in EXPERIMENTS.md).
+//!
+//! The kernel-ladder section runs on a synthetic random-weight MLP so it
+//! needs no artifacts; the trained-model section still requires
+//! `make artifacts` and is skipped otherwise.
 
 use bdnn::benchkit::Bench;
-use bdnn::bitnet::network::{forward_float, PackedNet};
-use bdnn::config::RunConfig;
+use bdnn::bitnet::network::{forward_float, PackedNet, Params};
+use bdnn::config::{GemmConfig, ModelArch, RunConfig};
 use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
 use bdnn::data::Dataset;
+use bdnn::tensor::Tensor;
+use bdnn::util::Pcg32;
 use std::hint::black_box;
 use std::sync::Arc;
 
+/// A paper-scale MLP (784-2048-2048-10) with random weights: the serving
+/// workload shape without needing a training run.
+fn synthetic_mlp() -> (ModelArch, Params) {
+    let arch = ModelArch {
+        name: "bench-mlp".into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![784],
+        classes: 10,
+        hidden: vec![2048, 2048],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 64,
+        eval_batch: 64,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    };
+    let mut r = Pcg32::seeded(5);
+    let mut p = Params::new();
+    let dims = [784usize, 2048, 2048, 10];
+    for i in 0..3 {
+        let (din, dout) = (dims[i], dims[i + 1]);
+        p.insert(
+            format!("L{i:02}_W"),
+            Tensor::new(&[din, dout], (0..din * dout).map(|_| r.uniform(-1.0, 1.0)).collect()),
+        );
+        p.insert(
+            format!("L{i:02}_b"),
+            Tensor::new(&[dout], (0..dout).map(|_| 0.1 * r.normal()).collect()),
+        );
+    }
+    (arch, p)
+}
+
 fn main() {
+    let (arch, params) = synthetic_mlp();
+    let auto = GemmConfig::auto();
+    println!(
+        "== serving-path inference ladder (784-2048-2048-10 MLP, {} threads) ==\n",
+        auto.resolved_threads()
+    );
+    let mut bench = Bench::new(1.0);
+    // packing is batch-independent: prepare once per config, reuse across
+    // the batch sweep
+    let serial = PackedNet::prepare(&arch, &params)
+        .unwrap()
+        .with_gemm_config(GemmConfig::serial());
+    let threaded = PackedNet::prepare(&arch, &params).unwrap().with_gemm_config(auto);
+    for batch in [1usize, 16, 64, 256] {
+        let mut r = Pcg32::seeded(batch as u64);
+        let x = Tensor::new(
+            &[batch, 784],
+            (0..batch * 784).map(|_| r.normal()).collect(),
+        );
+        let serial_name = format!("packed serial   batch={batch}");
+        bench.run(&serial_name, Some(batch as f64), || {
+            black_box(serial.infer(black_box(&x)).unwrap());
+        });
+        bench.run(&format!("packed threaded batch={batch}"), Some(batch as f64), || {
+            black_box(threaded.infer(black_box(&x)).unwrap());
+        });
+        bench.run(&format!("float ref       batch={batch}"), Some(batch as f64), || {
+            black_box(forward_float(&arch, &params, black_box(&x)).unwrap());
+        });
+        println!("\n  batch={batch} speedups:");
+        print!("{}", bench.speedup_table(&serial_name, &format!("batch={batch}")));
+        println!();
+    }
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("no artifacts/ — run `make artifacts` first");
+        println!("no artifacts/ — skipping the trained-model section (run `make artifacts`)");
         return;
     }
     // quick-train an MLP to get realistic weights
@@ -26,24 +101,26 @@ fn main() {
         out_dir: std::env::temp_dir().join("bdnn_bench").to_string_lossy().into_owned(),
         ..RunConfig::default()
     };
-    let mut trainer = Trainer::new(run.clone(), MetricsWriter::null()).unwrap();
+    let mut trainer = match Trainer::new(run.clone(), MetricsWriter::null()) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("skipping trained-model section: {e}");
+            return;
+        }
+    };
     let (train_ds, test_ds) = load_datasets(&run).unwrap();
     trainer.train(Arc::clone(&train_ds), &test_ds).unwrap();
     let params = trainer.params();
     let arch = trainer.arch().clone();
     let net = PackedNet::prepare(&arch, &params).unwrap();
 
-    println!("== inference latency/throughput (trained 3x256 MLP) ==\n");
-    let mut bench = Bench::new(1.5);
-    for batch in [1usize, 16, 64, 256, 1024] {
+    println!("== inference latency/throughput (trained MLP) ==\n");
+    for batch in [1usize, 64, 1024] {
         let ds = Dataset::synthesize("mnist", batch, 11).unwrap();
         let idx: Vec<usize> = (0..batch).collect();
         let (x, _) = ds.gather(&idx);
-        bench.run(&format!("packed xnor  batch={batch}"), Some(batch as f64), || {
+        bench.run(&format!("trained packed  batch={batch}"), Some(batch as f64), || {
             black_box(net.infer(black_box(&x)).unwrap());
-        });
-        bench.run(&format!("float ref    batch={batch}"), Some(batch as f64), || {
-            black_box(forward_float(&arch, &params, black_box(&x)).unwrap());
         });
     }
     // XLA eval artifact at its fixed batch

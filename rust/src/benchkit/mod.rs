@@ -99,6 +99,27 @@ impl Bench {
         let find = |n: &str| self.results.iter().find(|r| r.name == n);
         Some(find(slow)?.mean_s / find(fast)?.mean_s)
     }
+
+    /// Render all completed cases whose names *end with* `filter` as
+    /// speedups relative to `baseline` (the scalar→tiled→threaded ladder
+    /// report). Suffix matching keeps e.g. `batch=1` from also selecting
+    /// `batch=16` regardless of run order.
+    pub fn speedup_table(&self, baseline: &str, filter: &str) -> String {
+        let base = match self.results.iter().find(|r| r.name == baseline) {
+            Some(b) if b.mean_s > 0.0 => b.mean_s,
+            _ => return format!("(no baseline '{baseline}' measured)\n"),
+        };
+        let mut out = String::new();
+        for r in self.results.iter().filter(|r| r.name.ends_with(filter)) {
+            out.push_str(&format!(
+                "  {:<44} {:>6.2}x vs {}\n",
+                r.name,
+                base / r.mean_s,
+                baseline
+            ));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +140,17 @@ mod tests {
         assert!(r.mean_s >= 0.0);
         assert!(r.throughput().unwrap() > 0.0);
         assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn speedup_table_is_relative_to_baseline() {
+        let mut b = Bench { warmup_iters: 0, max_iters: 4, budget_s: 0.1, results: vec![] };
+        b.run("base x", None, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        b.run("fast x", None, || std::thread::sleep(std::time::Duration::from_micros(40)));
+        let t = b.speedup_table("base x", "x");
+        assert!(t.contains("base x"), "{t}");
+        assert!(t.contains("fast x"), "{t}");
+        assert!(b.speedup_table("missing", "x").contains("no baseline"));
     }
 
     #[test]

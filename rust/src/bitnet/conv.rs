@@ -7,6 +7,7 @@
 //! exact zeros — bit-identical to the lax.conv oracle.
 
 use super::{gemm, BitMatrix};
+use crate::config::GemmConfig;
 use crate::tensor::Tensor;
 use crate::util::ceil_div;
 
@@ -155,11 +156,23 @@ pub fn pack_weights_hwio(w: &Tensor) -> BitMatrix {
 }
 
 /// Binary conv2d: sign(x) (*) sign(w), NHWC/HWIO, output (N, Ho, Wo, Cout).
+/// Runs the tiled/threaded masked GEMM with an auto-detected config.
 pub fn binary_conv2d(x: &Tensor, w: &Tensor, stride: usize, same: bool) -> Tensor {
+    binary_conv2d_with(x, w, stride, same, &GemmConfig::auto())
+}
+
+/// Binary conv2d with an explicit GEMM tiling/threading config.
+pub fn binary_conv2d_with(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    same: bool,
+    cfg: &GemmConfig,
+) -> Tensor {
     let patches = pack_patches(x, w.shape()[0], w.shape()[1], stride, same);
     let bt = pack_weights_hwio(w);
     let cout = w.shape()[3];
-    let out = gemm::xnor_gemm_masked(&patches.bits, &patches.valid, &bt);
+    let out = gemm::xnor_gemm_masked_with(&patches.bits, &patches.valid, &bt, cfg);
     Tensor::new(
         &[patches.n, patches.ho, patches.wo, cout],
         out.into_iter().map(|v| v as f32).collect(),

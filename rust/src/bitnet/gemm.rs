@@ -8,21 +8,72 @@
 //! dot += 2 * popcnt(!(aw ^ bw) & mask) - valid_bits
 //! ```
 //!
+//! # Kernel ladder (scalar → tiled → threaded)
+//!
+//! Three implementations of the same contract, each bit-identical to the
+//! last (pinned by `rust/tests/gemm_equivalence.rs` and the unit tests
+//! below — popcount sums are exact integers, so any tiling or thread
+//! schedule must produce *identical* bytes, not merely close ones):
+//!
+//! 1. **scalar** ([`xnor_gemm_scalar`]) — the reference triple loop, one
+//!    output element at a time. Correctness yardstick and bench baseline.
+//! 2. **tiled** — cache-blocked over (i, j) in [`GemmConfig::tile`]-row
+//!    blocks so the packed `bt` panel stays resident in L1/L2, with a 4×2
+//!    register tile of accumulators in the inner loop: each loaded `bt`
+//!    word is reused 4 times and each `a` word twice, and the 8 independent
+//!    popcount chains give the CPU ILP that the scalar loop's single
+//!    accumulator serializes.
+//! 3. **threaded** — row-blocks of the output sharded across a scoped
+//!    thread pool (`std::thread::scope`, no extra deps, no unsafe): output
+//!    rows partition disjointly via `chunks_mut`, inputs are shared
+//!    immutably. `GemmConfig::threads == 0` auto-detects available
+//!    parallelism and falls back to serial under a small-problem cutoff
+//!    where spawn overhead would dominate.
+//!
+//! The masked variant ([`xnor_gemm_masked_with`]) gets the same treatment;
+//! it additionally honours per-row validity masks so zero-padded conv
+//! borders contribute exact zeros (matching the Pallas/XLA oracle).
+//!
 //! The hot loop is pure `xor` + `not` + `count_ones` (x86 `popcnt`); the
 //! energy argument of paper sec. 4.1 maps each 64-lane word op to 64 2-bit
-//! adds. The masked variant additionally honours per-row validity masks so
-//! zero-padded conv borders contribute 0 (matching the Pallas/XLA oracle).
+//! adds. Run `cargo bench --bench xnor_gemm` for the scalar/tiled/threaded
+//! comparison across paper-relevant shapes.
 
 use super::BitMatrix;
+use crate::config::GemmConfig;
+
+/// Register-tile shape: MR output rows × NR output cols of accumulators.
+const MR: usize = 4;
+const NR: usize = 2;
+
+/// Problems below this many packed word-ops (m * n * words_per_row) run
+/// serial even under auto threading: spawn/join overhead beats the win.
+const SMALL_PROBLEM_WORD_OPS: usize = 1 << 16;
 
 /// out[i, j] = dot(signA_row_i, signB_col_j); out is row-major (m, n), i32.
+/// Dispatches to the tiled/threaded kernel with an auto-detected config.
 pub fn xnor_gemm(a: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
+    xnor_gemm_with(a, bt, &GemmConfig::auto())
+}
+
+/// XNOR GEMM with per-row validity masks (auto-detected config).
+pub fn xnor_gemm_masked(a: &BitMatrix, valid: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
+    xnor_gemm_masked_with(a, valid, bt, &GemmConfig::auto())
+}
+
+/// Reference scalar kernel: one output element at a time. Kept verbatim as
+/// the equivalence oracle and the bench baseline.
+pub fn xnor_gemm_scalar(a: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
     assert_eq!(a.cols(), bt.cols(), "contraction mismatch: {} vs {}", a.cols(), bt.cols());
     let k = a.cols() as i32;
     let (m, n) = (a.rows(), bt.rows());
+    let mut out = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    assert!(a.cols() > 0, "xnor_gemm needs k >= 1");
     let wpr = a.words_per_row();
     let tail = a.tail_mask();
-    let mut out = vec![0i32; m * n];
     for i in 0..m {
         let ar = a.row(i);
         let orow = &mut out[i * n..(i + 1) * n];
@@ -40,19 +91,22 @@ pub fn xnor_gemm(a: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
     out
 }
 
-/// XNOR GEMM with per-row validity masks: bits where `valid` is 0 are
-/// treated as exact zeros (conv zero-padding), contributing nothing.
+/// Reference scalar masked kernel.
 ///
 /// out[i, j] = sum over valid k of a[i,k] * b[k,j]
 ///           = 2 * popcnt(!(a^b) & valid) - popcnt(valid)
-pub fn xnor_gemm_masked(a: &BitMatrix, valid: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
+pub fn xnor_gemm_masked_scalar(a: &BitMatrix, valid: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
     assert_eq!(a.cols(), bt.cols());
     assert_eq!(a.rows(), valid.rows());
     assert_eq!(a.cols(), valid.cols());
     let (m, n) = (a.rows(), bt.rows());
+    let mut out = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    assert!(a.cols() > 0, "xnor_gemm needs k >= 1");
     let wpr = a.words_per_row();
     let tail = a.tail_mask();
-    let mut out = vec![0i32; m * n];
     for i in 0..m {
         let ar = a.row(i);
         let vr = valid.row(i);
@@ -73,6 +127,287 @@ pub fn xnor_gemm_masked(a: &BitMatrix, valid: &BitMatrix, bt: &BitMatrix) -> Vec
         }
     }
     out
+}
+
+/// How many worker threads to actually use for an (m, n, wpr) problem.
+fn plan_threads(cfg: &GemmConfig, m: usize, n: usize, wpr: usize) -> usize {
+    if cfg.threads == 1 {
+        return 1;
+    }
+    let cap = cfg.resolved_threads().max(1).min(m);
+    if cfg.threads == 0 && m.saturating_mul(n).saturating_mul(wpr) < SMALL_PROBLEM_WORD_OPS {
+        1 // auto mode: not worth spawning for tiny problems
+    } else {
+        cap
+    }
+}
+
+/// Shared threading scaffold for both GEMM variants: allocates the output,
+/// plans the thread count, and either runs `kernel` over all rows or shards
+/// whole-row output chunks across a scoped thread pool. `kernel(row0,
+/// chunk)` must fill `chunk` with the output rows starting at `row0`.
+fn run_sharded<F>(m: usize, n: usize, wpr: usize, cfg: &GemmConfig, kernel: F) -> Vec<i32>
+where
+    F: Fn(usize, &mut [i32]) + Sync,
+{
+    assert!(cfg.tile > 0, "gemm tile must be >= 1");
+    let mut out = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let threads = plan_threads(cfg, m, n, wpr);
+    if threads <= 1 {
+        kernel(0, &mut out);
+        return out;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let kernel = &kernel;
+        for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let row0 = t * rows_per;
+            s.spawn(move || kernel(row0, chunk));
+        }
+    });
+    out
+}
+
+/// Tiled + (optionally) threaded XNOR GEMM. Bit-identical to
+/// [`xnor_gemm_scalar`] for every (m, k, n) and every config.
+pub fn xnor_gemm_with(a: &BitMatrix, bt: &BitMatrix, cfg: &GemmConfig) -> Vec<i32> {
+    assert_eq!(a.cols(), bt.cols(), "contraction mismatch: {} vs {}", a.cols(), bt.cols());
+    let (m, n) = (a.rows(), bt.rows());
+    assert!(a.cols() > 0 || m == 0 || n == 0, "xnor_gemm needs k >= 1");
+    let tile = cfg.tile;
+    run_sharded(m, n, a.words_per_row(), cfg, |row0, chunk| {
+        gemm_rows(a, bt, row0, chunk, tile)
+    })
+}
+
+/// Tiled + threaded masked XNOR GEMM. Bit-identical to
+/// [`xnor_gemm_masked_scalar`] for every input and config.
+pub fn xnor_gemm_masked_with(
+    a: &BitMatrix,
+    valid: &BitMatrix,
+    bt: &BitMatrix,
+    cfg: &GemmConfig,
+) -> Vec<i32> {
+    assert_eq!(a.cols(), bt.cols());
+    assert_eq!(a.rows(), valid.rows());
+    assert_eq!(a.cols(), valid.cols());
+    let (m, n) = (a.rows(), bt.rows());
+    assert!(a.cols() > 0 || m == 0 || n == 0, "xnor_gemm needs k >= 1");
+    let tile = cfg.tile;
+    run_sharded(m, n, a.words_per_row(), cfg, |row0, chunk| {
+        gemm_rows_masked(a, valid, bt, row0, chunk, tile)
+    })
+}
+
+/// One output element against a fully-valid row (shared epilogue of the
+/// ragged edges of the register tiling).
+#[inline]
+fn dot_one(ar: &[u64], br: &[u64], wpr: usize, tail: u64, k: i32) -> i32 {
+    let mut agree: u32 = 0;
+    for w in 0..wpr - 1 {
+        agree += (!(ar[w] ^ br[w])).count_ones();
+    }
+    agree += (!(ar[wpr - 1] ^ br[wpr - 1]) & tail).count_ones();
+    2 * agree as i32 - k
+}
+
+/// One masked output element (ragged-edge epilogue).
+#[inline]
+fn dot_one_masked(ar: &[u64], vr: &[u64], br: &[u64], wpr: usize, tail: u64, vcount: i32) -> i32 {
+    let mut agree: u32 = 0;
+    for w in 0..wpr - 1 {
+        agree += (!(ar[w] ^ br[w]) & vr[w]).count_ones();
+    }
+    agree += (!(ar[wpr - 1] ^ br[wpr - 1]) & vr[wpr - 1] & tail).count_ones();
+    2 * agree as i32 - vcount
+}
+
+/// Compute output rows [row0, row0 + out.len()/n) with cache blocking and a
+/// 4x2 register tile. `out` is the row-major slab for exactly those rows.
+fn gemm_rows(a: &BitMatrix, bt: &BitMatrix, row0: usize, out: &mut [i32], tile: usize) {
+    let n = bt.rows();
+    let rows = out.len() / n;
+    let k = a.cols() as i32;
+    let wpr = a.words_per_row();
+    let tail = a.tail_mask();
+    let lw = wpr - 1;
+
+    let mut ib = 0;
+    while ib < rows {
+        let ie = (ib + tile).min(rows);
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + tile).min(n);
+            let mut i = ib;
+            // 4-row register tiles (blocks smaller than 4x2 fall through to
+            // the ragged epilogues — honoring tiny tiles keeps the
+            // equivalence suite's degenerate-tile coverage honest)
+            while i + MR <= ie {
+                let ar: [&[u64]; MR] = [
+                    a.row(row0 + i),
+                    a.row(row0 + i + 1),
+                    a.row(row0 + i + 2),
+                    a.row(row0 + i + 3),
+                ];
+                let mut j = jb;
+                // 4x2 micro-kernel: 8 independent popcount accumulators
+                while j + NR <= je {
+                    let b0 = bt.row(j);
+                    let b1 = bt.row(j + 1);
+                    let mut acc = [[0u32; NR]; MR];
+                    for w in 0..lw {
+                        let bw0 = b0[w];
+                        let bw1 = b1[w];
+                        for (r, arow) in ar.iter().enumerate() {
+                            let aw = arow[w];
+                            acc[r][0] += (!(aw ^ bw0)).count_ones();
+                            acc[r][1] += (!(aw ^ bw1)).count_ones();
+                        }
+                    }
+                    let bw0 = b0[lw];
+                    let bw1 = b1[lw];
+                    for (r, arow) in ar.iter().enumerate() {
+                        let aw = arow[lw];
+                        acc[r][0] += (!(aw ^ bw0) & tail).count_ones();
+                        acc[r][1] += (!(aw ^ bw1) & tail).count_ones();
+                    }
+                    for (r, accr) in acc.iter().enumerate() {
+                        for (c, &agree) in accr.iter().enumerate() {
+                            out[(i + r) * n + j + c] = 2 * agree as i32 - k;
+                        }
+                    }
+                    j += NR;
+                }
+                // ragged column within the block
+                while j < je {
+                    let br = bt.row(j);
+                    for (r, arow) in ar.iter().enumerate() {
+                        out[(i + r) * n + j] = dot_one(arow, br, wpr, tail, k);
+                    }
+                    j += 1;
+                }
+                i += MR;
+            }
+            // ragged rows within the block
+            while i < ie {
+                let arow = a.row(row0 + i);
+                for j in jb..je {
+                    out[i * n + j] = dot_one(arow, bt.row(j), wpr, tail, k);
+                }
+                i += 1;
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
+}
+
+/// Masked counterpart of [`gemm_rows`]: per-row validity masks AND into
+/// every agreement popcount; per-row valid-bit counts are hoisted out of
+/// the j loops.
+fn gemm_rows_masked(
+    a: &BitMatrix,
+    valid: &BitMatrix,
+    bt: &BitMatrix,
+    row0: usize,
+    out: &mut [i32],
+    tile: usize,
+) {
+    let n = bt.rows();
+    let rows = out.len() / n;
+    let wpr = a.words_per_row();
+    let tail = a.tail_mask();
+    let lw = wpr - 1;
+
+    // per-row popcount of the validity mask, computed once per row
+    let vcounts: Vec<i32> = (0..rows)
+        .map(|i| {
+            let vr = valid.row(row0 + i);
+            let mut c: u32 = 0;
+            for w in 0..lw {
+                c += vr[w].count_ones();
+            }
+            c += (vr[lw] & tail).count_ones();
+            c as i32
+        })
+        .collect();
+
+    let mut ib = 0;
+    while ib < rows {
+        let ie = (ib + tile).min(rows);
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + tile).min(n);
+            let mut i = ib;
+            while i + MR <= ie {
+                let ar: [&[u64]; MR] = [
+                    a.row(row0 + i),
+                    a.row(row0 + i + 1),
+                    a.row(row0 + i + 2),
+                    a.row(row0 + i + 3),
+                ];
+                let vr: [&[u64]; MR] = [
+                    valid.row(row0 + i),
+                    valid.row(row0 + i + 1),
+                    valid.row(row0 + i + 2),
+                    valid.row(row0 + i + 3),
+                ];
+                let mut j = jb;
+                while j + NR <= je {
+                    let b0 = bt.row(j);
+                    let b1 = bt.row(j + 1);
+                    let mut acc = [[0u32; NR]; MR];
+                    for w in 0..lw {
+                        let bw0 = b0[w];
+                        let bw1 = b1[w];
+                        for r in 0..MR {
+                            let aw = ar[r][w];
+                            let vw = vr[r][w];
+                            acc[r][0] += (!(aw ^ bw0) & vw).count_ones();
+                            acc[r][1] += (!(aw ^ bw1) & vw).count_ones();
+                        }
+                    }
+                    let bw0 = b0[lw];
+                    let bw1 = b1[lw];
+                    for r in 0..MR {
+                        let aw = ar[r][lw];
+                        let vw = vr[r][lw] & tail;
+                        acc[r][0] += (!(aw ^ bw0) & vw).count_ones();
+                        acc[r][1] += (!(aw ^ bw1) & vw).count_ones();
+                    }
+                    for (r, accr) in acc.iter().enumerate() {
+                        for (c, &agree) in accr.iter().enumerate() {
+                            out[(i + r) * n + j + c] = 2 * agree as i32 - vcounts[i + r];
+                        }
+                    }
+                    j += NR;
+                }
+                while j < je {
+                    let br = bt.row(j);
+                    for r in 0..MR {
+                        out[(i + r) * n + j] =
+                            dot_one_masked(ar[r], vr[r], br, wpr, tail, vcounts[i + r]);
+                    }
+                    j += 1;
+                }
+                i += MR;
+            }
+            while i < ie {
+                let arow = a.row(row0 + i);
+                let vrow = valid.row(row0 + i);
+                for j in jb..je {
+                    out[i * n + j] =
+                        dot_one_masked(arow, vrow, bt.row(j), wpr, tail, vcounts[i]);
+                }
+                i += 1;
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
 }
 
 /// Float entry point used by the inference engine: binarize, pack, multiply.
@@ -107,6 +442,62 @@ mod tests {
                 assert_eq!(*g, *e, "shape ({m},{k},{n})");
             }
         }
+    }
+
+    #[test]
+    fn tiled_and_threaded_match_scalar_exactly() {
+        let mut r = Pcg32::seeded(42);
+        for &(m, k, n) in &[(1, 1, 1), (7, 63, 5), (12, 64, 12), (9, 65, 3), (33, 257, 19)] {
+            let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
+            let bt = BitMatrix::from_pm1_transposed(k, n, &rand_mat(&mut r, k, n));
+            let scalar = xnor_gemm_scalar(&a, &bt);
+            for cfg in [
+                GemmConfig { tile: 1, threads: 1 },
+                GemmConfig { tile: 4, threads: 1 },
+                GemmConfig { tile: 64, threads: 1 },
+                GemmConfig { tile: 8, threads: 2 },
+                GemmConfig { tile: 64, threads: 4 },
+            ] {
+                assert_eq!(
+                    xnor_gemm_with(&a, &bt, &cfg),
+                    scalar,
+                    "({m},{k},{n}) with {cfg:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_tiled_and_threaded_match_scalar_exactly() {
+        let mut r = Pcg32::seeded(43);
+        for &(m, k, n) in &[(1, 1, 1), (6, 63, 4), (10, 96, 9), (21, 130, 7)] {
+            let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
+            let bt = BitMatrix::from_pm1_transposed(k, n, &rand_mat(&mut r, k, n));
+            // random ~half-valid mask
+            let valid = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
+            let scalar = xnor_gemm_masked_scalar(&a, &valid, &bt);
+            for cfg in [
+                GemmConfig { tile: 1, threads: 1 },
+                GemmConfig { tile: 5, threads: 3 },
+                GemmConfig { tile: 64, threads: 2 },
+            ] {
+                assert_eq!(
+                    xnor_gemm_masked_with(&a, &valid, &bt, &cfg),
+                    scalar,
+                    "({m},{k},{n}) with {cfg:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_thread_counts_beyond_rows_are_clamped() {
+        let mut r = Pcg32::seeded(44);
+        let (m, k, n) = (3, 70, 5);
+        let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
+        let bt = BitMatrix::from_pm1_transposed(k, n, &rand_mat(&mut r, k, n));
+        let cfg = GemmConfig { tile: 64, threads: 16 }; // threads > m
+        assert_eq!(xnor_gemm_with(&a, &bt, &cfg), xnor_gemm_scalar(&a, &bt));
     }
 
     #[test]
@@ -165,5 +556,13 @@ mod tests {
         let bt = BitMatrix::from_pm1_transposed(k, n, &b_vals);
         let valid = BitMatrix::from_pm1(m, k, &vec![1.0; m * k]);
         assert_eq!(xnor_gemm_masked(&a, &valid, &bt), xnor_gemm(&a, &bt));
+    }
+
+    #[test]
+    fn empty_outputs_are_fine() {
+        let a = BitMatrix::from_pm1(0, 8, &[]);
+        let bt = BitMatrix::from_pm1(3, 8, &vec![1.0; 24]);
+        assert!(xnor_gemm(&a, &bt).is_empty());
+        assert!(xnor_gemm_with(&bt, &a, &GemmConfig::auto()).is_empty());
     }
 }

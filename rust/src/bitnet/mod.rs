@@ -25,7 +25,10 @@ pub mod fold;
 pub mod gemm;
 pub mod network;
 
-pub use gemm::{xnor_gemm, xnor_gemm_masked};
+pub use gemm::{
+    xnor_gemm, xnor_gemm_masked, xnor_gemm_masked_scalar, xnor_gemm_masked_with,
+    xnor_gemm_scalar, xnor_gemm_with,
+};
 
 /// A matrix of packed ±1 values: `rows` logical rows of `cols` bits each,
 /// padded to whole 64-bit words (pad bits are zero and masked out of every

@@ -19,7 +19,7 @@ use std::collections::BTreeMap;
 use super::conv::{pack_weights_hwio, PackedPatches};
 use super::fold::{fold_bias, fold_bn, Threshold};
 use super::{gemm, BitMatrix};
-use crate::config::ModelArch;
+use crate::config::{GemmConfig, ModelArch};
 use crate::error::{BdnnError, Result};
 use crate::tensor::{conv2d_nhwc, matmul, max_pool_2x2, Tensor};
 
@@ -177,6 +177,9 @@ pub struct PackedNet {
     /// output-layer BN/bias applied to float logits
     out_prefix: String,
     params: Params, // retained for the output affine + analysis
+    /// GEMM tiling/threading for every packed kernel call; defaults to
+    /// auto-detected parallelism so batched serve flushes use all cores
+    gemm: GemmConfig,
 }
 
 impl PackedNet {
@@ -256,6 +259,7 @@ impl PackedNet {
                     layers,
                     out_prefix: p,
                     params: params.clone(),
+                    gemm: GemmConfig::auto(),
                 });
             }
             let th = thresholds_for(&p, out_dim)?;
@@ -272,6 +276,22 @@ impl PackedNet {
             li += 1;
         }
         unreachable!()
+    }
+
+    /// Override the GEMM tiling/threading used by every packed kernel call
+    /// (builder-style; `GemmConfig::serial()` pins single-threaded runs).
+    pub fn with_gemm_config(mut self, cfg: GemmConfig) -> Self {
+        self.gemm = cfg;
+        self
+    }
+
+    /// Set the GEMM tiling/threading in place.
+    pub fn set_gemm_config(&mut self, cfg: GemmConfig) {
+        self.gemm = cfg;
+    }
+
+    pub fn gemm_config(&self) -> GemmConfig {
+        self.gemm
     }
 
     /// Packed storage in bytes of all hidden binary weights (the >=16x
@@ -308,7 +328,7 @@ impl PackedNet {
                     let h = conv_h.as_ref().expect("conv layer ordering");
                     debug_assert_eq!(h.shape()[3], *cin);
                     let patches = super::conv::pack_patches(h, *kh, *kw, 1, true);
-                    let z = packed_conv_output(&patches, wt, *cout);
+                    let z = packed_conv_output(&patches, wt, *cout, &self.gemm);
                     let z = if *pool { max_pool_2x2(&z) } else { z };
                     conv_h = Some(apply_thresholds_nhwc(&z, thresholds));
                 }
@@ -320,7 +340,7 @@ impl PackedNet {
                 PackedLayer::DenseBinary { wt, in_dim, out_dim, thresholds } => {
                     let h = self.dense_input(&mut conv_h, &mut dense_h, *in_dim)?;
                     let hb = BitMatrix::from_pm1(h.shape()[0], *in_dim, h.data());
-                    let out = gemm::xnor_gemm(&hb, wt);
+                    let out = gemm::xnor_gemm_with(&hb, wt, &self.gemm);
                     let z = Tensor::new(
                         &[h.shape()[0], *out_dim],
                         out.into_iter().map(|v| v as f32).collect(),
@@ -330,7 +350,7 @@ impl PackedNet {
                 PackedLayer::DenseOut { wt, in_dim, out_dim } => {
                     let h = self.dense_input(&mut conv_h, &mut dense_h, *in_dim)?;
                     let hb = BitMatrix::from_pm1(h.shape()[0], *in_dim, h.data());
-                    let out = gemm::xnor_gemm(&hb, wt);
+                    let out = gemm::xnor_gemm_with(&hb, wt, &self.gemm);
                     let z = Tensor::new(
                         &[h.shape()[0], *out_dim],
                         out.into_iter().map(|v| v as f32).collect(),
@@ -378,8 +398,13 @@ fn apply_thresholds_nhwc(z: &Tensor, th: &[Threshold]) -> Tensor {
     apply_thresholds_rows(z, th)
 }
 
-fn packed_conv_output(patches: &PackedPatches, wt: &BitMatrix, cout: usize) -> Tensor {
-    let out = gemm::xnor_gemm_masked(&patches.bits, &patches.valid, wt);
+fn packed_conv_output(
+    patches: &PackedPatches,
+    wt: &BitMatrix,
+    cout: usize,
+    cfg: &GemmConfig,
+) -> Tensor {
+    let out = gemm::xnor_gemm_masked_with(&patches.bits, &patches.valid, wt, cfg);
     Tensor::new(
         &[patches.n, patches.ho, patches.wo, cout],
         out.into_iter().map(|v| v as f32).collect(),
@@ -528,6 +553,28 @@ mod tests {
             "diff {}",
             float_logits.max_abs_diff(&packed_logits)
         );
+    }
+
+    #[test]
+    fn gemm_config_does_not_change_logits() {
+        // bit-exact across serial / tiled / threaded kernel configs
+        let arch = cnn_arch();
+        let params = rand_params(&arch, 5);
+        let mut r = Pcg32::seeded(11);
+        let x = Tensor::new(&[2, 8, 8, 3], (0..2 * 64 * 3).map(|_| r.normal()).collect());
+        let auto = PackedNet::prepare(&arch, &params).unwrap().infer(&x).unwrap();
+        let serial = PackedNet::prepare(&arch, &params)
+            .unwrap()
+            .with_gemm_config(GemmConfig::serial())
+            .infer(&x)
+            .unwrap();
+        let threaded = PackedNet::prepare(&arch, &params)
+            .unwrap()
+            .with_gemm_config(GemmConfig { tile: 8, threads: 4 })
+            .infer(&x)
+            .unwrap();
+        assert_eq!(auto.data(), serial.data());
+        assert_eq!(auto.data(), threaded.data());
     }
 
     #[test]

@@ -20,9 +20,8 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
-use sha2::{Digest, Sha256};
-
 use crate::config::json::{self, Json};
+use crate::util::sha256::sha256;
 use crate::error::{BdnnError, Result};
 use crate::tensor::Tensor;
 
@@ -71,7 +70,7 @@ pub fn save(path: impl AsRef<Path>, params: &Params, meta: &CheckpointMeta) -> R
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
-    let digest = Sha256::digest(&buf);
+    let digest = sha256(&buf);
     buf.extend_from_slice(&digest);
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
@@ -92,7 +91,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<(Params, CheckpointMeta)> {
         return Err(BdnnError::Checkpoint(format!("unsupported version {version}")));
     }
     let (body, digest) = buf.split_at(buf.len() - 32);
-    let expect = Sha256::digest(body);
+    let expect = sha256(body);
     if digest != expect.as_slice() {
         return Err(BdnnError::Checkpoint("checksum mismatch (corrupt checkpoint)".into()));
     }

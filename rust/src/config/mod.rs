@@ -74,6 +74,58 @@ impl ModelArch {
     }
 }
 
+/// Tiling/threading knobs for the packed XNOR GEMM (`bitnet::gemm`).
+///
+/// Plumbed into [`crate::bitnet::network::PackedNet`] and the serve path so
+/// batched flushes run whole batches across cores. `threads == 0` means
+/// "auto": resolve against the machine's available parallelism at call
+/// time. `tile` is the cache-block edge (output rows/cols per block); the
+/// 4x2 register tile runs inside each block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmConfig {
+    pub tile: usize,
+    pub threads: usize,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        Self { tile: 64, threads: 0 }
+    }
+}
+
+impl GemmConfig {
+    /// Auto-tuned config: default tile, threads detected at call time.
+    pub fn auto() -> Self {
+        Self::default()
+    }
+
+    /// Single-threaded (but still cache-blocked and register-tiled).
+    pub fn serial() -> Self {
+        Self { threads: 1, ..Self::default() }
+    }
+
+    /// Explicit thread count (0 = auto).
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads, ..Self::default() }
+    }
+
+    /// Resolve `threads == 0` (auto) against the machine.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.tile == 0 {
+            return Err(BdnnError::Config("gemm.tile must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
 /// A training-run configuration (the launcher's TOML).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -99,6 +151,8 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// apply GCN+ZCA preprocessing (paper sec. 5.1.1; cifar/svhn only)
     pub zca: bool,
+    /// packed XNOR GEMM tiling/threading (`[gemm]` TOML section)
+    pub gemm: GemmConfig,
 }
 
 impl Default for RunConfig {
@@ -118,6 +172,7 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             eval_every: 1,
             zca: false,
+            gemm: GemmConfig::default(),
         }
     }
 }
@@ -173,6 +228,12 @@ impl RunConfig {
         if let Some(v) = lookup("zca") {
             cfg.zca = v.as_bool().ok_or_else(|| bad("zca"))?;
         }
+        if let Some(v) = get("gemm", "tile") {
+            cfg.gemm.tile = v.as_i64().ok_or_else(|| bad("gemm.tile"))? as usize;
+        }
+        if let Some(v) = get("gemm", "threads") {
+            cfg.gemm.threads = v.as_i64().ok_or_else(|| bad("gemm.threads"))? as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -199,6 +260,7 @@ impl RunConfig {
         if self.train_size == 0 || self.test_size == 0 {
             return Err(BdnnError::Config("train/test size must be >= 1".into()));
         }
+        self.gemm.validate()?;
         Ok(())
     }
 }
@@ -236,6 +298,27 @@ seed = 7
     #[test]
     fn validation_rejects_bad_dataset() {
         assert!(RunConfig::from_toml_str("dataset = \"imagenet\"").is_err());
+    }
+
+    #[test]
+    fn gemm_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml_str(
+            "name = \"g\"\n[gemm]\ntile = 32\nthreads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.gemm, GemmConfig { tile: 32, threads: 2 });
+        assert_eq!(cfg.gemm.resolved_threads(), 2);
+        assert!(RunConfig::from_toml_str("[gemm]\ntile = 0\n").is_err());
+    }
+
+    #[test]
+    fn gemm_defaults_are_auto() {
+        let g = GemmConfig::default();
+        assert_eq!(g.tile, 64);
+        assert_eq!(g.threads, 0);
+        assert!(g.resolved_threads() >= 1);
+        assert_eq!(GemmConfig::serial().resolved_threads(), 1);
+        assert_eq!(GemmConfig::with_threads(3).resolved_threads(), 3);
     }
 
     #[test]

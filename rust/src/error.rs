@@ -1,29 +1,75 @@
 //! Unified error type for the bdnn crate.
+//!
+//! Hand-rolled Display/Error impls (the `thiserror` substitute — the
+//! offline sandbox builds with zero external dependencies).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum BdnnError {
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
-
-    #[error("data error: {0}")]
     Data(String),
+    Io(std::io::Error),
+}
 
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+impl fmt::Display for BdnnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BdnnError::Config(s) => write!(f, "config error: {s}"),
+            BdnnError::Manifest(s) => write!(f, "manifest error: {s}"),
+            BdnnError::Runtime(s) => write!(f, "runtime error: {s}"),
+            BdnnError::Checkpoint(s) => write!(f, "checkpoint error: {s}"),
+            BdnnError::Data(s) => write!(f, "data error: {s}"),
+            BdnnError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+impl std::error::Error for BdnnError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BdnnError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BdnnError {
+    fn from(e: std::io::Error) -> Self {
+        BdnnError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for BdnnError {
+    fn from(e: xla::Error) -> Self {
+        BdnnError::Runtime(format!("xla error: {e}"))
+    }
 }
 
 pub type Result<T> = std::result::Result<T, BdnnError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_category() {
+        assert_eq!(format!("{}", BdnnError::Config("x".into())), "config error: x");
+        assert_eq!(format!("{}", BdnnError::Checkpoint("y".into())), "checkpoint error: y");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        fn fails() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

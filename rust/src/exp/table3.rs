@@ -114,6 +114,7 @@ pub fn run_one(
         checkpoint_every: 0,
         eval_every: 0, // only final eval (eval_every=0 -> final-epoch eval)
         zca: false,
+        gemm: Default::default(),
     };
     let metrics_path = format!("{}/{}/metrics.jsonl", run.out_dir, run.name);
     let mut trainer = Trainer::new(run.clone(), MetricsWriter::to_file(&metrics_path, false)?)?;

@@ -30,8 +30,11 @@ USAGE:
               [--seed N] [--out-dir D] [--artifacts DIR] [--name S] [--zca]
   bdnn eval   --checkpoint runs/x/final.bdnn [--dataset mnist] [--n 2000]
   bdnn infer  --checkpoint runs/x/final.bdnn [--engine packed|float] [--n 256]
+              [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
   bdnn serve  --checkpoint runs/x/final.bdnn [--addr 127.0.0.1:7979]
               [--max-batch 64] [--max-wait-ms 2]
+              [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
+              (gemm defaults from the TOML [gemm] section; 0 threads = auto)
   bdnn exp    table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory
               [--quick|--full] [--checkpoint P] [--datasets mnist,cifar10]
   bdnn info   [--artifacts DIR]
@@ -187,6 +190,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Packed-kernel tiling/threading: defaults from --config's `[gemm]` TOML
+/// section when provided, overridden by --gemm-threads / --gemm-tile.
+fn gemm_from_args(args: &Args) -> Result<bdnn::config::GemmConfig> {
+    let mut g = match args.str_opt("config") {
+        Some(path) => RunConfig::from_toml_file(path)?.gemm,
+        None => bdnn::config::GemmConfig::auto(),
+    };
+    g.threads = args.usize_or("gemm-threads", g.threads).map_err(cfg_err)?;
+    g.tile = args.usize_or("gemm-tile", g.tile).map_err(cfg_err)?;
+    g.validate()?;
+    Ok(g)
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
     let (params, arch, path) = load_checkpoint_arch(args)?;
     let engine = args.str_or("engine", "packed");
@@ -198,15 +214,16 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let timer = Timer::start();
     let logits = match engine.as_str() {
         "packed" => {
-            let net = PackedNet::prepare(&arch, &params)?;
+            let net = PackedNet::prepare(&arch, &params)?.with_gemm_config(gemm_from_args(args)?);
             let prep_ms = timer.millis();
             let t2 = Timer::start();
             let out = net.infer(&x)?;
             println!(
-                "packed XNOR engine: prepare {prep_ms:.1} ms, infer {:.1} ms ({:.0} samples/s), packed weights {} bytes",
+                "packed XNOR engine: prepare {prep_ms:.1} ms, infer {:.1} ms ({:.0} samples/s), packed weights {} bytes, {} gemm threads",
                 t2.millis(),
                 n as f64 / t2.secs(),
-                net.packed_weight_bytes()
+                net.packed_weight_bytes(),
+                net.gemm_config().resolved_threads()
             );
             out
         }
@@ -233,11 +250,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7979");
     let max_batch = args.usize_or("max-batch", 64).map_err(cfg_err)?;
     let max_wait_ms = args.u64_or("max-wait-ms", 2).map_err(cfg_err)?;
-    let net = std::sync::Arc::new(PackedNet::prepare(&arch, &params)?);
+    let gemm = gemm_from_args(args)?;
+    let net =
+        std::sync::Arc::new(PackedNet::prepare(&arch, &params)?.with_gemm_config(gemm));
     println!(
-        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={max_batch}, max_wait={max_wait_ms}ms]",
+        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={max_batch}, max_wait={max_wait_ms}ms, gemm threads={}]",
         arch.name,
-        net.packed_weight_bytes()
+        net.packed_weight_bytes(),
+        gemm.resolved_threads()
     );
     println!("protocol: one JSON line per request: {{\"id\": n, \"pixels\": [f32; {}]}}", arch.in_dim());
     let server = serve(

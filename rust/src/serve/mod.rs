@@ -11,9 +11,14 @@
 //!                                      ▼
 //!                               dynamic batcher ──▶ worker thread
 //!                               (max_batch / max_wait)   PackedNet::infer
-//!                                      ▲                      │
-//!                                      └── oneshot reply ◀────┘
+//!                                      ▲                      │ (tiled +
+//!                                      └── oneshot reply ◀────┘  threaded
+//!                                                               XNOR GEMM)
 //! ```
+//!
+//! Each coalesced flush runs the whole batch through the tiled/threaded
+//! packed kernels (`GemmConfig` on the `PackedNet`, `--gemm-threads` on the
+//! CLI), so one flush uses every core, not one.
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 7, "pixels": [f32; in_dim]}

@@ -1,6 +1,7 @@
-//! Small shared substrates: PRNGs, timers, running statistics.
+//! Small shared substrates: PRNGs, timers, running statistics, SHA-256.
 
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod timer;
 

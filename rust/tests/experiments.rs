@@ -4,7 +4,9 @@
 use bdnn::exp;
 
 fn ready() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    // training-backed figures execute artifacts: needs the real PJRT
+    // engine ('xla' feature), not the default stub
+    cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 fn opts() -> exp::FigOpts {

@@ -1,0 +1,174 @@
+//! Kernel-equivalence harness: every rung of the XNOR-GEMM ladder (scalar,
+//! tiled, threaded) must produce *bit-identical* output to the float
+//! sign-domain oracle (`tensor::matmul` over ±1 tensors) — popcount sums
+//! are exact integers, so any divergence is a kernel bug, not noise.
+//!
+//! Built on the in-crate property framework (`bdnn::proptest`): random
+//! (m, k, n) with forced ragged-k coverage (k = 1, 63, 64, 65, 128 exercise
+//! every tail-mask edge case), random tile/thread configs, and the masked
+//! variant checked against both a zero-masked float oracle and the packed
+//! conv path with zero-padded borders.
+
+use bdnn::bitnet::{conv, gemm, BitMatrix};
+use bdnn::config::GemmConfig;
+use bdnn::proptest::{check, ensure, Gen};
+use bdnn::tensor::{conv2d_nhwc, matmul, Tensor};
+
+/// Sign-domain float oracle: sign(A) @ sign(B) as exact i32s.
+fn sign_matmul_oracle(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<i32> {
+    let ta = Tensor::new(&[m, k], a.to_vec()).sign_pm1();
+    let tb = Tensor::new(&[k, n], b.to_vec()).sign_pm1();
+    matmul(&ta, &tb).data().iter().map(|&v| v as i32).collect()
+}
+
+/// Random config sweeping the tile/thread space, including degenerate
+/// tiles (1 forces the ragged epilogues everywhere).
+fn random_cfg(g: &mut Gen) -> GemmConfig {
+    let tiles = [1usize, 2, 3, 5, 8, 16, 64, 128];
+    let tile = *g.choose(&tiles);
+    let threads = g.usize_in(1, 4);
+    GemmConfig { tile, threads }
+}
+
+/// Ragged-k pool: every tail-mask edge case plus a random k.
+fn ragged_k(g: &mut Gen) -> usize {
+    let extra = g.usize_in(1, 300);
+    let ks = [1usize, 63, 64, 65, 127, 128, 129, extra];
+    *g.choose(&ks)
+}
+
+#[test]
+fn prop_ladder_matches_float_oracle_on_ragged_shapes() {
+    check("gemm ladder == sign-matmul oracle", 0xE1, 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 24);
+        let k = ragged_k(g);
+        let n = g.usize_in(1, 24);
+        let a = g.vec_f32(m * k, 2.0);
+        let b = g.vec_f32(k * n, 2.0);
+        let oracle = sign_matmul_oracle(m, k, n, &a, &b);
+
+        let ap = BitMatrix::from_pm1(m, k, &a);
+        let bt = BitMatrix::from_pm1_transposed(k, n, &b);
+        let scalar = gemm::xnor_gemm_scalar(&ap, &bt);
+        ensure(scalar == oracle, format!("scalar != oracle at ({m},{k},{n})"))?;
+
+        let cfg = random_cfg(g);
+        let tiled = gemm::xnor_gemm_with(&ap, &bt, &GemmConfig { threads: 1, ..cfg });
+        ensure(tiled == oracle, format!("tiled != oracle at ({m},{k},{n}) cfg {cfg:?}"))?;
+
+        let threaded = gemm::xnor_gemm_with(&ap, &bt, &cfg);
+        ensure(
+            threaded == oracle,
+            format!("threaded != oracle at ({m},{k},{n}) cfg {cfg:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_masked_ladder_matches_zero_masked_oracle() {
+    check("masked gemm ladder == zero-masked oracle", 0xE2, 50, |g: &mut Gen| {
+        let m = g.usize_in(1, 20);
+        let k = ragged_k(g);
+        let n = g.usize_in(1, 16);
+        let a = g.vec_f32(m * k, 2.0);
+        let b = g.vec_f32(k * n, 2.0);
+        // random ~half-valid mask (bit = sample >= 0)
+        let mask_src = g.vec_pm1(m * k);
+        let valid = BitMatrix::from_pm1(m, k, &mask_src);
+
+        // float oracle: invalid lanes are exact zeros
+        let mut az = Tensor::new(&[m, k], a.clone()).sign_pm1();
+        for (v, &keep) in az.data_mut().iter_mut().zip(&mask_src) {
+            if keep < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let tb = Tensor::new(&[k, n], b.clone()).sign_pm1();
+        let oracle: Vec<i32> = matmul(&az, &tb).data().iter().map(|&v| v as i32).collect();
+
+        let ap = BitMatrix::from_pm1(m, k, &a);
+        let bt = BitMatrix::from_pm1_transposed(k, n, &b);
+        let scalar = gemm::xnor_gemm_masked_scalar(&ap, &valid, &bt);
+        ensure(scalar == oracle, format!("masked scalar != oracle at ({m},{k},{n})"))?;
+
+        let cfg = random_cfg(g);
+        let fast = gemm::xnor_gemm_masked_with(&ap, &valid, &bt, &cfg);
+        ensure(
+            fast == oracle,
+            format!("masked tiled/threaded != oracle at ({m},{k},{n}) cfg {cfg:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_conv_ladder_matches_float_conv_with_zero_padded_borders() {
+    check("packed conv ladder == float conv", 0xE3, 15, |g: &mut Gen| {
+        let n = g.usize_in(1, 2);
+        let hw = g.usize_in(4, 10);
+        let cin = g.usize_in(1, 5);
+        let cout = g.usize_in(1, 5);
+        let stride = *g.choose(&[1usize, 2]);
+        let x = Tensor::new(&[n, hw, hw, cin], g.vec_f32(n * hw * hw * cin, 1.5));
+        let w = Tensor::new(&[3, 3, cin, cout], g.vec_f32(9 * cin * cout, 1.5));
+        // the float conv zero-pads borders; the masked GEMM must agree
+        let expect = conv2d_nhwc(&x.sign_pm1(), &w.sign_pm1(), stride, true);
+        let cfg = random_cfg(g);
+        for (label, got) in [
+            ("auto", conv::binary_conv2d(&x, &w, stride, true)),
+            ("serial", conv::binary_conv2d_with(&x, &w, stride, true, &GemmConfig::serial())),
+            ("random", conv::binary_conv2d_with(&x, &w, stride, true, &cfg)),
+        ] {
+            ensure(
+                got.max_abs_diff(&expect) < 1e-4,
+                format!(
+                    "conv {label} mismatch {} at {n}x{hw}x{cin}->{cout} s{stride} cfg {cfg:?}",
+                    got.max_abs_diff(&expect)
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_tail_mask_edges_all_threads() {
+    // deterministic (not sampled) sweep of the exact k values the issue
+    // calls out, at every thread count up to 4 and the degenerate tile
+    for &k in &[1usize, 63, 64, 65, 128] {
+        let (m, n) = (13, 9);
+        let a: Vec<f32> =
+            (0..m * k).map(|i| if (i * 2654435761usize) & 2 == 2 { 1.0 } else { -1.0 }).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| if (i * 2246822519usize) & 4 == 4 { 1.0 } else { -1.0 }).collect();
+        let oracle = sign_matmul_oracle(m, k, n, &a, &b);
+        let ap = BitMatrix::from_pm1(m, k, &a);
+        let bt = BitMatrix::from_pm1_transposed(k, n, &b);
+        assert_eq!(gemm::xnor_gemm_scalar(&ap, &bt), oracle, "scalar k={k}");
+        for threads in 1..=4 {
+            for tile in [1usize, 4, 64] {
+                let cfg = GemmConfig { tile, threads };
+                assert_eq!(
+                    gemm::xnor_gemm_with(&ap, &bt, &cfg),
+                    oracle,
+                    "k={k} threads={threads} tile={tile}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_path_is_actually_exercised_at_scale() {
+    // large enough that auto mode passes the small-problem cutoff on any
+    // multi-core machine; still exact vs scalar
+    let (m, k, n) = (192, 257, 160);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i * 31 + 7) % 13) as f32 - 6.0).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i * 17 + 3) % 11) as f32 - 5.0).collect();
+    let ap = BitMatrix::from_pm1(m, k, &a);
+    let bt = BitMatrix::from_pm1_transposed(k, n, &b);
+    let scalar = gemm::xnor_gemm_scalar(&ap, &bt);
+    for threads in [0usize, 2, 3, 4, 7] {
+        let cfg = GemmConfig { tile: 48, threads };
+        assert_eq!(gemm::xnor_gemm_with(&ap, &bt, &cfg), scalar, "threads={threads}");
+    }
+}

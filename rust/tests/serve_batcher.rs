@@ -1,0 +1,145 @@
+//! Concurrency contract of the dynamic batcher: under N concurrent
+//! submitters every `InferRequest` gets exactly one `InferReply` with the
+//! matching `id`, and both flush policies (`max_batch` full-batch flush,
+//! `max_wait` timeout flush) actually trigger.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bdnn::bitnet::network::{PackedNet, Params};
+use bdnn::config::ModelArch;
+use bdnn::serve::{Batcher, BatcherConfig};
+use bdnn::tensor::Tensor;
+use bdnn::util::Pcg32;
+
+const IN_DIM: usize = 12;
+const CLASSES: usize = 4;
+
+fn tiny_net() -> Arc<PackedNet> {
+    let arch = ModelArch {
+        name: "t".into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![IN_DIM],
+        classes: CLASSES,
+        hidden: vec![16],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 4,
+        eval_batch: 4,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    };
+    let mut r = Pcg32::seeded(0);
+    let mut p = Params::new();
+    p.insert(
+        "L00_W".into(),
+        Tensor::new(&[IN_DIM, 16], (0..IN_DIM * 16).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert("L00_b".into(), Tensor::new(&[16], (0..16).map(|_| 0.1 * r.normal()).collect()));
+    p.insert(
+        "L01_W".into(),
+        Tensor::new(&[16, CLASSES], (0..16 * CLASSES).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert(
+        "L01_b".into(),
+        Tensor::new(&[CLASSES], (0..CLASSES).map(|_| 0.1 * r.normal()).collect()),
+    );
+    Arc::new(PackedNet::prepare(&arch, &p).unwrap())
+}
+
+fn spawn_batcher(cfg: BatcherConfig) -> Arc<Batcher> {
+    Arc::new(Batcher::spawn(tiny_net(), IN_DIM, vec![IN_DIM], cfg))
+}
+
+#[test]
+fn n_submitters_each_get_exactly_one_matching_reply() {
+    let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10), queue_depth: 32 };
+    let b = spawn_batcher(cfg);
+    const SUBMITTERS: u64 = 8;
+    const PER_THREAD: u64 = 16;
+
+    let mut handles = Vec::new();
+    for t in 0..SUBMITTERS {
+        let b2 = b.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut r = Pcg32::seeded(t);
+            let mut replies = Vec::new();
+            for q in 0..PER_THREAD {
+                let id = t * PER_THREAD + q;
+                let pixels: Vec<f32> = (0..IN_DIM).map(|_| r.normal()).collect();
+                let rep = b2.infer_blocking(id, pixels).unwrap();
+                replies.push(rep);
+            }
+            replies
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let total = SUBMITTERS * PER_THREAD;
+    assert_eq!(all.len() as u64, total);
+
+    // exactly one reply per id, every id valid
+    let mut ids: Vec<u64> = all.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids, (0..total).collect::<Vec<_>>(), "duplicate or missing ids");
+    for rep in &all {
+        assert!(rep.pred < CLASSES, "id {}: bad pred {}", rep.id, rep.pred);
+        assert_eq!(rep.logits.len(), CLASSES, "id {}: bad logits", rep.id);
+    }
+
+    // bookkeeping is consistent: every request counted once, every batch
+    // flushed for exactly one of the two reasons
+    let stats = &b.stats;
+    assert_eq!(stats.requests.load(Ordering::SeqCst), total);
+    let batches = stats.batches.load(Ordering::SeqCst);
+    assert!(batches >= 1);
+    assert_eq!(
+        stats.flush_full.load(Ordering::SeqCst) + stats.flush_timeout.load(Ordering::SeqCst),
+        batches
+    );
+}
+
+#[test]
+fn full_batch_flush_policy_triggers() {
+    // max_wait far beyond the test budget: the only way requests complete
+    // is the max_batch flush path
+    let cfg = BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(30), queue_depth: 8 };
+    let b = spawn_batcher(cfg);
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let b2 = b.clone();
+        handles.push(std::thread::spawn(move || {
+            b2.infer_blocking(i, vec![0.5; IN_DIM]).unwrap()
+        }));
+    }
+    for h in handles {
+        let rep = h.join().unwrap();
+        assert_eq!(rep.logits.len(), CLASSES);
+    }
+    assert!(
+        b.stats.flush_full.load(Ordering::SeqCst) >= 1,
+        "no full-batch flush despite max_batch=2 and 4 concurrent requests"
+    );
+    assert_eq!(b.stats.requests.load(Ordering::SeqCst), 4);
+}
+
+#[test]
+fn timeout_flush_policy_triggers() {
+    // max_batch far above what we submit: the only way the single request
+    // completes is the max_wait timeout path
+    let cfg = BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5), queue_depth: 8 };
+    let b = spawn_batcher(cfg);
+    let rep = b.infer_blocking(99, vec![0.25; IN_DIM]).unwrap();
+    assert_eq!(rep.id, 99);
+    assert_eq!(b.stats.flush_timeout.load(Ordering::SeqCst), 1);
+    assert_eq!(b.stats.flush_full.load(Ordering::SeqCst), 0);
+    assert_eq!(b.stats.requests.load(Ordering::SeqCst), 1);
+    // queue latency was observed (the request aged before the flush)
+    assert!(rep.queue_us > 0);
+}
