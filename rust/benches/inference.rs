@@ -6,9 +6,9 @@
 //! needs no artifacts; the trained-model section still requires
 //! `make artifacts` and is skipped otherwise.
 
-use bdnn::benchkit::Bench;
+use bdnn::benchkit::{gemm_banner, Bench};
 use bdnn::bitnet::network::{forward_float, PackedNet, Params};
-use bdnn::config::{GemmConfig, ModelArch, RunConfig};
+use bdnn::config::{GemmConfig, KernelKind, ModelArch, RunConfig};
 use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
 use bdnn::data::Dataset;
 use bdnn::tensor::Tensor;
@@ -55,8 +55,8 @@ fn main() {
     let (arch, params) = synthetic_mlp();
     let auto = GemmConfig::auto();
     println!(
-        "== serving-path inference ladder (784-2048-2048-10 MLP, {} threads) ==\n",
-        auto.resolved_threads()
+        "== serving-path inference ladder (784-2048-2048-10 MLP) ==\n   {}\n",
+        gemm_banner(&auto)
     );
     let mut bench = Bench::new(1.0);
     // packing is batch-independent: prepare once per config, reuse across
@@ -64,7 +64,12 @@ fn main() {
     let serial = PackedNet::prepare(&arch, &params)
         .unwrap()
         .with_gemm_config(GemmConfig::serial());
-    let threaded = PackedNet::prepare(&arch, &params).unwrap().with_gemm_config(auto);
+    let threaded = PackedNet::prepare(&arch, &params)
+        .unwrap()
+        .with_gemm_config(auto.with_kernel(KernelKind::Threaded));
+    let simd = PackedNet::prepare(&arch, &params)
+        .unwrap()
+        .with_gemm_config(auto.with_kernel(KernelKind::Simd));
     for batch in [1usize, 16, 64, 256] {
         let mut r = Pcg32::seeded(batch as u64);
         let x = Tensor::new(
@@ -77,6 +82,9 @@ fn main() {
         });
         bench.run(&format!("packed threaded batch={batch}"), Some(batch as f64), || {
             black_box(threaded.infer(black_box(&x)).unwrap());
+        });
+        bench.run(&format!("packed simd     batch={batch}"), Some(batch as f64), || {
+            black_box(simd.infer(black_box(&x)).unwrap());
         });
         bench.run(&format!("float ref       batch={batch}"), Some(batch as f64), || {
             black_box(forward_float(&arch, &params, black_box(&x)).unwrap());

@@ -1,17 +1,20 @@
-//! Bench: the XNOR-GEMM kernel ladder — scalar vs tiled vs threaded — plus
-//! the f32 GEMM baseline (the sec. 4 hot path).
+//! Bench: the XNOR-GEMM kernel ladder — scalar vs tiled vs threaded vs
+//! simd — plus the f32 GEMM baseline (the sec. 4 hot path).
 //!
 //! Supports the paper's complexity argument on a real ISA: one u64 word op
-//! carries 64 binary MACs, and the tiled/threaded kernels then recover the
-//! ILP and core-level parallelism the scalar triple loop leaves idle. The
+//! carries 64 binary MACs; the tiled/threaded rungs recover the ILP and
+//! core-level parallelism the scalar triple loop leaves idle; the simd
+//! rung widens each popcount step to 256 (AVX2) or 128 (NEON) MACs. The
 //! speedups are *measured* here, not asserted; the equivalence suite
-//! (`rust/tests/gemm_equivalence.rs`) proves all three rungs bit-identical.
+//! (`rust/tests/gemm_equivalence.rs`) proves all four rungs bit-identical.
+//! This bench's per-shape `speedup_table` output is the source of the
+//! README Performance table (see `docs/KERNELS.md` §reading-the-tables).
 //!
 //! (The *energy* claim is analytical — `cargo bench --bench energy_model`.)
 
-use bdnn::benchkit::Bench;
+use bdnn::benchkit::{gemm_banner, Bench};
 use bdnn::bitnet::{gemm, BitMatrix};
-use bdnn::config::GemmConfig;
+use bdnn::config::{GemmConfig, KernelKind};
 use bdnn::tensor::{matmul, Tensor};
 use bdnn::util::Pcg32;
 use std::hint::black_box;
@@ -23,8 +26,8 @@ fn rand_vec(r: &mut Pcg32, n: usize) -> Vec<f32> {
 fn main() {
     let auto = GemmConfig::auto();
     println!(
-        "== XNOR-popcount GEMM ladder: scalar -> tiled -> threaded ({} threads) ==\n",
-        auto.resolved_threads()
+        "== XNOR-popcount GEMM ladder: scalar -> tiled -> threaded -> simd ==\n   {}\n",
+        gemm_banner(&auto)
     );
     let mut bench = Bench::new(1.0);
     // (m, k, n): MLP hidden layers + CNN im2col shapes from the paper nets,
@@ -57,8 +60,13 @@ fn main() {
         bench.run(&format!("xnor tiled    {label}"), Some(macs), || {
             black_box(gemm::xnor_gemm_with(black_box(&ap), black_box(&bt), &tiled));
         });
+        let threaded = auto.with_kernel(KernelKind::Threaded);
         bench.run(&format!("xnor threaded {label}"), Some(macs), || {
-            black_box(gemm::xnor_gemm_with(black_box(&ap), black_box(&bt), &auto));
+            black_box(gemm::xnor_gemm_with(black_box(&ap), black_box(&bt), &threaded));
+        });
+        let simd = auto.with_kernel(KernelKind::Simd);
+        bench.run(&format!("xnor simd     {label}"), Some(macs), || {
+            black_box(gemm::xnor_gemm_with(black_box(&ap), black_box(&bt), &simd));
         });
         // packing included: the non-steady-state (first-request) path
         bench.run(&format!("xnor pack+mul {label}"), Some(macs), || {
@@ -80,7 +88,9 @@ fn main() {
         "note: the paper's 64x word-parallelism bound applies to the inner\n\
          loop; packing, masking and the i32 epilogue dilute it. The tiled\n\
          rung adds 4x2 register blocking (ILP + word reuse); the threaded\n\
-         rung shards output row-blocks across cores. See the module docs in\n\
-         rust/src/bitnet/gemm.rs and the Performance section of README.md."
+         rung shards output row-blocks across cores; the simd rung widens\n\
+         each popcount step to a whole vector (AVX2 vpshufb / NEON vcnt).\n\
+         See docs/KERNELS.md, the module docs in rust/src/bitnet/gemm.rs,\n\
+         and the Performance section of README.md."
     );
 }

@@ -4,7 +4,23 @@
 //! cap is reached, reports mean/std/min plus derived throughput. Used by all
 //! `rust/benches/*` targets (each is a `harness = false` binary).
 
+use crate::bitnet::dispatch;
+use crate::config::GemmConfig;
 use crate::util::{RunningStats, Timer};
+
+/// Header banner for bench output: records which rung of the kernel
+/// ladder the dispatch layer resolved for `cfg`, so saved speedup tables
+/// are attributable to a concrete kernel/backend (e.g. `simd(avx2)`), not
+/// just "auto".
+///
+/// ```
+/// use bdnn::{benchkit, config::{GemmConfig, KernelKind}};
+/// let banner = benchkit::gemm_banner(&GemmConfig::auto().with_kernel(KernelKind::Simd));
+/// assert!(banner.starts_with("engine: kernel=simd("));
+/// ```
+pub fn gemm_banner(cfg: &GemmConfig) -> String {
+    format!("engine: {}", dispatch::summary(cfg))
+}
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]

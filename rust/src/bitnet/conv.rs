@@ -156,12 +156,26 @@ pub fn pack_weights_hwio(w: &Tensor) -> BitMatrix {
 }
 
 /// Binary conv2d: sign(x) (*) sign(w), NHWC/HWIO, output (N, Ho, Wo, Cout).
-/// Runs the tiled/threaded masked GEMM with an auto-detected config.
+/// Runs the masked GEMM on the best probed rung of the kernel ladder
+/// (auto-detected config).
+///
+/// ```
+/// use bdnn::bitnet::conv::binary_conv2d;
+/// use bdnn::tensor::Tensor;
+/// // all-ones 5x5 input, all-ones 3x3 kernel, SAME padding: the interior
+/// // sees 9 taps, the corners only 4 (zero-padded borders are masked out)
+/// let x = Tensor::full(&[1, 5, 5, 1], 1.0);
+/// let w = Tensor::full(&[3, 3, 1, 1], 1.0);
+/// let y = binary_conv2d(&x, &w, 1, true);
+/// assert_eq!(y.data()[0], 4.0);           // corner
+/// assert_eq!(y.data()[5 + 1], 9.0);       // interior (row 1, col 1)
+/// ```
 pub fn binary_conv2d(x: &Tensor, w: &Tensor, stride: usize, same: bool) -> Tensor {
     binary_conv2d_with(x, w, stride, same, &GemmConfig::auto())
 }
 
-/// Binary conv2d with an explicit GEMM tiling/threading config.
+/// Binary conv2d with an explicit GEMM kernel/tiling/threading config
+/// (any rung of the ladder — the masked variant dispatches identically).
 pub fn binary_conv2d_with(
     x: &Tensor,
     w: &Tensor,

@@ -1,0 +1,156 @@
+//! Kernel dispatch: resolve a [`GemmConfig`] request into one concrete
+//! rung of the XNOR-GEMM ladder.
+//!
+//! The ladder (`docs/KERNELS.md` has the full decision tree):
+//!
+//! ```text
+//! scalar ──▶ tiled ──▶ threaded ──▶ simd(avx2 | neon | portable)
+//! ```
+//!
+//! [`KernelKind::Auto`] probes CPU features once per process
+//! ([`popcount::detect`]: `is_x86_feature_detected!("avx2")` on x86_64,
+//! architectural NEON on aarch64, portable-unrolled everywhere else) and
+//! picks the highest rung that pays: the SIMD rung with an AVX2/NEON
+//! backend, or the threaded rung when only the portable fallback is
+//! available. Named kinds force a rung exactly — that is how
+//! the equivalence suite pins each rung against the scalar oracle and how
+//! `--gemm-kernel`/`[gemm] kernel` let an operator ablate the ladder on
+//! their own hardware.
+//!
+//! Resolution is pure (no global state beyond the cached feature probe),
+//! so a `PackedNet`, the serve stats endpoint, and `benchkit` all report
+//! the same [`KernelDispatch::describe`] string for a given config.
+
+use super::popcount::{self, SimdBackend};
+use crate::config::{GemmConfig, KernelKind};
+
+/// A fully-resolved kernel choice: which rung runs, and (for the SIMD
+/// rung) which microkernel backend feeds its inner loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelDispatch {
+    /// Reference triple loop (ignores tile/thread knobs).
+    Scalar,
+    /// Cache-blocked + register-tiled, forced single-threaded.
+    Tiled,
+    /// Tiled with row-block sharding across threads.
+    Threaded,
+    /// Threaded with a SIMD inner popcount loop.
+    Simd(SimdBackend),
+}
+
+impl KernelDispatch {
+    /// Resolve a config's [`KernelKind`] into a concrete rung.
+    ///
+    /// `Auto` takes the SIMD rung when the probe finds a real vector unit
+    /// (AVX2/NEON) and otherwise stays on the threaded rung: the portable
+    /// microkernel trades away the tiled kernel's 4×2 register-tile word
+    /// reuse, so it is only a win when it stands in for actual SIMD.
+    /// Forcing `kernel = "simd"` still runs it (that is how the
+    /// equivalence suite covers the portable backend everywhere). The
+    /// probe's fallback ordering (AVX2 > NEON > portable) and this
+    /// auto rule are pinned by `rust/tests/kernel_dispatch.rs`.
+    pub fn resolve(cfg: &GemmConfig) -> Self {
+        match cfg.kernel {
+            KernelKind::Auto => match popcount::detect() {
+                SimdBackend::Portable => KernelDispatch::Threaded,
+                be => KernelDispatch::Simd(be),
+            },
+            KernelKind::Scalar => KernelDispatch::Scalar,
+            KernelKind::Tiled => KernelDispatch::Tiled,
+            KernelKind::Threaded => KernelDispatch::Threaded,
+            KernelKind::Simd => KernelDispatch::Simd(popcount::detect()),
+        }
+    }
+
+    /// Human/JSON-facing description, e.g. `"simd(avx2)"` or `"tiled"`.
+    /// Reported by `bdnn serve`'s stats endpoint and the bench banners.
+    pub fn describe(&self) -> String {
+        match self {
+            KernelDispatch::Scalar => "scalar".into(),
+            KernelDispatch::Tiled => "tiled".into(),
+            KernelDispatch::Threaded => "threaded".into(),
+            KernelDispatch::Simd(be) => format!("simd({})", be.name()),
+        }
+    }
+
+    /// True for the rungs that shard row-blocks across threads.
+    pub fn is_threaded(&self) -> bool {
+        matches!(self, KernelDispatch::Threaded | KernelDispatch::Simd(_))
+    }
+
+    /// Worker threads this rung will actually use under `cfg`: the
+    /// resolved thread count for the sharded rungs, and always 1 for
+    /// scalar/tiled (which ignore the `threads` knob) — so banners and
+    /// the stats endpoint never advertise parallelism a forced
+    /// single-threaded rung won't deliver. (The threaded rungs may still
+    /// use fewer workers at run time: the count is clamped to the row
+    /// count and a small-problem cutoff.)
+    pub fn effective_threads(&self, cfg: &GemmConfig) -> usize {
+        if self.is_threaded() {
+            cfg.resolved_threads()
+        } else {
+            1
+        }
+    }
+}
+
+/// One-line machine/kernel summary for bench banners and `bdnn serve`
+/// startup, e.g. `kernel=simd(avx2) threads=8 tile=64`. The thread count
+/// is the resolved rung's [`KernelDispatch::effective_threads`].
+pub fn summary(cfg: &GemmConfig) -> String {
+    let d = KernelDispatch::resolve(cfg);
+    format!(
+        "kernel={} threads={} tile={}",
+        d.describe(),
+        d.effective_threads(cfg),
+        cfg.tile
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_kinds_resolve_to_themselves() {
+        let base = GemmConfig::default();
+        assert_eq!(
+            KernelDispatch::resolve(&base.with_kernel(KernelKind::Scalar)),
+            KernelDispatch::Scalar
+        );
+        assert_eq!(
+            KernelDispatch::resolve(&base.with_kernel(KernelKind::Tiled)),
+            KernelDispatch::Tiled
+        );
+        assert_eq!(
+            KernelDispatch::resolve(&base.with_kernel(KernelKind::Threaded)),
+            KernelDispatch::Threaded
+        );
+    }
+
+    #[test]
+    fn auto_takes_simd_only_with_a_real_vector_unit() {
+        let base = GemmConfig::default();
+        let auto = KernelDispatch::resolve(&base);
+        match popcount::detect() {
+            SimdBackend::Portable => assert_eq!(auto, KernelDispatch::Threaded),
+            be => assert_eq!(auto, KernelDispatch::Simd(be)),
+        }
+        assert!(auto.is_threaded());
+        // forcing "simd" always runs the SIMD rung, portable included
+        let forced = KernelDispatch::resolve(&base.with_kernel(KernelKind::Simd));
+        assert_eq!(forced, KernelDispatch::Simd(popcount::detect()));
+        assert!(forced.describe().starts_with("simd("));
+    }
+
+    #[test]
+    fn summary_names_every_knob_and_reports_effective_threads() {
+        // tiled ignores the threads knob, so the summary must say 1
+        let s = summary(&GemmConfig { tile: 32, threads: 2, kernel: KernelKind::Tiled });
+        assert_eq!(s, "kernel=tiled threads=1 tile=32");
+        let s = summary(&GemmConfig { tile: 64, threads: 3, kernel: KernelKind::Threaded });
+        assert_eq!(s, "kernel=threaded threads=3 tile=64");
+        let scalar = KernelDispatch::Scalar;
+        assert_eq!(scalar.effective_threads(&GemmConfig::with_threads(8)), 1);
+    }
+}

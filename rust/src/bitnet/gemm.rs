@@ -8,12 +8,13 @@
 //! dot += 2 * popcnt(!(aw ^ bw) & mask) - valid_bits
 //! ```
 //!
-//! # Kernel ladder (scalar → tiled → threaded)
+//! # Kernel ladder (scalar → tiled → threaded → simd)
 //!
-//! Three implementations of the same contract, each bit-identical to the
+//! Four implementations of the same contract, each bit-identical to the
 //! last (pinned by `rust/tests/gemm_equivalence.rs` and the unit tests
-//! below — popcount sums are exact integers, so any tiling or thread
-//! schedule must produce *identical* bytes, not merely close ones):
+//! below — popcount sums are exact integers, so any tiling, thread
+//! schedule, or SIMD backend must produce *identical* bytes, not merely
+//! close ones):
 //!
 //! 1. **scalar** ([`xnor_gemm_scalar`]) — the reference triple loop, one
 //!    output element at a time. Correctness yardstick and bench baseline.
@@ -29,16 +30,28 @@
 //!    immutably. `GemmConfig::threads == 0` auto-detects available
 //!    parallelism and falls back to serial under a small-problem cutoff
 //!    where spawn overhead would dominate.
+//! 4. **simd** — the threaded schedule with the inner popcount loop
+//!    vectorized by a [`SimdBackend`] microkernel
+//!    ([`crate::bitnet::popcount`]): AVX2 Muła `vpshufb` (256 binary MACs
+//!    per step), NEON `vcnt` (128), or the portable 4-way-unrolled
+//!    `count_ones` fallback. Which backend runs is decided once per
+//!    process by [`KernelDispatch`] (`is_x86_feature_detected!` probe),
+//!    overridable via `[gemm] kernel = "..."` in TOML and `--gemm-kernel`
+//!    on the CLI.
 //!
 //! The masked variant ([`xnor_gemm_masked_with`]) gets the same treatment;
 //! it additionally honours per-row validity masks so zero-padded conv
 //! borders contribute exact zeros (matching the Pallas/XLA oracle).
 //!
-//! The hot loop is pure `xor` + `not` + `count_ones` (x86 `popcnt`); the
-//! energy argument of paper sec. 4.1 maps each 64-lane word op to 64 2-bit
-//! adds. Run `cargo bench --bench xnor_gemm` for the scalar/tiled/threaded
-//! comparison across paper-relevant shapes.
+//! The hot loop is pure `xor` + `not` + popcount (scalar x86 `popcnt`, or
+//! whole-vector byte counts on the SIMD rung); the energy argument of
+//! paper sec. 4.1 maps each 64-lane word op to 64 2-bit adds. Run
+//! `cargo bench --bench xnor_gemm` for the full-ladder comparison across
+//! paper-relevant shapes, and see `docs/KERNELS.md` for the blocking
+//! diagrams.
 
+use super::dispatch::KernelDispatch;
+use super::popcount::SimdBackend;
 use super::BitMatrix;
 use crate::config::GemmConfig;
 
@@ -51,7 +64,14 @@ const NR: usize = 2;
 const SMALL_PROBLEM_WORD_OPS: usize = 1 << 16;
 
 /// out[i, j] = dot(signA_row_i, signB_col_j); out is row-major (m, n), i32.
-/// Dispatches to the tiled/threaded kernel with an auto-detected config.
+/// Runs the best probed rung of the ladder ([`GemmConfig::auto`]).
+///
+/// ```
+/// use bdnn::bitnet::{xnor_gemm, BitMatrix};
+/// // two identical ±1 rows of length 70: dot = +70
+/// let a = BitMatrix::from_pm1(1, 70, &[1.0; 70]);
+/// assert_eq!(xnor_gemm(&a, &a), vec![70]);
+/// ```
 pub fn xnor_gemm(a: &BitMatrix, bt: &BitMatrix) -> Vec<i32> {
     xnor_gemm_with(a, bt, &GemmConfig::auto())
 }
@@ -171,20 +191,29 @@ where
     out
 }
 
-/// Tiled + (optionally) threaded XNOR GEMM. Bit-identical to
-/// [`xnor_gemm_scalar`] for every (m, k, n) and every config.
+/// Ladder entry point: dispatch `cfg` to one rung (see
+/// [`KernelDispatch::resolve`]) and run it. Bit-identical to
+/// [`xnor_gemm_scalar`] for every (m, k, n) and every config — forcing
+/// `kernel = "simd"` (or any other rung) changes speed, never bytes.
 pub fn xnor_gemm_with(a: &BitMatrix, bt: &BitMatrix, cfg: &GemmConfig) -> Vec<i32> {
     assert_eq!(a.cols(), bt.cols(), "contraction mismatch: {} vs {}", a.cols(), bt.cols());
     let (m, n) = (a.rows(), bt.rows());
     assert!(a.cols() > 0 || m == 0 || n == 0, "xnor_gemm needs k >= 1");
     let tile = cfg.tile;
-    run_sharded(m, n, a.words_per_row(), cfg, |row0, chunk| {
-        gemm_rows(a, bt, row0, chunk, tile)
-    })
+    dispatch_ladder(
+        m,
+        n,
+        a.words_per_row(),
+        cfg,
+        || xnor_gemm_scalar(a, bt),
+        |row0, chunk| gemm_rows(a, bt, row0, chunk, tile),
+        |row0, chunk, be| gemm_rows_simd(a, bt, row0, chunk, tile, be),
+    )
 }
 
-/// Tiled + threaded masked XNOR GEMM. Bit-identical to
-/// [`xnor_gemm_masked_scalar`] for every input and config.
+/// Masked ladder entry point: same dispatch as [`xnor_gemm_with`], with
+/// per-row validity masks. Bit-identical to [`xnor_gemm_masked_scalar`]
+/// for every input and config.
 pub fn xnor_gemm_masked_with(
     a: &BitMatrix,
     valid: &BitMatrix,
@@ -197,9 +226,47 @@ pub fn xnor_gemm_masked_with(
     let (m, n) = (a.rows(), bt.rows());
     assert!(a.cols() > 0 || m == 0 || n == 0, "xnor_gemm needs k >= 1");
     let tile = cfg.tile;
-    run_sharded(m, n, a.words_per_row(), cfg, |row0, chunk| {
-        gemm_rows_masked(a, valid, bt, row0, chunk, tile)
-    })
+    dispatch_ladder(
+        m,
+        n,
+        a.words_per_row(),
+        cfg,
+        || xnor_gemm_masked_scalar(a, valid, bt),
+        |row0, chunk| gemm_rows_masked(a, valid, bt, row0, chunk, tile),
+        |row0, chunk, be| gemm_rows_masked_simd(a, valid, bt, row0, chunk, tile, be),
+    )
+}
+
+/// The one rung-selection point shared by the plain and masked entry
+/// paths: resolve `cfg`, then run `scalar` directly, `rows` under the
+/// tiled (forced single-thread) or threaded schedule, or `rows_simd`
+/// (handed the probed backend) under the threaded schedule. Adding a
+/// rung means one new arm here — both GEMM variants pick it up together.
+fn dispatch_ladder<S, R, V>(
+    m: usize,
+    n: usize,
+    wpr: usize,
+    cfg: &GemmConfig,
+    scalar: S,
+    rows: R,
+    rows_simd: V,
+) -> Vec<i32>
+where
+    S: FnOnce() -> Vec<i32>,
+    R: Fn(usize, &mut [i32]) + Sync,
+    V: Fn(usize, &mut [i32], SimdBackend) + Sync,
+{
+    match KernelDispatch::resolve(cfg) {
+        KernelDispatch::Scalar => scalar(),
+        KernelDispatch::Tiled => {
+            let serial = GemmConfig { threads: 1, ..*cfg };
+            run_sharded(m, n, wpr, &serial, rows)
+        }
+        KernelDispatch::Threaded => run_sharded(m, n, wpr, cfg, rows),
+        KernelDispatch::Simd(be) => {
+            run_sharded(m, n, wpr, cfg, move |row0, chunk| rows_simd(row0, chunk, be))
+        }
+    }
 }
 
 /// One output element against a fully-valid row (shared epilogue of the
@@ -212,6 +279,18 @@ fn dot_one(ar: &[u64], br: &[u64], wpr: usize, tail: u64, k: i32) -> i32 {
     }
     agree += (!(ar[wpr - 1] ^ br[wpr - 1]) & tail).count_ones();
     2 * agree as i32 - k
+}
+
+/// Popcount of a validity row's valid bits (tail-masked last word) — the
+/// per-row constant hoisted out of the masked kernels' j loops.
+#[inline]
+fn row_valid_count(vr: &[u64], tail: u64) -> i32 {
+    let lw = vr.len() - 1;
+    let mut c: u32 = 0;
+    for w in 0..lw {
+        c += vr[w].count_ones();
+    }
+    (c + (vr[lw] & tail).count_ones()) as i32
 }
 
 /// One masked output element (ragged-edge epilogue).
@@ -323,17 +402,8 @@ fn gemm_rows_masked(
     let lw = wpr - 1;
 
     // per-row popcount of the validity mask, computed once per row
-    let vcounts: Vec<i32> = (0..rows)
-        .map(|i| {
-            let vr = valid.row(row0 + i);
-            let mut c: u32 = 0;
-            for w in 0..lw {
-                c += vr[w].count_ones();
-            }
-            c += (vr[lw] & tail).count_ones();
-            c as i32
-        })
-        .collect();
+    let vcounts: Vec<i32> =
+        (0..rows).map(|i| row_valid_count(valid.row(row0 + i), tail)).collect();
 
     let mut ib = 0;
     while ib < rows {
@@ -410,6 +480,88 @@ fn gemm_rows_masked(
     }
 }
 
+/// SIMD-rung row kernel: same (i, j) cache blocking as [`gemm_rows`], but
+/// the k loop is one whole-row [`SimdBackend::xnor_popcount`] call — the
+/// vector microkernel carries 128–256 binary MACs per step and its own
+/// ILP, so the 4×2 register tile is unnecessary here; blocking still keeps
+/// the `bt` panel resident while `a`'s rows stream through.
+fn gemm_rows_simd(
+    a: &BitMatrix,
+    bt: &BitMatrix,
+    row0: usize,
+    out: &mut [i32],
+    tile: usize,
+    be: SimdBackend,
+) {
+    let n = bt.rows();
+    let rows = out.len() / n;
+    let k = a.cols() as i32;
+    let tail = a.tail_mask();
+
+    let mut ib = 0;
+    while ib < rows {
+        let ie = (ib + tile).min(rows);
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + tile).min(n);
+            for i in ib..ie {
+                let ar = a.row(row0 + i);
+                for j in jb..je {
+                    // SAFETY: `be` comes from the process-wide feature
+                    // probe (KernelDispatch::resolve), and BitMatrix rows
+                    // are equal-length and non-empty (k >= 1 asserted at
+                    // the entry points).
+                    let agree = unsafe { be.xnor_popcount_unchecked(ar, bt.row(j), tail) };
+                    out[i * n + j] = 2 * agree as i32 - k;
+                }
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
+}
+
+/// Masked SIMD-rung row kernel: [`gemm_rows_simd`] with per-row validity
+/// masks ANDed into every popcount and per-row valid-bit counts hoisted.
+fn gemm_rows_masked_simd(
+    a: &BitMatrix,
+    valid: &BitMatrix,
+    bt: &BitMatrix,
+    row0: usize,
+    out: &mut [i32],
+    tile: usize,
+    be: SimdBackend,
+) {
+    let n = bt.rows();
+    let rows = out.len() / n;
+    let tail = a.tail_mask();
+
+    let vcounts: Vec<i32> =
+        (0..rows).map(|i| row_valid_count(valid.row(row0 + i), tail)).collect();
+
+    let mut ib = 0;
+    while ib < rows {
+        let ie = (ib + tile).min(rows);
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + tile).min(n);
+            for i in ib..ie {
+                let ar = a.row(row0 + i);
+                let vr = valid.row(row0 + i);
+                for j in jb..je {
+                    // SAFETY: as in `gemm_rows_simd`; `valid` has the same
+                    // shape as `a` (asserted at the entry points).
+                    let agree =
+                        unsafe { be.xnor_popcount_masked_unchecked(ar, vr, bt.row(j), tail) };
+                    out[i * n + j] = 2 * agree as i32 - vcounts[i];
+                }
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
+}
+
 /// Float entry point used by the inference engine: binarize, pack, multiply.
 /// a: (m, k) row-major, b: (k, n) row-major; returns (m, n) f32.
 pub fn binary_matmul_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
@@ -421,11 +573,16 @@ pub fn binary_matmul_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::KernelKind;
     use crate::tensor::{matmul, Tensor};
     use crate::util::Pcg32;
 
     fn rand_mat(r: &mut Pcg32, m: usize, n: usize) -> Vec<f32> {
         (0..m * n).map(|_| r.normal()).collect()
+    }
+
+    fn cfg(tile: usize, threads: usize, kernel: KernelKind) -> GemmConfig {
+        GemmConfig { tile, threads, kernel }
     }
 
     #[test]
@@ -445,30 +602,32 @@ mod tests {
     }
 
     #[test]
-    fn tiled_and_threaded_match_scalar_exactly() {
+    fn every_rung_matches_scalar_exactly() {
         let mut r = Pcg32::seeded(42);
         for &(m, k, n) in &[(1, 1, 1), (7, 63, 5), (12, 64, 12), (9, 65, 3), (33, 257, 19)] {
             let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
             let bt = BitMatrix::from_pm1_transposed(k, n, &rand_mat(&mut r, k, n));
             let scalar = xnor_gemm_scalar(&a, &bt);
-            for cfg in [
-                GemmConfig { tile: 1, threads: 1 },
-                GemmConfig { tile: 4, threads: 1 },
-                GemmConfig { tile: 64, threads: 1 },
-                GemmConfig { tile: 8, threads: 2 },
-                GemmConfig { tile: 64, threads: 4 },
-            ] {
-                assert_eq!(
-                    xnor_gemm_with(&a, &bt, &cfg),
-                    scalar,
-                    "({m},{k},{n}) with {cfg:?}"
-                );
+            for kernel in KernelKind::ALL {
+                for c in [
+                    cfg(1, 1, kernel),
+                    cfg(4, 1, kernel),
+                    cfg(64, 1, kernel),
+                    cfg(8, 2, kernel),
+                    cfg(64, 4, kernel),
+                ] {
+                    assert_eq!(
+                        xnor_gemm_with(&a, &bt, &c),
+                        scalar,
+                        "({m},{k},{n}) with {c:?}"
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn masked_tiled_and_threaded_match_scalar_exactly() {
+    fn every_rung_matches_scalar_exactly_masked() {
         let mut r = Pcg32::seeded(43);
         for &(m, k, n) in &[(1, 1, 1), (6, 63, 4), (10, 96, 9), (21, 130, 7)] {
             let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
@@ -476,16 +635,14 @@ mod tests {
             // random ~half-valid mask
             let valid = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
             let scalar = xnor_gemm_masked_scalar(&a, &valid, &bt);
-            for cfg in [
-                GemmConfig { tile: 1, threads: 1 },
-                GemmConfig { tile: 5, threads: 3 },
-                GemmConfig { tile: 64, threads: 2 },
-            ] {
-                assert_eq!(
-                    xnor_gemm_masked_with(&a, &valid, &bt, &cfg),
-                    scalar,
-                    "({m},{k},{n}) with {cfg:?}"
-                );
+            for kernel in KernelKind::ALL {
+                for c in [cfg(1, 1, kernel), cfg(5, 3, kernel), cfg(64, 2, kernel)] {
+                    assert_eq!(
+                        xnor_gemm_masked_with(&a, &valid, &bt, &c),
+                        scalar,
+                        "({m},{k},{n}) with {c:?}"
+                    );
+                }
             }
         }
     }
@@ -496,8 +653,10 @@ mod tests {
         let (m, k, n) = (3, 70, 5);
         let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
         let bt = BitMatrix::from_pm1_transposed(k, n, &rand_mat(&mut r, k, n));
-        let cfg = GemmConfig { tile: 64, threads: 16 }; // threads > m
-        assert_eq!(xnor_gemm_with(&a, &bt, &cfg), xnor_gemm_scalar(&a, &bt));
+        for kernel in [KernelKind::Threaded, KernelKind::Simd] {
+            let c = cfg(64, 16, kernel); // threads > m
+            assert_eq!(xnor_gemm_with(&a, &bt, &c), xnor_gemm_scalar(&a, &bt), "{kernel}");
+        }
     }
 
     #[test]

@@ -13,22 +13,31 @@
 //! and against `tensor::matmul` by the tests below.
 //!
 //! Submodules:
-//!  * [`gemm`]    — packed XNOR GEMM (+ masked variant for zero-padded rows)
-//!  * [`conv`]    — binary conv via packed im2col with border-validity masks
-//!  * [`dedup`]   — kernel-repetition optimizer (paper sec. 4.2, Fig. 2)
-//!  * [`fold`]    — BN folded into integer thresholds (sign(BN(z)) ≡ z ≥ τ)
-//!  * [`network`] — whole-network binary forward pass from a checkpoint
+//!  * [`gemm`]     — packed XNOR GEMM ladder (+ masked variant for
+//!    zero-padded rows); see `docs/KERNELS.md` for the rung-by-rung tour
+//!  * [`popcount`] — SIMD XNOR-popcount microkernels (AVX2 / NEON /
+//!    portable) behind the ladder's top rung
+//!  * [`dispatch`] — runtime feature probe + kernel selection
+//!    ([`dispatch::KernelDispatch`])
+//!  * [`conv`]     — binary conv via packed im2col with border-validity masks
+//!  * [`dedup`]    — kernel-repetition optimizer (paper sec. 4.2, Fig. 2)
+//!  * [`fold`]     — BN folded into integer thresholds (sign(BN(z)) ≡ z ≥ τ)
+//!  * [`network`]  — whole-network binary forward pass from a checkpoint
 
 pub mod conv;
 pub mod dedup;
+pub mod dispatch;
 pub mod fold;
 pub mod gemm;
 pub mod network;
+pub mod popcount;
 
+pub use dispatch::KernelDispatch;
 pub use gemm::{
     xnor_gemm, xnor_gemm_masked, xnor_gemm_masked_scalar, xnor_gemm_masked_with,
     xnor_gemm_scalar, xnor_gemm_with,
 };
+pub use popcount::SimdBackend;
 
 /// A matrix of packed ±1 values: `rows` logical rows of `cols` bits each,
 /// padded to whole 64-bit words (pad bits are zero and masked out of every
@@ -50,6 +59,13 @@ impl BitMatrix {
     /// Pack a row-major f32 matrix: bit = 1 iff value >= 0 (sign(0) = +1,
     /// paper Eq. 5). Branchless hot path: the sign is read straight from
     /// the IEEE sign bit, 64 values per output word (§Perf iteration 2).
+    ///
+    /// ```
+    /// use bdnn::bitnet::BitMatrix;
+    /// let m = BitMatrix::from_pm1(1, 3, &[0.5, -1.0, 0.0]);
+    /// assert_eq!(m.to_pm1_vec(), vec![1.0, -1.0, 1.0]); // sign(0) = +1
+    /// assert_eq!(m.tail_mask(), 0b111);
+    /// ```
     pub fn from_pm1(rows: usize, cols: usize, vals: &[f32]) -> Self {
         assert_eq!(vals.len(), rows * cols);
         let mut m = Self::zeros(rows, cols);

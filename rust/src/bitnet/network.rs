@@ -8,7 +8,8 @@
 //! * [`PackedNet`] — the deployment engine: weights bit-packed once, hidden
 //!   activations kept as packed ±1 bits, every hidden MAC an XNOR+popcount,
 //!   and every BN+binarize pair folded into one integer threshold
-//!   ([`fold`]). Only the first layer (full-precision image input) and the
+//!   ([`fold`](super::fold)). Only the first layer (full-precision image
+//!   input) and the
 //!   output layer (float logits) touch floats — exactly the deployment
 //!   story of the paper's sec. 4/6.
 //!
@@ -294,6 +295,13 @@ impl PackedNet {
         self.gemm
     }
 
+    /// The resolved kernel rung every packed GEMM call will take, e.g.
+    /// `"simd(avx2)"` — surfaced by `bdnn serve`'s stats endpoint and the
+    /// CLI banners so operators can see which rung actually runs.
+    pub fn kernel_description(&self) -> String {
+        super::dispatch::KernelDispatch::resolve(&self.gemm).describe()
+    }
+
     /// Packed storage in bytes of all hidden binary weights (the >=16x
     /// memory-reduction claim; see `bdnn exp memory`).
     pub fn packed_weight_bytes(&self) -> usize {
@@ -557,7 +565,8 @@ mod tests {
 
     #[test]
     fn gemm_config_does_not_change_logits() {
-        // bit-exact across serial / tiled / threaded kernel configs
+        // bit-exact across every rung of the kernel ladder, end to end
+        use crate::config::KernelKind;
         let arch = cnn_arch();
         let params = rand_params(&arch, 5);
         let mut r = Pcg32::seeded(11);
@@ -568,13 +577,30 @@ mod tests {
             .with_gemm_config(GemmConfig::serial())
             .infer(&x)
             .unwrap();
-        let threaded = PackedNet::prepare(&arch, &params)
-            .unwrap()
-            .with_gemm_config(GemmConfig { tile: 8, threads: 4 })
-            .infer(&x)
-            .unwrap();
         assert_eq!(auto.data(), serial.data());
-        assert_eq!(auto.data(), threaded.data());
+        for kernel in KernelKind::ALL {
+            let forced = PackedNet::prepare(&arch, &params)
+                .unwrap()
+                .with_gemm_config(GemmConfig { tile: 8, threads: 4, kernel })
+                .infer(&x)
+                .unwrap();
+            assert_eq!(auto.data(), forced.data(), "kernel {kernel}");
+        }
+    }
+
+    #[test]
+    fn kernel_description_tracks_config() {
+        let arch = mlp_arch();
+        let params = rand_params(&arch, 6);
+        let net = PackedNet::prepare(&arch, &params).unwrap();
+        // auto → whatever the dispatch layer resolves on this machine
+        let auto_desc =
+            crate::bitnet::dispatch::KernelDispatch::resolve(&GemmConfig::auto()).describe();
+        assert_eq!(net.kernel_description(), auto_desc);
+        let forced = PackedNet::prepare(&arch, &params)
+            .unwrap()
+            .with_gemm_config(GemmConfig::auto().with_kernel(crate::config::KernelKind::Scalar));
+        assert_eq!(forced.kernel_description(), "scalar");
     }
 
     #[test]

@@ -1,0 +1,431 @@
+//! SIMD XNOR-popcount microkernels — the innermost loop of the GEMM
+//! ladder's fourth rung (see `docs/KERNELS.md`).
+//!
+//! Every kernel here computes the same exact integer:
+//!
+//! ```text
+//! agree(a, b) = Σ_w popcount(!(a[w] ^ b[w]))      (last word ANDed with tail)
+//! ```
+//!
+//! so any backend is bit-identical to `u64::count_ones` by construction —
+//! the dispatch layer can pick freely on speed alone. Three backends:
+//!
+//! * **AVX2** (`x86_64`, runtime-probed via `is_x86_feature_detected!`):
+//!   Muła's `vpshufb` nibble-LUT popcount — 256 bits (256 binary MACs) per
+//!   step. Each 4-bit nibble indexes a 16-entry bit-count table via
+//!   `_mm256_shuffle_epi8`; per-byte counts are folded into four u64 lanes
+//!   with `_mm256_sad_epu8`, which cannot overflow (byte counts ≤ 8, so a
+//!   lane step adds ≤ 64).
+//! * **NEON** (`aarch64`, architecturally guaranteed): `vcnt` per-byte
+//!   popcount + widening pairwise adds (`vpaddl`), 128 bits per step.
+//! * **Portable** (any ISA): 4-way unrolled `u64::count_ones` with
+//!   independent accumulators — the compiler lowers `count_ones` to
+//!   `popcnt`/`cnt` where available, and the 4 chains recover the ILP a
+//!   single serial accumulator forfeits.
+//!
+//! The masked variants AND a per-row validity word into every term (conv
+//! zero-padding; see `bitnet::conv`). All backends are pinned against each
+//! other and the scalar loop by the unit tests below plus
+//! `rust/tests/gemm_equivalence.rs` and `rust/tests/kernel_dispatch.rs`.
+
+/// A SIMD (or SIMD-shaped) implementation of the XNOR-popcount row dot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// AVX2 `vpshufb` nibble-LUT popcount (x86_64, runtime-probed).
+    Avx2,
+    /// NEON `vcnt` + widening pairwise adds (aarch64).
+    Neon,
+    /// 4-way unrolled `count_ones` — correct everywhere.
+    Portable,
+}
+
+impl SimdBackend {
+    /// Lowercase name used in dispatch descriptions and the stats endpoint.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+            SimdBackend::Portable => "portable",
+        }
+    }
+}
+
+/// Probe the CPU once and return the best available backend. Ordering is
+/// AVX2 > NEON > portable; the result is cached for the process lifetime
+/// (the probe is a CPUID on x86_64).
+pub fn detect() -> SimdBackend {
+    static DETECTED: std::sync::OnceLock<SimdBackend> = std::sync::OnceLock::new();
+    *DETECTED.get_or_init(probe)
+}
+
+/// The uncached probe behind [`detect`] (tests call this directly to pin
+/// the fallback ordering without OnceLock interference).
+pub fn probe() -> SimdBackend {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return SimdBackend::Avx2;
+    }
+    // NEON (ASIMD) is architecturally mandatory for AArch64; everything
+    // else takes the portable rung.
+    if cfg!(target_arch = "aarch64") {
+        SimdBackend::Neon
+    } else {
+        SimdBackend::Portable
+    }
+}
+
+impl SimdBackend {
+    /// `Σ popcount(!(a[w] ^ b[w]))` with the last word masked by `tail`.
+    /// `a.len() == b.len() >= 1` (checked); `tail` selects the valid bits
+    /// of the final word (`u64::MAX` when the bit-width is a multiple of
+    /// 64). Safe for any variant on any CPU: an `Avx2` value on a machine
+    /// without AVX2 (only constructible by hand — the probe never does
+    /// this) falls back to the portable kernel instead of hitting
+    /// undefined behavior.
+    #[inline]
+    pub fn xnor_popcount(self, a: &[u64], b: &[u64], tail: u64) -> u32 {
+        // real asserts, not debug: the vector kernels do raw loads, so
+        // these bounds are a soundness precondition, not a nicety
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
+                xnor_popcount_avx2::<false>(a, a, b, tail)
+            },
+            #[cfg(target_arch = "aarch64")]
+            SimdBackend::Neon => unsafe { xnor_popcount_neon::<false>(a, a, b, tail) },
+            _ => xnor_popcount_portable_impl::<false>(a, a, b, tail),
+        }
+    }
+
+    /// Masked variant: `Σ popcount(!(a[w] ^ b[w]) & v[w])`, last word also
+    /// masked by `tail`. `v` is the caller's per-row validity mask
+    /// (`v.len() == a.len()`, checked). Same safety contract as
+    /// [`Self::xnor_popcount`].
+    #[inline]
+    pub fn xnor_popcount_masked(self, a: &[u64], v: &[u64], b: &[u64], tail: u64) -> u32 {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), v.len());
+        assert!(!a.is_empty());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
+                xnor_popcount_avx2::<true>(a, v, b, tail)
+            },
+            #[cfg(target_arch = "aarch64")]
+            SimdBackend::Neon => unsafe { xnor_popcount_neon::<true>(a, v, b, tail) },
+            _ => xnor_popcount_portable_impl::<true>(a, v, b, tail),
+        }
+    }
+
+    /// Hot-path variant of [`Self::xnor_popcount`] without the per-call
+    /// feature re-probe and length checks (debug-only here) — the GEMM
+    /// row kernels call this once per output element, so those costs are
+    /// hoisted to the caller.
+    ///
+    /// # Safety
+    /// `self` must come from [`detect`]/[`probe`] on this machine (an
+    /// `Avx2` value implies AVX2 really is available), and
+    /// `a.len() == b.len() >= 1`.
+    #[inline]
+    pub(crate) unsafe fn xnor_popcount_unchecked(self, a: &[u64], b: &[u64], tail: u64) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert!(!a.is_empty());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 => xnor_popcount_avx2::<false>(a, a, b, tail),
+            #[cfg(target_arch = "aarch64")]
+            SimdBackend::Neon => xnor_popcount_neon::<false>(a, a, b, tail),
+            _ => xnor_popcount_portable_impl::<false>(a, a, b, tail),
+        }
+    }
+
+    /// Masked hot-path variant; same safety contract as
+    /// [`Self::xnor_popcount_unchecked`] plus `v.len() == a.len()`.
+    #[inline]
+    pub(crate) unsafe fn xnor_popcount_masked_unchecked(
+        self,
+        a: &[u64],
+        v: &[u64],
+        b: &[u64],
+        tail: u64,
+    ) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len(), v.len());
+        debug_assert!(!a.is_empty());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 => xnor_popcount_avx2::<true>(a, v, b, tail),
+            #[cfg(target_arch = "aarch64")]
+            SimdBackend::Neon => xnor_popcount_neon::<true>(a, v, b, tail),
+            _ => xnor_popcount_portable_impl::<true>(a, v, b, tail),
+        }
+    }
+}
+
+// Each backend has ONE body, generic over `const MASKED: bool`; the
+// unmasked entry passes `a` again for the (unread) `v` operand, and the
+// mask load/AND compiles away at monomorphization. This keeps the masked
+// and unmasked paths structurally identical by construction — a fix to a
+// remainder loop or lane fold cannot miss its sibling.
+
+// ---------------------------------------------------------------------------
+// Portable fallback: unrolled count_ones
+// ---------------------------------------------------------------------------
+
+/// Unmasked portable dot (4-way unrolled `count_ones`).
+pub fn xnor_popcount_portable(a: &[u64], b: &[u64], tail: u64) -> u32 {
+    xnor_popcount_portable_impl::<false>(a, a, b, tail)
+}
+
+/// Masked portable dot (conv zero-padding path).
+pub fn xnor_popcount_masked_portable(a: &[u64], v: &[u64], b: &[u64], tail: u64) -> u32 {
+    xnor_popcount_portable_impl::<true>(a, v, b, tail)
+}
+
+/// 4-way unrolled scalar popcount dot. Four independent accumulator chains
+/// mirror the u64x4 shape of the AVX2 path so out-of-order cores overlap
+/// the popcounts instead of serializing on one add chain.
+#[inline(always)]
+fn xnor_popcount_portable_impl<const MASKED: bool>(
+    a: &[u64],
+    v: &[u64],
+    b: &[u64],
+    tail: u64,
+) -> u32 {
+    #[inline(always)]
+    fn word<const MASKED: bool>(a: u64, v: u64, b: u64) -> u64 {
+        let x = !(a ^ b);
+        if MASKED {
+            x & v
+        } else {
+            x
+        }
+    }
+    let lw = a.len() - 1;
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    let mut w = 0;
+    while w + 4 <= lw {
+        c0 += word::<MASKED>(a[w], v[w], b[w]).count_ones();
+        c1 += word::<MASKED>(a[w + 1], v[w + 1], b[w + 1]).count_ones();
+        c2 += word::<MASKED>(a[w + 2], v[w + 2], b[w + 2]).count_ones();
+        c3 += word::<MASKED>(a[w + 3], v[w + 3], b[w + 3]).count_ones();
+        w += 4;
+    }
+    while w < lw {
+        c0 += word::<MASKED>(a[w], v[w], b[w]).count_ones();
+        w += 1;
+    }
+    c0 + c1 + c2 + c3 + (word::<MASKED>(a[lw], v[lw], b[lw]) & tail).count_ones()
+}
+
+// ---------------------------------------------------------------------------
+// AVX2: Muła vpshufb nibble-LUT popcount
+// ---------------------------------------------------------------------------
+
+/// Safety: caller must ensure AVX2 is available (the safe wrappers gate on
+/// `is_x86_feature_detected!`) and `a.len() == b.len() == v.len() >= 1`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn xnor_popcount_avx2<const MASKED: bool>(
+    a: &[u64],
+    v: &[u64],
+    b: &[u64],
+    tail: u64,
+) -> u32 {
+    use core::arch::x86_64::*;
+    let lw = a.len() - 1;
+    // 16-entry bit-count LUT, replicated across both 128-bit lanes
+    // (vpshufb shuffles within each lane independently).
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let ones = _mm256_set1_epi64x(-1);
+    let zero = _mm256_setzero_si256();
+    let mut acc = zero; // 4 × u64 running byte-sums (via vpsadbw)
+    let mut w = 0;
+    while w + 4 <= lw {
+        let va = _mm256_loadu_si256(a.as_ptr().add(w) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(w) as *const __m256i);
+        let mut xnor = _mm256_xor_si256(_mm256_xor_si256(va, vb), ones);
+        if MASKED {
+            xnor = _mm256_and_si256(xnor, _mm256_loadu_si256(v.as_ptr().add(w) as *const __m256i));
+        }
+        let lo = _mm256_and_si256(xnor, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi64::<4>(xnor), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        // per-byte counts (≤ 8) → per-64-bit-lane sums (≤ 64): no overflow
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        w += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    while w < lw {
+        let mut word = !(a[w] ^ b[w]);
+        if MASKED {
+            word &= v[w];
+        }
+        total += word.count_ones();
+        w += 1;
+    }
+    let mut last = (!(a[lw] ^ b[lw])) & tail;
+    if MASKED {
+        last &= v[lw];
+    }
+    total + last.count_ones()
+}
+
+// ---------------------------------------------------------------------------
+// NEON: vcnt per-byte popcount + widening pairwise adds
+// ---------------------------------------------------------------------------
+
+/// Safety: NEON is architecturally guaranteed on aarch64; caller ensures
+/// `a.len() == b.len() == v.len() >= 1`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn xnor_popcount_neon<const MASKED: bool>(
+    a: &[u64],
+    v: &[u64],
+    b: &[u64],
+    tail: u64,
+) -> u32 {
+    use core::arch::aarch64::*;
+    let lw = a.len() - 1;
+    let mut acc = vdupq_n_u64(0);
+    let mut w = 0;
+    while w + 2 <= lw {
+        let va = vld1q_u64(a.as_ptr().add(w));
+        let vb = vld1q_u64(b.as_ptr().add(w));
+        let mut xnor = vmvnq_u8(vreinterpretq_u8_u64(veorq_u64(va, vb)));
+        if MASKED {
+            xnor = vandq_u8(xnor, vreinterpretq_u8_u64(vld1q_u64(v.as_ptr().add(w))));
+        }
+        let cnt = vcntq_u8(xnor); // per-byte popcount
+        acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
+        w += 2;
+    }
+    let mut total = (vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc)) as u32;
+    while w < lw {
+        let mut word = !(a[w] ^ b[w]);
+        if MASKED {
+            word &= v[w];
+        }
+        total += word.count_ones();
+        w += 1;
+    }
+    let mut last = (!(a[lw] ^ b[lw])) & tail;
+    if MASKED {
+        last &= v[lw];
+    }
+    total + last.count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_words(r: &mut Pcg32, n: usize) -> Vec<u64> {
+        (0..n).map(|_| r.next_u64()).collect()
+    }
+
+    /// Reference: the plain scalar loop the whole ladder is pinned to.
+    fn scalar_ref(a: &[u64], b: &[u64], tail: u64) -> u32 {
+        let lw = a.len() - 1;
+        let mut agree = 0u32;
+        for w in 0..lw {
+            agree += (!(a[w] ^ b[w])).count_ones();
+        }
+        agree + ((!(a[lw] ^ b[lw])) & tail).count_ones()
+    }
+
+    fn scalar_ref_masked(a: &[u64], v: &[u64], b: &[u64], tail: u64) -> u32 {
+        let lw = a.len() - 1;
+        let mut agree = 0u32;
+        for w in 0..lw {
+            agree += (!(a[w] ^ b[w]) & v[w]).count_ones();
+        }
+        agree + ((!(a[lw] ^ b[lw])) & v[lw] & tail).count_ones()
+    }
+
+    fn available_backends() -> Vec<SimdBackend> {
+        let mut v = vec![SimdBackend::Portable, detect(), probe()];
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar() {
+        let mut r = Pcg32::seeded(7);
+        // word counts straddle the 4-word AVX2 / 2-word NEON strides,
+        // including the 1-word degenerate case (tail only)
+        for words in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 33] {
+            for tail in [u64::MAX, 1, (1u64 << 17) - 1] {
+                let a = rand_words(&mut r, words);
+                let b = rand_words(&mut r, words);
+                let expect = scalar_ref(&a, &b, tail);
+                for be in available_backends() {
+                    assert_eq!(
+                        be.xnor_popcount(&a, &b, tail),
+                        expect,
+                        "{} words={words} tail={tail:#x}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_masked() {
+        let mut r = Pcg32::seeded(8);
+        for words in [1usize, 2, 4, 5, 8, 11, 17] {
+            for tail in [u64::MAX, (1u64 << 40) - 1] {
+                let a = rand_words(&mut r, words);
+                let b = rand_words(&mut r, words);
+                let v = rand_words(&mut r, words);
+                let expect = scalar_ref_masked(&a, &v, &b, tail);
+                for be in available_backends() {
+                    assert_eq!(
+                        be.xnor_popcount_masked(&a, &v, &b, tail),
+                        expect,
+                        "{} words={words} tail={tail:#x}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_rows_count_every_valid_bit() {
+        let a = vec![0xDEAD_BEEF_0123_4567u64; 6];
+        for be in available_backends() {
+            assert_eq!(be.xnor_popcount(&a, &a, u64::MAX), 6 * 64);
+            assert_eq!(be.xnor_popcount(&a, &a, 0b1111), 5 * 64 + 4);
+        }
+    }
+
+    #[test]
+    fn probe_ordering_matches_cpu_features() {
+        let be = probe();
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                assert_eq!(be, SimdBackend::Avx2);
+            } else {
+                assert_eq!(be, SimdBackend::Portable);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(be, SimdBackend::Neon);
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert_eq!(be, SimdBackend::Portable);
+        assert_eq!(detect(), be, "cached probe must agree with a fresh one");
+    }
+}

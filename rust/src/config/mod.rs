@@ -74,39 +74,136 @@ impl ModelArch {
     }
 }
 
-/// Tiling/threading knobs for the packed XNOR GEMM (`bitnet::gemm`).
+/// Which rung of the XNOR-GEMM kernel ladder to run (`bitnet::gemm`).
+///
+/// `Auto` defers to the runtime feature probe
+/// ([`crate::bitnet::dispatch::KernelDispatch`]): the SIMD rung when the
+/// CPU has a real vector unit (AVX2/NEON), the threaded rung otherwise.
+/// The named variants force one rung — the
+/// equivalence suite uses them to pin every rung against the scalar
+/// oracle, and operators use them to quantify each rung's contribution on
+/// their own hardware.
+///
+/// Parsed from the TOML `[gemm] kernel = "..."` key and the
+/// `--gemm-kernel` CLI flag:
+///
+/// ```
+/// use bdnn::config::KernelKind;
+/// assert_eq!("simd".parse::<KernelKind>().unwrap(), KernelKind::Simd);
+/// assert_eq!(KernelKind::Threaded.as_str(), "threaded");
+/// assert!("avx9000".parse::<KernelKind>().is_err());
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Probe CPU features at startup and pick the best rung (default).
+    #[default]
+    Auto,
+    /// Reference triple loop — the equivalence oracle and bench baseline.
+    Scalar,
+    /// Cache-blocked + 4×2 register tile, single-threaded.
+    Tiled,
+    /// Tiled with output row-blocks sharded across a scoped thread pool.
+    Threaded,
+    /// Threaded with the inner popcount loop vectorized (AVX2 / NEON /
+    /// portable unrolled fallback — see `bitnet::popcount`).
+    Simd,
+}
+
+impl KernelKind {
+    /// All forceable kinds, in ladder order (used by tests and `--help`).
+    pub const ALL: [KernelKind; 5] = [
+        KernelKind::Auto,
+        KernelKind::Scalar,
+        KernelKind::Tiled,
+        KernelKind::Threaded,
+        KernelKind::Simd,
+    ];
+
+    /// The TOML/CLI spelling of this kind.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Tiled => "tiled",
+            KernelKind::Threaded => "threaded",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = BdnnError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(KernelKind::Auto),
+            "scalar" => Ok(KernelKind::Scalar),
+            "tiled" => Ok(KernelKind::Tiled),
+            "threaded" => Ok(KernelKind::Threaded),
+            "simd" => Ok(KernelKind::Simd),
+            other => Err(BdnnError::Config(format!(
+                "unknown gemm kernel '{other}' (auto|scalar|tiled|threaded|simd)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Kernel-selection/tiling/threading knobs for the packed XNOR GEMM
+/// (`bitnet::gemm`).
 ///
 /// Plumbed into [`crate::bitnet::network::PackedNet`] and the serve path so
 /// batched flushes run whole batches across cores. `threads == 0` means
 /// "auto": resolve against the machine's available parallelism at call
 /// time. `tile` is the cache-block edge (output rows/cols per block); the
-/// 4x2 register tile runs inside each block.
+/// 4x2 register tile runs inside each block. `kernel` picks the ladder
+/// rung; [`KernelKind::Auto`] probes CPU features and takes the highest.
+///
+/// ```
+/// use bdnn::config::{GemmConfig, KernelKind};
+/// let cfg = GemmConfig { tile: 32, threads: 2, kernel: KernelKind::Simd };
+/// assert!(cfg.validate().is_ok());
+/// assert_eq!(cfg.resolved_threads(), 2);
+/// assert!(GemmConfig { tile: 0, ..GemmConfig::default() }.validate().is_err());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GemmConfig {
     pub tile: usize,
     pub threads: usize,
+    pub kernel: KernelKind,
 }
 
 impl Default for GemmConfig {
     fn default() -> Self {
-        Self { tile: 64, threads: 0 }
+        Self { tile: 64, threads: 0, kernel: KernelKind::Auto }
     }
 }
 
 impl GemmConfig {
-    /// Auto-tuned config: default tile, threads detected at call time.
+    /// Auto-tuned config: default tile, threads detected at call time,
+    /// kernel rung probed from CPU features.
     pub fn auto() -> Self {
         Self::default()
     }
 
     /// Single-threaded (but still cache-blocked and register-tiled).
     pub fn serial() -> Self {
-        Self { threads: 1, ..Self::default() }
+        Self { threads: 1, kernel: KernelKind::Tiled, ..Self::default() }
     }
 
     /// Explicit thread count (0 = auto).
     pub fn with_threads(threads: usize) -> Self {
         Self { threads, ..Self::default() }
+    }
+
+    /// Force one named ladder rung (builder-style).
+    pub fn with_kernel(self, kernel: KernelKind) -> Self {
+        Self { kernel, ..self }
     }
 
     /// Resolve `threads == 0` (auto) against the machine.
@@ -116,6 +213,22 @@ impl GemmConfig {
         } else {
             self.threads
         }
+    }
+
+    /// Apply CLI overrides (`--gemm-threads`, `--gemm-tile`,
+    /// `--gemm-kernel`) on top of this config. CLI wins over whatever the
+    /// config already holds (TOML `[gemm]` or defaults) — the precedence
+    /// contract pinned by `rust/tests/kernel_dispatch.rs`.
+    pub fn apply_cli(&mut self, args: &crate::cli::Args) -> Result<()> {
+        self.threads = args
+            .usize_or("gemm-threads", self.threads)
+            .map_err(BdnnError::Config)?;
+        self.tile = args.usize_or("gemm-tile", self.tile).map_err(BdnnError::Config)?;
+        if let Some(k) = args.str_opt("gemm-kernel") {
+            self.kernel = k.parse()?;
+        }
+        self.validate()?;
+        Ok(())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -234,6 +347,9 @@ impl RunConfig {
         if let Some(v) = get("gemm", "threads") {
             cfg.gemm.threads = v.as_i64().ok_or_else(|| bad("gemm.threads"))? as usize;
         }
+        if let Some(v) = get("gemm", "kernel") {
+            cfg.gemm.kernel = v.as_str().ok_or_else(|| bad("gemm.kernel"))?.parse()?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -303,12 +419,13 @@ seed = 7
     #[test]
     fn gemm_section_parses_and_validates() {
         let cfg = RunConfig::from_toml_str(
-            "name = \"g\"\n[gemm]\ntile = 32\nthreads = 2\n",
+            "name = \"g\"\n[gemm]\ntile = 32\nthreads = 2\nkernel = \"simd\"\n",
         )
         .unwrap();
-        assert_eq!(cfg.gemm, GemmConfig { tile: 32, threads: 2 });
+        assert_eq!(cfg.gemm, GemmConfig { tile: 32, threads: 2, kernel: KernelKind::Simd });
         assert_eq!(cfg.gemm.resolved_threads(), 2);
         assert!(RunConfig::from_toml_str("[gemm]\ntile = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[gemm]\nkernel = \"warp\"\n").is_err());
     }
 
     #[test]
@@ -316,9 +433,20 @@ seed = 7
         let g = GemmConfig::default();
         assert_eq!(g.tile, 64);
         assert_eq!(g.threads, 0);
+        assert_eq!(g.kernel, KernelKind::Auto);
         assert!(g.resolved_threads() >= 1);
         assert_eq!(GemmConfig::serial().resolved_threads(), 1);
         assert_eq!(GemmConfig::with_threads(3).resolved_threads(), 3);
+        assert_eq!(GemmConfig::auto().with_kernel(KernelKind::Scalar).kernel, KernelKind::Scalar);
+    }
+
+    #[test]
+    fn kernel_kind_round_trips_through_strings() {
+        for k in KernelKind::ALL {
+            assert_eq!(k.as_str().parse::<KernelKind>().unwrap(), k);
+            assert_eq!(format!("{k}"), k.as_str());
+        }
+        assert!("SIMD".parse::<KernelKind>().is_err()); // spelling is exact
     }
 
     #[test]

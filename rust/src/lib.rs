@@ -11,6 +11,11 @@
 //!
 //! Python never runs at request time: `make artifacts` lowers the graphs to
 //! HLO text once; the `bdnn` binary loads them via PJRT (`runtime`).
+//!
+//! The architecture book lives in `docs/`: `docs/ARCHITECTURE.md` (module
+//! map and data flow), `docs/KERNELS.md` (the packed GEMM kernel ladder,
+//! bit-packing layout, and dispatch decision tree), and `docs/SERVING.md`
+//! (router/batcher contract and the stats protocol).
 pub mod analysis;
 pub mod bitnet;
 pub mod benchkit;

@@ -31,10 +31,14 @@ USAGE:
   bdnn eval   --checkpoint runs/x/final.bdnn [--dataset mnist] [--n 2000]
   bdnn infer  --checkpoint runs/x/final.bdnn [--engine packed|float] [--n 256]
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
+              [--gemm-kernel auto|scalar|tiled|threaded|simd]
   bdnn serve  --checkpoint runs/x/final.bdnn [--addr 127.0.0.1:7979]
               [--max-batch 64] [--max-wait-ms 2]
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
-              (gemm defaults from the TOML [gemm] section; 0 threads = auto)
+              [--gemm-kernel auto|scalar|tiled|threaded|simd]
+              (gemm defaults from the TOML [gemm] section; 0 threads = auto;
+               kernel "auto" probes CPU features: simd when AVX2/NEON is
+               present, threaded otherwise)
   bdnn exp    table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory
               [--quick|--full] [--checkpoint P] [--datasets mnist,cifar10]
   bdnn info   [--artifacts DIR]
@@ -190,16 +194,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Packed-kernel tiling/threading: defaults from --config's `[gemm]` TOML
-/// section when provided, overridden by --gemm-threads / --gemm-tile.
+/// Packed-kernel selection/tiling/threading: defaults from --config's
+/// `[gemm]` TOML section when provided, overridden by --gemm-threads /
+/// --gemm-tile / --gemm-kernel (CLI > TOML > built-in auto).
 fn gemm_from_args(args: &Args) -> Result<bdnn::config::GemmConfig> {
     let mut g = match args.str_opt("config") {
         Some(path) => RunConfig::from_toml_file(path)?.gemm,
         None => bdnn::config::GemmConfig::auto(),
     };
-    g.threads = args.usize_or("gemm-threads", g.threads).map_err(cfg_err)?;
-    g.tile = args.usize_or("gemm-tile", g.tile).map_err(cfg_err)?;
-    g.validate()?;
+    g.apply_cli(args)?;
     Ok(g)
 }
 
@@ -219,11 +222,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
             let t2 = Timer::start();
             let out = net.infer(&x)?;
             println!(
-                "packed XNOR engine: prepare {prep_ms:.1} ms, infer {:.1} ms ({:.0} samples/s), packed weights {} bytes, {} gemm threads",
+                "packed XNOR engine: prepare {prep_ms:.1} ms, infer {:.1} ms ({:.0} samples/s), packed weights {} bytes, {}",
                 t2.millis(),
                 n as f64 / t2.secs(),
                 net.packed_weight_bytes(),
-                net.gemm_config().resolved_threads()
+                bdnn::bitnet::dispatch::summary(&net.gemm_config())
             );
             out
         }
@@ -254,10 +257,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let net =
         std::sync::Arc::new(PackedNet::prepare(&arch, &params)?.with_gemm_config(gemm));
     println!(
-        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={max_batch}, max_wait={max_wait_ms}ms, gemm threads={}]",
+        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={max_batch}, max_wait={max_wait_ms}ms, {}]",
         arch.name,
         net.packed_weight_bytes(),
-        gemm.resolved_threads()
+        bdnn::bitnet::dispatch::summary(&gemm)
     );
     println!("protocol: one JSON line per request: {{\"id\": n, \"pixels\": [f32; {}]}}", arch.in_dim());
     let server = serve(

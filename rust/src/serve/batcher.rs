@@ -34,6 +34,13 @@ pub struct InferReply {
 }
 
 /// Batching policy.
+///
+/// ```
+/// use bdnn::serve::BatcherConfig;
+/// let c = BatcherConfig::default();
+/// assert_eq!(c.max_batch, 64);
+/// assert_eq!(c.max_wait.as_millis(), 2);
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     pub max_batch: usize,
@@ -57,7 +64,12 @@ pub struct BatchStats {
 }
 
 impl BatchStats {
-    /// Mean batch size so far.
+    /// Mean batch size so far (0.0 before the first flush).
+    ///
+    /// ```
+    /// use bdnn::serve::BatchStats;
+    /// assert_eq!(BatchStats::default().mean_batch(), 0.0);
+    /// ```
     pub fn mean_batch(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {

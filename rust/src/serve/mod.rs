@@ -16,14 +16,19 @@
 //!                                                               XNOR GEMM)
 //! ```
 //!
-//! Each coalesced flush runs the whole batch through the tiled/threaded
-//! packed kernels (`GemmConfig` on the `PackedNet`, `--gemm-threads` on the
-//! CLI), so one flush uses every core, not one.
+//! Each coalesced flush runs the whole batch through the dispatched packed
+//! kernel rung (`GemmConfig` on the `PackedNet`; `--gemm-threads` /
+//! `--gemm-kernel` on the CLI), so one flush uses every core — and the
+//! SIMD rung when the CPU has it. See `docs/SERVING.md` for the full
+//! batcher contract.
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 7, "pixels": [f32; in_dim]}
 //!   response: {"id": 7, "pred": 3, "logits": [...], "queue_us": n, "infer_us": n}
 //!   errors:   {"id": 7, "error": "..."}
+//!   stats:    {"stats": true} -> {"requests": n, "batches": n, "mean_batch": x,
+//!              "flush_full": n, "flush_timeout": n, "kernel": "simd(avx2)",
+//!              "gemm_threads": n, "gemm_tile": n}
 
 pub mod batcher;
 pub mod server;

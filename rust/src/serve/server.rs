@@ -3,6 +3,13 @@
 //! One thread per connection (requests on a connection are pipelined: the
 //! reader thread submits, replies return in completion order). `serve`
 //! blocks; tests drive it through a real socket on 127.0.0.1:0.
+//!
+//! Two request forms, one JSON object per line (`docs/SERVING.md`):
+//!
+//! * `{"id": 7, "pixels": [...]}` — inference; one reply line each.
+//! * `{"stats": true}` — served-traffic counters plus the resolved GEMM
+//!   kernel rung (`"kernel": "simd(avx2)"`, threads, tile), so operators
+//!   can confirm which rung of the ladder a live server is running.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -29,6 +36,14 @@ impl Default for ServeConfig {
     }
 }
 
+/// Immutable engine facts reported by the stats endpoint (captured once
+/// at startup from the `PackedNet`'s resolved `GemmConfig`).
+struct EngineInfo {
+    kernel: String,
+    gemm_threads: usize,
+    gemm_tile: usize,
+}
+
 /// Running server handle (listener thread + batcher).
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
@@ -53,6 +68,13 @@ impl Server {
 pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<Server> {
     let in_dim = arch.in_dim();
     let in_shape = arch.in_shape.clone();
+    let gemm = net.gemm_config();
+    let dispatch = crate::bitnet::KernelDispatch::resolve(&gemm);
+    let info = Arc::new(EngineInfo {
+        kernel: dispatch.describe(),
+        gemm_threads: dispatch.effective_threads(&gemm),
+        gemm_tile: gemm.tile,
+    });
     let batcher = Arc::new(Batcher::spawn(net, in_dim, in_shape, cfg.batcher));
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| BdnnError::Runtime(format!("bind {}: {e}", cfg.addr)))?;
@@ -68,8 +90,9 @@ pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<
             match stream {
                 Ok(s) => {
                     let b = accept_batcher.clone();
+                    let i = info.clone();
                     std::thread::spawn(move || {
-                        let _ = handle_connection(s, b, in_dim);
+                        let _ = handle_connection(s, b, i);
                     });
                 }
                 Err(_) => return,
@@ -79,7 +102,23 @@ pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<
     Ok(Server { local_addr, stop, accept_thread: Some(accept_thread), batcher })
 }
 
-fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, _in_dim: usize) -> Result<()> {
+/// Render the stats reply: batcher counters + the resolved kernel rung.
+fn stats_json(batcher: &Batcher, info: &EngineInfo) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let s = &batcher.stats;
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("requests".to_string(), Json::Num(s.requests.load(Relaxed) as f64));
+    obj.insert("batches".to_string(), Json::Num(s.batches.load(Relaxed) as f64));
+    obj.insert("mean_batch".to_string(), Json::Num(s.mean_batch()));
+    obj.insert("flush_full".to_string(), Json::Num(s.flush_full.load(Relaxed) as f64));
+    obj.insert("flush_timeout".to_string(), Json::Num(s.flush_timeout.load(Relaxed) as f64));
+    obj.insert("kernel".to_string(), Json::Str(info.kernel.clone()));
+    obj.insert("gemm_threads".to_string(), Json::Num(info.gemm_threads as f64));
+    obj.insert("gemm_tile".to_string(), Json::Num(info.gemm_tile as f64));
+    Json::Obj(obj).to_string()
+}
+
+fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, info: Arc<EngineInfo>) -> Result<()> {
     let peer = stream.try_clone().map_err(BdnnError::Io)?;
     let reader = BufReader::new(stream);
     let mut writer = peer;
@@ -88,28 +127,36 @@ fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, _in_dim: usize) -
         if line.trim().is_empty() {
             continue;
         }
-        let response = match parse_request(&line) {
-            Ok((id, pixels)) => {
-                let (tx, rx) = std::sync::mpsc::channel();
-                batcher.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })?;
-                match rx.recv() {
-                    Ok(rep) if rep.pred != usize::MAX => {
-                        let mut obj = std::collections::BTreeMap::new();
-                        obj.insert("id".to_string(), Json::Num(rep.id as f64));
-                        obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
-                        obj.insert(
-                            "logits".to_string(),
-                            Json::Arr(rep.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
-                        );
-                        obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
-                        obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
-                        Json::Obj(obj).to_string()
+        // parse once; stats detection and request extraction share the Json
+        let response = match json::parse(&line) {
+            Err(e) => error_json(0, &format!("bad json: {e}")),
+            Ok(j) if is_stats_request(&j) => stats_json(&batcher, &info),
+            Ok(j) => match parse_request(&j) {
+                Ok((id, pixels)) => {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    batcher
+                        .submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })?;
+                    match rx.recv() {
+                        Ok(rep) if rep.pred != usize::MAX => {
+                            let mut obj = std::collections::BTreeMap::new();
+                            obj.insert("id".to_string(), Json::Num(rep.id as f64));
+                            obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
+                            obj.insert(
+                                "logits".to_string(),
+                                Json::Arr(
+                                    rep.logits.iter().map(|&v| Json::Num(v as f64)).collect(),
+                                ),
+                            );
+                            obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
+                            obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
+                            Json::Obj(obj).to_string()
+                        }
+                        Ok(rep) => error_json(rep.id, "payload size mismatch"),
+                        Err(_) => error_json(id, "batcher dropped request"),
                     }
-                    Ok(rep) => error_json(rep.id, "payload size mismatch"),
-                    Err(_) => error_json(id, "batcher dropped request"),
                 }
-            }
-            Err(e) => error_json(0, &e),
+                Err(e) => error_json(0, &e),
+            },
         };
         writer.write_all(response.as_bytes()).map_err(BdnnError::Io)?;
         writer.write_all(b"\n").map_err(BdnnError::Io)?;
@@ -117,8 +164,17 @@ fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, _in_dim: usize) -
     Ok(())
 }
 
-fn parse_request(line: &str) -> std::result::Result<(u64, Vec<f32>), String> {
-    let j = json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+/// `{"stats": true}` objects are stats queries, not inference requests.
+/// An object that also carries inference fields (`id`/`pixels`) is NOT a
+/// stats query — it goes down the inference path untouched, so clients
+/// that decorate requests with extra flags never lose a reply.
+fn is_stats_request(j: &Json) -> bool {
+    j.get("stats").and_then(Json::as_bool).unwrap_or(false)
+        && j.get("id").is_none()
+        && j.get("pixels").is_none()
+}
+
+fn parse_request(j: &Json) -> std::result::Result<(u64, Vec<f32>), String> {
     let id = j.get("id").and_then(Json::as_f64).ok_or("missing 'id'")? as u64;
     let pixels = j
         .get("pixels")
@@ -216,6 +272,49 @@ mod tests {
             reader.read_line(&mut line).unwrap();
             assert!(line.contains("error"), "{line}");
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_endpoint_reports_traffic_and_kernel() {
+        let (arch, net) = tiny();
+        let expected_kernel = net.kernel_description();
+        let server = serve(
+            &arch,
+            net,
+            ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        let mut r = Pcg32::seeded(13);
+        let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        conn.write_all(request_line(1, &pixels).as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // inference reply
+        conn.write_all(b"{\"stats\": true}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("batches").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("kernel").and_then(Json::as_str), Some(expected_kernel.as_str()));
+        assert!(j.get("gemm_threads").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(j.get("gemm_tile").and_then(Json::as_f64).unwrap() >= 1.0);
+        // an inference request decorated with "stats": true is NOT
+        // hijacked into a stats reply — it still gets its id-matched answer
+        let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();
+        conn.write_all(
+            format!("{{\"id\": 2, \"stats\": true, \"pixels\": [{}]}}\n", px.join(","))
+                .as_bytes(),
+        )
+        .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(2.0));
+        assert!(j.get("pred").is_some(), "decorated request must be inferred: {line}");
         server.shutdown();
     }
 

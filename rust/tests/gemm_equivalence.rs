@@ -1,16 +1,17 @@
 //! Kernel-equivalence harness: every rung of the XNOR-GEMM ladder (scalar,
-//! tiled, threaded) must produce *bit-identical* output to the float
+//! tiled, threaded, simd) must produce *bit-identical* output to the float
 //! sign-domain oracle (`tensor::matmul` over ±1 tensors) — popcount sums
 //! are exact integers, so any divergence is a kernel bug, not noise.
 //!
 //! Built on the in-crate property framework (`bdnn::proptest`): random
 //! (m, k, n) with forced ragged-k coverage (k = 1, 63, 64, 65, 128 exercise
-//! every tail-mask edge case), random tile/thread configs, and the masked
-//! variant checked against both a zero-masked float oracle and the packed
-//! conv path with zero-padded borders.
+//! every tail-mask edge case), random tile/thread/kernel configs (so the
+//! SIMD rung and its remainder/tail paths are hit under every blocking
+//! shape), and the masked variant checked against both a zero-masked float
+//! oracle and the packed conv path with zero-padded borders.
 
 use bdnn::bitnet::{conv, gemm, BitMatrix};
-use bdnn::config::GemmConfig;
+use bdnn::config::{GemmConfig, KernelKind};
 use bdnn::proptest::{check, ensure, Gen};
 use bdnn::tensor::{conv2d_nhwc, matmul, Tensor};
 
@@ -21,13 +22,15 @@ fn sign_matmul_oracle(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec
     matmul(&ta, &tb).data().iter().map(|&v| v as i32).collect()
 }
 
-/// Random config sweeping the tile/thread space, including degenerate
-/// tiles (1 forces the ragged epilogues everywhere).
+/// Random config sweeping the tile/thread/kernel space, including
+/// degenerate tiles (1 forces the ragged epilogues everywhere) and every
+/// forceable rung of the ladder.
 fn random_cfg(g: &mut Gen) -> GemmConfig {
     let tiles = [1usize, 2, 3, 5, 8, 16, 64, 128];
     let tile = *g.choose(&tiles);
     let threads = g.usize_in(1, 4);
-    GemmConfig { tile, threads }
+    let kernel = *g.choose(&KernelKind::ALL);
+    GemmConfig { tile, threads, kernel }
 }
 
 /// Ragged-k pool: every tail-mask edge case plus a random k.
@@ -131,9 +134,10 @@ fn prop_conv_ladder_matches_float_conv_with_zero_padded_borders() {
 }
 
 #[test]
-fn forced_tail_mask_edges_all_threads() {
+fn forced_tail_mask_edges_every_kernel_and_thread() {
     // deterministic (not sampled) sweep of the exact k values the issue
-    // calls out, at every thread count up to 4 and the degenerate tile
+    // calls out, at every forceable rung, thread count up to 4, and the
+    // degenerate tile
     for &k in &[1usize, 63, 64, 65, 128] {
         let (m, n) = (13, 9);
         let a: Vec<f32> =
@@ -144,31 +148,41 @@ fn forced_tail_mask_edges_all_threads() {
         let ap = BitMatrix::from_pm1(m, k, &a);
         let bt = BitMatrix::from_pm1_transposed(k, n, &b);
         assert_eq!(gemm::xnor_gemm_scalar(&ap, &bt), oracle, "scalar k={k}");
-        for threads in 1..=4 {
-            for tile in [1usize, 4, 64] {
-                let cfg = GemmConfig { tile, threads };
-                assert_eq!(
-                    gemm::xnor_gemm_with(&ap, &bt, &cfg),
-                    oracle,
-                    "k={k} threads={threads} tile={tile}"
-                );
+        for kernel in KernelKind::ALL {
+            for threads in 1..=4 {
+                for tile in [1usize, 4, 64] {
+                    let cfg = GemmConfig { tile, threads, kernel };
+                    assert_eq!(
+                        gemm::xnor_gemm_with(&ap, &bt, &cfg),
+                        oracle,
+                        "k={k} kernel={kernel} threads={threads} tile={tile}"
+                    );
+                }
             }
         }
     }
 }
 
 #[test]
-fn threaded_path_is_actually_exercised_at_scale() {
+fn threaded_and_simd_paths_are_actually_exercised_at_scale() {
     // large enough that auto mode passes the small-problem cutoff on any
-    // multi-core machine; still exact vs scalar
+    // multi-core machine; still exact vs scalar. k = 257 gives 5 packed
+    // words per row: the SIMD kernels hit their vector body, their scalar
+    // remainder, and the masked tail in the same call.
     let (m, k, n) = (192, 257, 160);
     let a: Vec<f32> = (0..m * k).map(|i| ((i * 31 + 7) % 13) as f32 - 6.0).collect();
     let b: Vec<f32> = (0..k * n).map(|i| ((i * 17 + 3) % 11) as f32 - 5.0).collect();
     let ap = BitMatrix::from_pm1(m, k, &a);
     let bt = BitMatrix::from_pm1_transposed(k, n, &b);
     let scalar = gemm::xnor_gemm_scalar(&ap, &bt);
-    for threads in [0usize, 2, 3, 4, 7] {
-        let cfg = GemmConfig { tile: 48, threads };
-        assert_eq!(gemm::xnor_gemm_with(&ap, &bt, &cfg), scalar, "threads={threads}");
+    for kernel in [KernelKind::Auto, KernelKind::Threaded, KernelKind::Simd] {
+        for threads in [0usize, 2, 3, 4, 7] {
+            let cfg = GemmConfig { tile: 48, threads, kernel };
+            assert_eq!(
+                gemm::xnor_gemm_with(&ap, &bt, &cfg),
+                scalar,
+                "kernel={kernel} threads={threads}"
+            );
+        }
     }
 }

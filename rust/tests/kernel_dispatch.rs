@@ -1,0 +1,171 @@
+//! Dispatch-layer contract: feature-probe fallback ordering, TOML/CLI
+//! override precedence, and every named kernel forced end-to-end — from a
+//! parsed config through `PackedNet` and out the serve path — with
+//! bit-identical predictions.
+
+use std::sync::Arc;
+
+use bdnn::bitnet::network::{PackedNet, Params};
+use bdnn::bitnet::{dispatch, popcount, KernelDispatch, SimdBackend};
+use bdnn::cli::Args;
+use bdnn::config::{GemmConfig, KernelKind, ModelArch, RunConfig};
+use bdnn::serve::{Batcher, BatcherConfig};
+use bdnn::tensor::Tensor;
+use bdnn::util::Pcg32;
+
+fn args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from)).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// feature-probe fallback ordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn probe_fallback_ordering_is_avx2_then_neon_then_portable() {
+    let be = popcount::probe();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            assert_eq!(be, SimdBackend::Avx2);
+        } else {
+            // no AVX2 on x86_64 → NEON is impossible, portable is the floor
+            assert_eq!(be, SimdBackend::Portable);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    assert_eq!(be, SimdBackend::Neon, "NEON is architectural on aarch64");
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    assert_eq!(be, SimdBackend::Portable);
+    // the cached probe and every subsequent resolution agree: auto takes
+    // the SIMD rung for a real vector unit, the threaded rung otherwise
+    assert_eq!(popcount::detect(), be);
+    let auto = KernelDispatch::resolve(&GemmConfig::auto());
+    match be {
+        SimdBackend::Portable => assert_eq!(auto, KernelDispatch::Threaded),
+        _ => assert_eq!(auto, KernelDispatch::Simd(be)),
+    }
+}
+
+#[test]
+fn named_kernels_resolve_exactly_and_describe_themselves() {
+    let base = GemmConfig::default();
+    let cases = [
+        (KernelKind::Scalar, "scalar"),
+        (KernelKind::Tiled, "tiled"),
+        (KernelKind::Threaded, "threaded"),
+    ];
+    for (kind, desc) in cases {
+        let d = KernelDispatch::resolve(&base.with_kernel(kind));
+        assert_eq!(d.describe(), desc);
+    }
+    let simd = KernelDispatch::resolve(&base.with_kernel(KernelKind::Simd));
+    assert_eq!(simd.describe(), format!("simd({})", popcount::detect().name()));
+    let s = dispatch::summary(&base.with_kernel(KernelKind::Scalar));
+    assert!(s.contains("kernel=scalar"), "{s}");
+}
+
+// ---------------------------------------------------------------------------
+// config/CLI override precedence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn toml_overrides_defaults_and_cli_overrides_toml() {
+    // defaults
+    let mut g = GemmConfig::auto();
+    assert_eq!((g.tile, g.threads, g.kernel), (64, 0, KernelKind::Auto));
+
+    // TOML [gemm] beats defaults
+    let cfg = RunConfig::from_toml_str(
+        "name = \"p\"\n[gemm]\ntile = 16\nthreads = 3\nkernel = \"tiled\"\n",
+    )
+    .unwrap();
+    g = cfg.gemm;
+    assert_eq!((g.tile, g.threads, g.kernel), (16, 3, KernelKind::Tiled));
+
+    // CLI beats TOML, flag by flag (unset flags keep the TOML value)
+    g.apply_cli(&args("infer --gemm-kernel simd --gemm-threads 2")).unwrap();
+    assert_eq!((g.tile, g.threads, g.kernel), (16, 2, KernelKind::Simd));
+
+    // no flags: everything survives
+    let before = g;
+    g.apply_cli(&args("infer")).unwrap();
+    assert_eq!(g, before);
+}
+
+#[test]
+fn cli_rejects_bad_kernel_and_tile() {
+    let mut g = GemmConfig::auto();
+    assert!(g.apply_cli(&args("infer --gemm-kernel warp9")).is_err());
+    let mut g2 = GemmConfig::auto();
+    assert!(g2.apply_cli(&args("infer --gemm-tile 0")).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// every named kernel, forced end-to-end through the serve path
+// ---------------------------------------------------------------------------
+
+fn tiny_net(gemm: GemmConfig) -> (Arc<PackedNet>, usize, Vec<usize>) {
+    let arch = ModelArch {
+        name: "t".into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![12],
+        classes: 4,
+        hidden: vec![16],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 4,
+        eval_batch: 4,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    };
+    let mut r = Pcg32::seeded(0);
+    let mut p = Params::new();
+    p.insert(
+        "L00_W".into(),
+        Tensor::new(&[12, 16], (0..192).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert("L00_b".into(), Tensor::new(&[16], (0..16).map(|_| 0.1 * r.normal()).collect()));
+    p.insert(
+        "L01_W".into(),
+        Tensor::new(&[16, 4], (0..64).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert("L01_b".into(), Tensor::new(&[4], (0..4).map(|_| 0.1 * r.normal()).collect()));
+    let net = PackedNet::prepare(&arch, &p).unwrap().with_gemm_config(gemm);
+    (Arc::new(net), 12, vec![12])
+}
+
+#[test]
+fn every_forced_kernel_serves_identical_predictions() {
+    let mut r = Pcg32::seeded(21);
+    let inputs: Vec<Vec<f32>> =
+        (0..6).map(|_| (0..12).map(|_| r.normal()).collect()).collect();
+
+    // reference: direct inference on the scalar rung
+    let (scalar_net, _, _) = tiny_net(GemmConfig::auto().with_kernel(KernelKind::Scalar));
+    let expected: Vec<(usize, Vec<f32>)> = inputs
+        .iter()
+        .map(|px| {
+            let l = scalar_net.infer(&Tensor::new(&[1, 12], px.clone())).unwrap();
+            (l.argmax_rows()[0], l.data().to_vec())
+        })
+        .collect();
+
+    for kernel in KernelKind::ALL {
+        let gemm = GemmConfig { tile: 8, threads: 2, kernel };
+        let (net, dim, shape) = tiny_net(gemm);
+        assert_eq!(
+            net.kernel_description(),
+            KernelDispatch::resolve(&gemm).describe(),
+            "PackedNet must report the forced rung"
+        );
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        for (i, px) in inputs.iter().enumerate() {
+            let reply = b.infer_blocking(i as u64, px.clone()).unwrap();
+            assert_eq!(reply.pred, expected[i].0, "kernel {kernel}, input {i}");
+            assert_eq!(reply.logits, expected[i].1, "kernel {kernel}, input {i}");
+        }
+    }
+}
