@@ -50,11 +50,15 @@ fn main() -> Result<()> {
                 max_batch: 32,
                 max_wait: std::time::Duration::from_millis(2),
                 queue_depth: 512,
+                ..BatcherConfig::default()
             },
         },
     )?;
     let addr = server.local_addr;
-    println!("server up on {addr}; {n_clients} clients x {reqs_each} requests each\n");
+    println!(
+        "server up on {addr} ({} inference workers); {n_clients} clients x {reqs_each} requests each\n",
+        server.batcher.workers()
+    );
 
     let timer = Timer::start();
     let mut handles = Vec::new();
@@ -115,6 +119,12 @@ fn main() -> Result<()> {
         stats.mean_batch(),
         stats.flush_full.load(std::sync::atomic::Ordering::Relaxed),
         stats.flush_timeout.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    println!(
+        "pool: {} workers, flushes per worker {:?}, {} overlapped flushes",
+        server.batcher.workers(),
+        stats.worker_flushes(),
+        stats.overlap.load(std::sync::atomic::Ordering::Relaxed),
     );
     server.shutdown();
     Ok(())

@@ -6,11 +6,12 @@
 //! needs no artifacts; the trained-model section still requires
 //! `make artifacts` and is skipped otherwise.
 
-use bdnn::benchkit::{gemm_banner, Bench};
+use bdnn::benchkit::{gemm_banner, serve_banner, Bench};
 use bdnn::bitnet::network::{forward_float, PackedNet, Params};
 use bdnn::config::{GemmConfig, KernelKind, ModelArch, RunConfig};
 use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
 use bdnn::data::Dataset;
+use bdnn::serve::{Batcher, BatcherConfig};
 use bdnn::tensor::Tensor;
 use bdnn::util::Pcg32;
 use std::hint::black_box;
@@ -92,6 +93,51 @@ fn main() {
         println!("\n  batch={batch} speedups:");
         print!("{}", bench.speedup_table(&serial_name, &format!("batch={batch}")));
         println!();
+    }
+
+    // pool pipelining: the same synthetic MLP behind the batcher, one
+    // worker vs two, single-request batches so every request is a flush.
+    // With 2 workers the overlap counter must fire (flush k+1 inside the
+    // engine while flush k still is); the wall-clock ratio shows what the
+    // pipelining buys at this model size.
+    println!("== batcher pool pipelining (max_batch=1, 64 requests) ==");
+    let serial_cfg = GemmConfig::serial();
+    let pool_engine: Arc<PackedNet> =
+        Arc::new(PackedNet::prepare(&arch, &params).unwrap().with_gemm_config(serial_cfg));
+    for workers in [1usize, 2] {
+        let name = format!("pool workers={workers}  64 reqs");
+        let mut overlap = 0u64;
+        bench.run(&name, Some(64.0), || {
+            let engine = pool_engine.clone();
+            let b = Arc::new(Batcher::spawn(
+                engine,
+                784,
+                vec![784],
+                BatcherConfig {
+                    max_batch: 1,
+                    max_wait: std::time::Duration::from_micros(100),
+                    queue_depth: 128,
+                    workers,
+                    ..BatcherConfig::default()
+                },
+            ));
+            let handles: Vec<_> = (0..64u64)
+                .map(|id| {
+                    let b2 = b.clone();
+                    std::thread::spawn(move || {
+                        b2.infer_blocking(id, vec![0.5; 784]).unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            overlap = b.stats.overlap.load(std::sync::atomic::Ordering::SeqCst);
+        });
+        println!("   {}  (overlapped flushes last run: {overlap})", serve_banner(&serial_cfg, workers));
+    }
+    if let Some(s) = bench.speedup("pool workers=1  64 reqs", "pool workers=2  64 reqs") {
+        println!("   pool speedup 2w vs 1w: {s:.2}x\n");
     }
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {

@@ -22,6 +22,20 @@ pub fn gemm_banner(cfg: &GemmConfig) -> String {
     format!("engine: {}", dispatch::summary(cfg))
 }
 
+/// Banner for the serving layer: the gemm banner plus the resolved
+/// inference-worker pool size, so serve logs and bench output record the
+/// full parallelism picture (pool width x per-flush GEMM threads).
+///
+/// ```
+/// use bdnn::{benchkit, config::GemmConfig};
+/// let banner = benchkit::serve_banner(&GemmConfig::auto(), 2);
+/// assert!(banner.starts_with("engine: kernel="));
+/// assert!(banner.ends_with("pool_workers=2"));
+/// ```
+pub fn serve_banner(cfg: &GemmConfig, workers: usize) -> String {
+    format!("{}, pool_workers={workers}", gemm_banner(cfg))
+}
+
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

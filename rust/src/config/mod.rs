@@ -239,6 +239,67 @@ impl GemmConfig {
     }
 }
 
+/// Serving knobs for `bdnn serve` (`serve::Batcher` worker pool + batch
+/// policy). Parsed from the TOML `[serve]` section and overridden by the
+/// `--serve-workers` / `--max-batch` / `--max-wait-ms` / `--queue-depth`
+/// CLI flags (CLI > TOML > default, same precedence as [`GemmConfig`]).
+///
+/// `workers == 0` means auto: the batcher clamps the pool to
+/// `available cores / GEMM threads per infer`, so pool × GEMM threads
+/// never oversubscribes the machine (the rule lives in
+/// `serve::BatcherConfig::resolved_workers`).
+///
+/// ```
+/// use bdnn::config::ServeSettings;
+/// let s = ServeSettings::default();
+/// assert_eq!(s.workers, 0); // auto
+/// assert_eq!(s.max_batch, 64);
+/// assert_eq!(s.max_wait_ms, 2);
+/// assert_eq!(s.queue_depth, 1024);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeSettings {
+    /// Inference worker pool size (0 = auto, oversubscription-safe).
+    pub workers: usize,
+    /// Flush a batch once this many requests are waiting.
+    pub max_batch: usize,
+    /// Flush once the oldest waiting request has aged this long (ms).
+    pub max_wait_ms: u64,
+    /// Bounded submit queue depth (backpressure to acceptors).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        Self { workers: 0, max_batch: 64, max_wait_ms: 2, queue_depth: 1024 }
+    }
+}
+
+impl ServeSettings {
+    /// Apply CLI overrides on top of this config (CLI > TOML > default).
+    pub fn apply_cli(&mut self, args: &crate::cli::Args) -> Result<()> {
+        self.workers =
+            args.usize_or("serve-workers", self.workers).map_err(BdnnError::Config)?;
+        self.max_batch = args.usize_or("max-batch", self.max_batch).map_err(BdnnError::Config)?;
+        self.max_wait_ms =
+            args.u64_or("max-wait-ms", self.max_wait_ms).map_err(BdnnError::Config)?;
+        self.queue_depth =
+            args.usize_or("queue-depth", self.queue_depth).map_err(BdnnError::Config)?;
+        self.validate()?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(BdnnError::Config("serve.max_batch must be >= 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(BdnnError::Config("serve.queue_depth must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
 /// A training-run configuration (the launcher's TOML).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -266,6 +327,8 @@ pub struct RunConfig {
     pub zca: bool,
     /// packed XNOR GEMM tiling/threading (`[gemm]` TOML section)
     pub gemm: GemmConfig,
+    /// serving pool + batch policy (`[serve]` TOML section)
+    pub serve: ServeSettings,
 }
 
 impl Default for RunConfig {
@@ -286,6 +349,7 @@ impl Default for RunConfig {
             eval_every: 1,
             zca: false,
             gemm: GemmConfig::default(),
+            serve: ServeSettings::default(),
         }
     }
 }
@@ -350,6 +414,18 @@ impl RunConfig {
         if let Some(v) = get("gemm", "kernel") {
             cfg.gemm.kernel = v.as_str().ok_or_else(|| bad("gemm.kernel"))?.parse()?;
         }
+        if let Some(v) = get("serve", "workers") {
+            cfg.serve.workers = v.as_i64().ok_or_else(|| bad("serve.workers"))? as usize;
+        }
+        if let Some(v) = get("serve", "max_batch") {
+            cfg.serve.max_batch = v.as_i64().ok_or_else(|| bad("serve.max_batch"))? as usize;
+        }
+        if let Some(v) = get("serve", "max_wait_ms") {
+            cfg.serve.max_wait_ms = v.as_i64().ok_or_else(|| bad("serve.max_wait_ms"))? as u64;
+        }
+        if let Some(v) = get("serve", "queue_depth") {
+            cfg.serve.queue_depth = v.as_i64().ok_or_else(|| bad("serve.queue_depth"))? as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -377,6 +453,7 @@ impl RunConfig {
             return Err(BdnnError::Config("train/test size must be >= 1".into()));
         }
         self.gemm.validate()?;
+        self.serve.validate()?;
         Ok(())
     }
 }
@@ -426,6 +503,38 @@ seed = 7
         assert_eq!(cfg.gemm.resolved_threads(), 2);
         assert!(RunConfig::from_toml_str("[gemm]\ntile = 0\n").is_err());
         assert!(RunConfig::from_toml_str("[gemm]\nkernel = \"warp\"\n").is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml_str(
+            "name = \"s\"\n[serve]\nworkers = 2\nmax_batch = 16\nmax_wait_ms = 5\nqueue_depth = 64\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.serve,
+            ServeSettings { workers: 2, max_batch: 16, max_wait_ms: 5, queue_depth: 64 }
+        );
+        // defaults survive a config without a [serve] section
+        assert_eq!(RunConfig::from_toml_str("name = \"s\"").unwrap().serve, ServeSettings::default());
+        assert!(RunConfig::from_toml_str("[serve]\nmax_batch = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[serve]\nqueue_depth = 0\n").is_err());
+    }
+
+    #[test]
+    fn serve_cli_overrides_beat_toml() {
+        let mut s = RunConfig::from_toml_str("[serve]\nworkers = 2\nmax_batch = 8\n")
+            .unwrap()
+            .serve;
+        let args = crate::cli::Args::parse(
+            ["serve", "--serve-workers", "4", "--max-wait-ms", "7"].map(String::from),
+        )
+        .unwrap();
+        s.apply_cli(&args).unwrap();
+        // CLI wins where given, TOML survives where not
+        assert_eq!(s, ServeSettings { workers: 4, max_batch: 8, max_wait_ms: 7, queue_depth: 1024 });
+        let bad = crate::cli::Args::parse(["serve", "--max-batch", "0"].map(String::from)).unwrap();
+        assert!(s.apply_cli(&bad).is_err());
     }
 
     #[test]

@@ -33,12 +33,15 @@ USAGE:
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
               [--gemm-kernel auto|scalar|tiled|threaded|simd]
   bdnn serve  --checkpoint runs/x/final.bdnn [--addr 127.0.0.1:7979]
-              [--max-batch 64] [--max-wait-ms 2]
+              [--serve-workers N] [--max-batch 64] [--max-wait-ms 2]
+              [--queue-depth 1024]
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
               [--gemm-kernel auto|scalar|tiled|threaded|simd]
-              (gemm defaults from the TOML [gemm] section; 0 threads = auto;
-               kernel "auto" probes CPU features: simd when AVX2/NEON is
-               present, threaded otherwise)
+              (serve defaults from the TOML [serve] section, gemm from
+               [gemm]; 0 workers/threads = auto — the worker pool is
+               clamped to cores / GEMM threads so pool x GEMM threads
+               never oversubscribes; kernel "auto" probes CPU features:
+               simd when AVX2/NEON is present, threaded otherwise)
   bdnn exp    table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory
               [--quick|--full] [--checkpoint P] [--datasets mnist,cifar10]
   bdnn info   [--artifacts DIR]
@@ -247,34 +250,40 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serving knobs: defaults from --config's `[serve]` TOML section when
+/// provided, overridden by --serve-workers / --max-batch / --max-wait-ms
+/// / --queue-depth (CLI > TOML > built-in, like the gemm knobs).
+fn serve_settings_from_args(args: &Args) -> Result<bdnn::config::ServeSettings> {
+    let mut s = match args.str_opt("config") {
+        Some(path) => RunConfig::from_toml_file(path)?.serve,
+        None => bdnn::config::ServeSettings::default(),
+    };
+    s.apply_cli(args)?;
+    Ok(s)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use bdnn::serve::{serve, BatcherConfig, ServeConfig};
     let (params, arch, path) = load_checkpoint_arch(args)?;
     let addr = args.str_or("addr", "127.0.0.1:7979");
-    let max_batch = args.usize_or("max-batch", 64).map_err(cfg_err)?;
-    let max_wait_ms = args.u64_or("max-wait-ms", 2).map_err(cfg_err)?;
+    let settings = serve_settings_from_args(args)?;
     let gemm = gemm_from_args(args)?;
     let net =
         std::sync::Arc::new(PackedNet::prepare(&arch, &params)?.with_gemm_config(gemm));
     println!(
-        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={max_batch}, max_wait={max_wait_ms}ms, {}]",
+        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={}, max_wait={}ms]",
         arch.name,
         net.packed_weight_bytes(),
-        bdnn::bitnet::dispatch::summary(&gemm)
+        settings.max_batch,
+        settings.max_wait_ms,
     );
     println!("protocol: one JSON line per request: {{\"id\": n, \"pixels\": [f32; {}]}}", arch.in_dim());
     let server = serve(
         &arch,
         net,
-        ServeConfig {
-            addr,
-            batcher: BatcherConfig {
-                max_batch,
-                max_wait: std::time::Duration::from_millis(max_wait_ms),
-                queue_depth: 1024,
-            },
-        },
+        ServeConfig { addr, batcher: BatcherConfig::from(settings) },
     )?;
+    println!("{}", bdnn::benchkit::serve_banner(&gemm, server.batcher.workers()));
     println!("listening on {} (ctrl-c to stop)", server.local_addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

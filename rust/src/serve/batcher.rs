@@ -1,18 +1,65 @@
-//! Dynamic batcher: coalesce concurrent requests into one engine call.
+//! Dynamic batcher: coalesce concurrent requests into engine calls, with
+//! a pool of inference workers so multiple batches can be in flight.
 //!
-//! Policy (the classic latency/throughput knob pair):
-//!  * flush when `max_batch` requests are waiting, or
-//!  * when the oldest waiting request has aged `max_wait`;
-//!  * a bounded submit queue applies backpressure to the acceptors.
+//! Pipeline (the serving half of the kernel ladder — see
+//! `docs/SERVING.md`):
+//!
+//!  * a **coalescer** thread keeps forming batches under the classic
+//!    latency/throughput knob pair — flush when `max_batch` requests are
+//!    waiting, or when the oldest waiting request has aged `max_wait`;
+//!  * each sealed batch is handed to a pool of `workers` **inference
+//!    workers**, so batch k+1 coalesces (and runs) while batch k is still
+//!    inside the engine;
+//!  * a bounded submit queue applies backpressure to the acceptors, and
+//!    [`Batcher::submit`] waits at most `submit_timeout` on a full queue
+//!    before answering with an error reply — a hung worker can never
+//!    deadlock an acceptor thread;
+//!  * shutdown drains gracefully: in-flight and already-sealed batches
+//!    finish, queued requests get a `"shutting_down"` error reply, and
+//!    every submitter still receives exactly one reply.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::bitnet::network::PackedNet;
 use crate::error::{BdnnError, Result};
 use crate::tensor::Tensor;
+
+/// Error string carried by replies to requests rejected during shutdown.
+pub const ERR_SHUTTING_DOWN: &str = "shutting_down";
+/// Error string carried by replies that timed out waiting for queue space.
+pub const ERR_SUBMIT_TIMEOUT: &str = "submit_timeout";
+/// Error string carried by replies to requests with a wrong pixel count.
+pub const ERR_PAYLOAD: &str = "payload size mismatch";
+
+/// The inference engine behind the batcher. [`PackedNet`] is the real
+/// one; tests inject slow/hung/panicking engines to exercise the pool's
+/// failure paths without touching the kernels.
+pub trait InferEngine: Send + Sync {
+    /// Run one coalesced batch (`x` is `[rows, ...in_shape]`), returning
+    /// `[rows, classes]` logits.
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor>;
+
+    /// Threads one `infer_batch` call will occupy (the resolved GEMM
+    /// parallelism). The auto worker count divides the machine by this so
+    /// pool × GEMM threads never oversubscribes physical cores.
+    fn infer_parallelism(&self) -> usize {
+        1
+    }
+}
+
+impl InferEngine for PackedNet {
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        self.infer(x)
+    }
+
+    fn infer_parallelism(&self) -> usize {
+        let g = self.gemm_config();
+        crate::bitnet::dispatch::KernelDispatch::resolve(&g).effective_threads(&g)
+    }
+}
 
 /// One inference request travelling through the batcher.
 pub struct InferRequest {
@@ -23,7 +70,9 @@ pub struct InferRequest {
     pub reply: Sender<InferReply>,
 }
 
-/// Reply for one request.
+/// Reply for one request. Exactly one reply reaches every submitted
+/// request: either a real prediction (`error == None`) or an error reply
+/// (`error == Some(..)`, `pred == usize::MAX`, empty logits).
 #[derive(Clone, Debug)]
 pub struct InferReply {
     pub id: u64,
@@ -31,26 +80,97 @@ pub struct InferReply {
     pub logits: Vec<f32>,
     pub queue_us: u64,
     pub infer_us: u64,
+    /// `None` for a real prediction; otherwise one of
+    /// [`ERR_SHUTTING_DOWN`], [`ERR_SUBMIT_TIMEOUT`], [`ERR_PAYLOAD`] or
+    /// an engine failure description.
+    pub error: Option<String>,
 }
 
-/// Batching policy.
+impl InferReply {
+    fn error_for(req: &InferRequest, msg: &str) -> Self {
+        Self {
+            id: req.id,
+            pred: usize::MAX,
+            logits: vec![],
+            queue_us: req.enqueued.elapsed().as_micros() as u64,
+            infer_us: 0,
+            error: Some(msg.to_string()),
+        }
+    }
+}
+
+/// Batching + pool policy.
 ///
 /// ```
 /// use bdnn::serve::BatcherConfig;
 /// let c = BatcherConfig::default();
 /// assert_eq!(c.max_batch, 64);
 /// assert_eq!(c.max_wait.as_millis(), 2);
+/// assert_eq!(c.workers, 0); // auto: clamp to cores / GEMM threads
+/// assert!(c.resolved_workers(usize::MAX) >= 1);
 /// ```
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Seal a batch as soon as this many requests are waiting.
     pub max_batch: usize,
+    /// Seal a batch once its oldest request has aged this long.
     pub max_wait: Duration,
+    /// Bounded submit queue depth (backpressure to acceptors).
     pub queue_depth: usize,
+    /// Inference worker pool size. `0` = auto: clamp to
+    /// `available cores / GEMM threads per infer` so pool × GEMM threads
+    /// never oversubscribes the machine.
+    pub workers: usize,
+    /// Longest a [`Batcher::submit`] call waits on a full queue before
+    /// answering with an [`ERR_SUBMIT_TIMEOUT`] reply instead of blocking
+    /// the acceptor forever behind a hung worker.
+    pub submit_timeout: Duration,
+    /// Longest `Drop` waits for pool workers to finish their in-flight
+    /// batches before detaching them.
+    pub drain_timeout: Duration,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_wait: Duration::from_millis(2), queue_depth: 1024 }
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            workers: 0,
+            submit_timeout: Duration::from_secs(5),
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// Resolve `workers == 0` (auto) against the machine: one worker per
+    /// `engine_threads`-wide slice of the available cores, at least 1 —
+    /// the oversubscription rule (`pool × GEMM threads ≤ cores`).
+    ///
+    /// ```
+    /// use bdnn::serve::BatcherConfig;
+    /// let c = BatcherConfig { workers: 3, ..Default::default() };
+    /// assert_eq!(c.resolved_workers(8), 3); // explicit counts are honored
+    /// ```
+    pub fn resolved_workers(&self, engine_threads: usize) -> usize {
+        if self.workers != 0 {
+            return self.workers;
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (cores / engine_threads.max(1)).max(1)
+    }
+}
+
+impl From<crate::config::ServeSettings> for BatcherConfig {
+    fn from(s: crate::config::ServeSettings) -> Self {
+        Self {
+            max_batch: s.max_batch,
+            max_wait: Duration::from_millis(s.max_wait_ms),
+            queue_depth: s.queue_depth,
+            workers: s.workers,
+            ..Self::default()
+        }
     }
 }
 
@@ -61,9 +181,33 @@ pub struct BatchStats {
     pub batches: AtomicU64,
     pub flush_full: AtomicU64,
     pub flush_timeout: AtomicU64,
+    /// Sealed batches waiting for a free pool worker.
+    pub queued_batches: AtomicU64,
+    /// Batches currently inside `InferEngine::infer_batch`.
+    pub in_flight: AtomicU64,
+    /// Times a batch entered the engine while another was already in
+    /// flight — the pipelining the pool exists for. Always 0 with
+    /// `workers == 1`.
+    pub overlap: AtomicU64,
+    /// Submits answered with [`ERR_SUBMIT_TIMEOUT`] after `submit_timeout`
+    /// on a full queue.
+    pub submit_timeouts: AtomicU64,
+    /// Requests answered with [`ERR_SHUTTING_DOWN`] during drain.
+    pub rejected_shutdown: AtomicU64,
+    /// Batches whose engine call failed or panicked (error replies sent).
+    pub infer_errors: AtomicU64,
+    /// Per-worker flush counts; index = worker, monotonic.
+    per_worker: Vec<AtomicU64>,
 }
 
 impl BatchStats {
+    fn with_workers(workers: usize) -> Self {
+        Self {
+            per_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            ..Self::default()
+        }
+    }
+
     /// Mean batch size so far (0.0 before the first flush).
     ///
     /// ```
@@ -78,42 +222,141 @@ impl BatchStats {
             self.requests.load(Ordering::Relaxed) as f64 / b as f64
         }
     }
+
+    /// Snapshot of the per-worker flush counters (index = worker id).
+    /// Each counter is monotonic over the batcher's lifetime.
+    pub fn worker_flushes(&self) -> Vec<u64> {
+        self.per_worker.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
 }
 
-/// The batcher: submit handle + worker thread.
+/// One sealed batch travelling from the coalescer to a pool worker.
+struct SealedBatch {
+    requests: Vec<InferRequest>,
+}
+
+/// The batcher: submit handle + coalescer thread + worker pool.
 pub struct Batcher {
     tx: SyncSender<InferRequest>,
     pub stats: Arc<BatchStats>,
     stop: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: usize,
+    submit_timeout: Duration,
+    drain_timeout: Duration,
+    coalescer: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+    worker_done_rx: Mutex<Receiver<usize>>,
 }
 
 impl Batcher {
-    /// Spawn the worker around a prepared engine. `in_dim` validates
-    /// request payloads before they reach the engine.
-    pub fn spawn(net: Arc<PackedNet>, in_dim: usize, in_shape: Vec<usize>, cfg: BatcherConfig) -> Self {
-        let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_depth);
-        let stats = Arc::new(BatchStats::default());
+    /// Spawn the coalescer and worker pool around a prepared engine.
+    /// `in_dim` validates request payloads before they reach the engine.
+    /// The pool size is `cfg.workers`, or the oversubscription-safe auto
+    /// count when 0 ([`BatcherConfig::resolved_workers`]).
+    pub fn spawn(
+        engine: Arc<dyn InferEngine>,
+        in_dim: usize,
+        in_shape: Vec<usize>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        let workers = cfg.resolved_workers(engine.infer_parallelism());
+        let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_depth.max(1));
+        // pipeline depth: up to `workers` sealed batches queue ahead of
+        // the `workers` in flight, then the coalescer backpressures
+        let (batch_tx, batch_rx) = sync_channel::<SealedBatch>(workers);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let (done_tx, done_rx) = channel::<usize>();
+        let stats = Arc::new(BatchStats::with_workers(workers));
         let stop = Arc::new(AtomicBool::new(false));
-        let worker_stats = stats.clone();
-        let worker_stop = stop.clone();
-        let worker = std::thread::spawn(move || {
-            run_worker(net, in_dim, in_shape, cfg, rx, worker_stats, worker_stop);
+
+        let mut worker_handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let engine = engine.clone();
+            let batch_rx = batch_rx.clone();
+            let stats = stats.clone();
+            let done = done_tx.clone();
+            let shape = in_shape.clone();
+            worker_handles.push(std::thread::spawn(move || {
+                run_pool_worker(w, engine, batch_rx, in_dim, shape, stats, done);
+            }));
+        }
+        let c_stats = stats.clone();
+        let c_stop = stop.clone();
+        let coalescer = std::thread::spawn(move || {
+            run_coalescer(rx, batch_tx, cfg, c_stats, c_stop);
         });
-        Self { tx, stats, stop, worker: Some(worker) }
+        Self {
+            tx,
+            stats,
+            stop,
+            workers,
+            submit_timeout: cfg.submit_timeout,
+            drain_timeout: cfg.drain_timeout,
+            coalescer: Some(coalescer),
+            worker_handles,
+            worker_done_rx: Mutex::new(done_rx),
+        }
     }
 
-    /// Submit a request (blocks when the queue is full — backpressure).
+    /// Resolved pool size (after the auto clamp).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Begin a graceful drain: in-flight and already-sealed batches
+    /// finish, queued and future submits get an [`ERR_SHUTTING_DOWN`]
+    /// reply. `Drop` completes the drain (joins the coalescer, waits up
+    /// to `drain_timeout` for the pool).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Submit a request. Waits at most `submit_timeout` for queue space
+    /// (backpressure), then answers with an [`ERR_SUBMIT_TIMEOUT`] error
+    /// reply instead of blocking the caller forever — a poisoned or hung
+    /// worker can no longer deadlock an acceptor thread. During shutdown
+    /// the request is answered immediately with [`ERR_SHUTTING_DOWN`].
+    /// Every accepted request is guaranteed exactly one reply.
     pub fn submit(&self, req: InferRequest) -> Result<()> {
-        self.tx
-            .send(req)
-            .map_err(|_| BdnnError::Runtime("batcher worker has shut down".into()))
+        if self.stop.load(Ordering::SeqCst) {
+            self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+            let _ = req.reply.send(InferReply::error_for(&req, ERR_SHUTTING_DOWN));
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.submit_timeout;
+        let mut req = req;
+        loop {
+            match self.tx.try_send(req) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Disconnected(r)) => {
+                    // the coalescer is gone (drained); still reply
+                    self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(InferReply::error_for(&r, ERR_SHUTTING_DOWN));
+                    return Err(BdnnError::Runtime("batcher has shut down".into()));
+                }
+                Err(TrySendError::Full(r)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+                        let _ = r.reply.send(InferReply::error_for(&r, ERR_SHUTTING_DOWN));
+                        return Ok(());
+                    }
+                    if Instant::now() >= deadline {
+                        self.stats.submit_timeouts.fetch_add(1, Ordering::Relaxed);
+                        let _ = r.reply.send(InferReply::error_for(&r, ERR_SUBMIT_TIMEOUT));
+                        return Ok(());
+                    }
+                    req = r;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
     }
 
-    /// Convenience: submit and wait for the reply.
+    /// Convenience: submit and wait for the reply (real or error).
     pub fn infer_blocking(&self, id: u64, pixels: Vec<f32>) -> Result<InferReply> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        self.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: reply_tx })?;
+        self.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: reply_tx })
+            .ok(); // a rejected submit already sent its error reply
         reply_rx
             .recv()
             .map_err(|_| BdnnError::Runtime("batcher dropped the request".into()))
@@ -123,41 +366,70 @@ impl Batcher {
 impl Drop for Batcher {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // unblock the worker's recv by dropping our sender clone
+        // unblock the coalescer's recv by dropping the real sender
         let (dead_tx, _) = sync_channel(1);
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
-        if let Some(h) = self.worker.take() {
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        if let Some(h) = self.coalescer.take() {
             let _ = h.join();
         }
+        // bounded wait for the pool: workers finish their in-flight batch
+        // and exit when the batch channel disconnects; a hung engine is
+        // detached after drain_timeout instead of hanging the drop
+        let deadline = Instant::now() + self.drain_timeout;
+        let mut done = 0usize;
+        if let Ok(rx) = self.worker_done_rx.lock() {
+            while done < self.workers {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(_) => done += 1,
+                    Err(_) => break,
+                }
+            }
+        }
+        if done == self.workers {
+            for h in self.worker_handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+        // else: detach the stragglers (their reply senders drop harmlessly)
     }
 }
 
-fn run_worker(
-    net: Arc<PackedNet>,
-    in_dim: usize,
-    in_shape: Vec<usize>,
-    cfg: BatcherConfig,
+fn reply_shutting_down(req: InferRequest, stats: &BatchStats) {
+    stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+    let _ = req.reply.send(InferReply::error_for(&req, ERR_SHUTTING_DOWN));
+}
+
+/// Coalescer thread: form batches under the `max_batch`/`max_wait`
+/// contract and hand them to the pool. Exits only when the submit side
+/// disconnects (Batcher drop); after `stop` it drains every remaining
+/// request with an [`ERR_SHUTTING_DOWN`] reply so nothing is stranded.
+fn run_coalescer(
     rx: Receiver<InferRequest>,
+    batch_tx: SyncSender<SealedBatch>,
+    cfg: BatcherConfig,
     stats: Arc<BatchStats>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut pending: Vec<InferRequest> = Vec::with_capacity(cfg.max_batch);
     loop {
         // wait for the first request of a batch
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                continue;
-            }
+            Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => return,
         };
+        if stop.load(Ordering::SeqCst) {
+            reply_shutting_down(first, &stats);
+            continue;
+        }
         let deadline = first.enqueued + cfg.max_wait;
-        pending.push(first);
+        let mut pending = vec![first];
         // coalesce until full or the oldest request times out
         let mut timed_out = false;
+        let mut disconnected = false;
         while pending.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -170,7 +442,10 @@ fn run_worker(
                     timed_out = true;
                     break;
                 }
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
             }
         }
         if timed_out {
@@ -178,47 +453,124 @@ fn run_worker(
         } else {
             stats.flush_full.fetch_add(1, Ordering::Relaxed);
         }
-
-        // assemble the batch (validated payloads only)
-        let mut rows: Vec<&InferRequest> = Vec::with_capacity(pending.len());
-        for r in &pending {
-            if r.pixels.len() == in_dim {
-                rows.push(r);
-            }
-        }
-        let infer_started = Instant::now();
-        let logits = if rows.is_empty() {
-            None
-        } else {
-            let mut data = Vec::with_capacity(rows.len() * in_dim);
-            for r in &rows {
-                data.extend_from_slice(&r.pixels);
-            }
-            let mut shape = vec![rows.len()];
-            shape.extend(&in_shape);
-            net.infer(&Tensor::new(&shape, data)).ok()
-        };
-        let infer_us = infer_started.elapsed().as_micros() as u64;
-
-        stats.requests.fetch_add(rows.len() as u64, Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
 
-        // scatter replies
-        let classes = logits.as_ref().map(|l| l.shape()[1]).unwrap_or(0);
-        let mut row_i = 0usize;
-        for r in pending.drain(..) {
-            if r.pixels.len() != in_dim {
-                // invalid payload: reply with an empty logits vector
-                let _ = r.reply.send(InferReply {
-                    id: r.id,
-                    pred: usize::MAX,
-                    logits: vec![],
-                    queue_us: r.enqueued.elapsed().as_micros() as u64,
-                    infer_us: 0,
-                });
-                continue;
+        // hand the sealed batch to the pool (bounded wait: when the pool
+        // is saturated this is the backpressure point; once stop is set,
+        // an undispatchable batch is drained instead of waited on)
+        let mut batch = SealedBatch { requests: pending };
+        loop {
+            match batch_tx.try_send(batch) {
+                Ok(()) => {
+                    stats.queued_batches.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                Err(TrySendError::Full(b)) => {
+                    if stop.load(Ordering::SeqCst) {
+                        for r in b.requests {
+                            reply_shutting_down(r, &stats);
+                        }
+                        break;
+                    }
+                    batch = b;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(TrySendError::Disconnected(b)) => {
+                    for r in b.requests {
+                        reply_shutting_down(r, &stats);
+                    }
+                    break;
+                }
             }
-            if let Some(l) = &logits {
+        }
+        if disconnected {
+            return;
+        }
+    }
+}
+
+/// One pool worker: pull sealed batches, run the engine, scatter replies.
+/// Survives engine errors and panics (error replies instead of lost
+/// requests), so one poisoned batch never kills the pool.
+fn run_pool_worker(
+    widx: usize,
+    engine: Arc<dyn InferEngine>,
+    batch_rx: Arc<Mutex<Receiver<SealedBatch>>>,
+    in_dim: usize,
+    in_shape: Vec<usize>,
+    stats: Arc<BatchStats>,
+    done: Sender<usize>,
+) {
+    loop {
+        // hold the lock only for the blocking recv: the next worker can
+        // pick up the next batch while this one is inside the engine
+        let batch = match batch_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break, // a sibling panicked holding the lock
+        };
+        let batch = match batch {
+            Ok(b) => b,
+            Err(_) => break, // coalescer gone and queue drained
+        };
+        stats.queued_batches.fetch_sub(1, Ordering::Relaxed);
+        // count the flush at pickup: by the time any reply of this batch
+        // is observable, its worker attribution already is too
+        stats.per_worker[widx].fetch_add(1, Ordering::Relaxed);
+        let already_in_flight = stats.in_flight.fetch_add(1, Ordering::SeqCst);
+        if already_in_flight > 0 {
+            stats.overlap.fetch_add(1, Ordering::Relaxed);
+        }
+        process_batch(&*engine, batch, in_dim, &in_shape, &stats);
+        stats.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+    let _ = done.send(widx);
+}
+
+fn process_batch(
+    engine: &dyn InferEngine,
+    batch: SealedBatch,
+    in_dim: usize,
+    in_shape: &[usize],
+    stats: &BatchStats,
+) {
+    // assemble the batch (validated payloads only)
+    let valid: Vec<&InferRequest> =
+        batch.requests.iter().filter(|r| r.pixels.len() == in_dim).collect();
+    let infer_started = Instant::now();
+    let outcome: std::result::Result<Option<Tensor>, String> = if valid.is_empty() {
+        Ok(None)
+    } else {
+        let mut data = Vec::with_capacity(valid.len() * in_dim);
+        for r in &valid {
+            data.extend_from_slice(&r.pixels);
+        }
+        let mut shape = vec![valid.len()];
+        shape.extend(in_shape);
+        let x = Tensor::new(&shape, data);
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.infer_batch(&x))) {
+            Ok(Ok(t)) => Ok(Some(t)),
+            Ok(Err(e)) => Err(format!("inference failed: {e}")),
+            Err(_) => Err("inference worker panicked".into()),
+        }
+    };
+    let infer_us = infer_started.elapsed().as_micros() as u64;
+    stats.requests.fetch_add(valid.len() as u64, Ordering::Relaxed);
+    if outcome.is_err() {
+        stats.infer_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // scatter replies — exactly one per request, in request order
+    let logits = outcome.as_ref().ok().and_then(|o| o.as_ref());
+    let classes = logits.map(|l| l.shape()[1]).unwrap_or(0);
+    let mut row_i = 0usize;
+    for r in batch.requests.iter() {
+        if r.pixels.len() != in_dim {
+            let _ = r.reply.send(InferReply::error_for(r, ERR_PAYLOAD));
+            continue;
+        }
+        let queue_us = (infer_started - r.enqueued).as_micros() as u64;
+        match (&outcome, logits) {
+            (Ok(_), Some(l)) => {
                 let row = &l.data()[row_i * classes..(row_i + 1) * classes];
                 let pred = row
                     .iter()
@@ -230,15 +582,24 @@ fn run_worker(
                     id: r.id,
                     pred,
                     logits: row.to_vec(),
-                    queue_us: (infer_started - r.enqueued).as_micros() as u64,
+                    queue_us,
                     infer_us,
+                    error: None,
                 });
-                row_i += 1;
             }
+            (Err(msg), _) => {
+                let _ = r.reply.send(InferReply {
+                    id: r.id,
+                    pred: usize::MAX,
+                    logits: vec![],
+                    queue_us,
+                    infer_us,
+                    error: Some(msg.clone()),
+                });
+            }
+            (Ok(_), None) => unreachable!("valid rows imply logits or an error"),
         }
-        if stop.load(Ordering::SeqCst) {
-            return;
-        }
+        row_i += 1;
     }
 }
 
@@ -283,12 +644,18 @@ mod tests {
         assert_eq!(reply.id, 7);
         assert!(reply.pred < 4);
         assert_eq!(reply.logits.len(), 4);
+        assert!(reply.error.is_none());
     }
 
     #[test]
     fn batched_requests_all_answered_and_coalesced() {
         let (net, dim, shape) = tiny_net();
-        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20), queue_depth: 64 };
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            queue_depth: 64,
+            ..Default::default()
+        };
         let b = Arc::new(Batcher::spawn(net, dim, shape, cfg));
         let mut handles = Vec::new();
         for i in 0..24u64 {
@@ -307,6 +674,9 @@ mod tests {
         let batches = b.stats.batches.load(Ordering::Relaxed);
         assert!(batches < 24, "no batching: {batches} batches for 24 requests");
         assert!((b.stats.mean_batch() - 24.0 / batches as f64).abs() < 1e-9);
+        // every flush is attributed to exactly one worker
+        let flushes: u64 = b.stats.worker_flushes().iter().sum();
+        assert_eq!(flushes, batches);
     }
 
     #[test]
@@ -330,10 +700,12 @@ mod tests {
         let bad = b.infer_blocking(9, vec![1.0; 5]).unwrap();
         assert_eq!(bad.pred, usize::MAX);
         assert!(bad.logits.is_empty());
+        assert_eq!(bad.error.as_deref(), Some(ERR_PAYLOAD));
         // the batcher still serves good requests afterwards
         let mut r = Pcg32::seeded(4);
         let good = b.infer_blocking(10, (0..12).map(|_| r.normal()).collect()).unwrap();
         assert_eq!(good.logits.len(), 4);
+        assert!(good.error.is_none());
     }
 
     #[test]
@@ -341,5 +713,28 @@ mod tests {
         let (net, dim, shape) = tiny_net();
         let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
         drop(b); // must join without hanging
+    }
+
+    #[test]
+    fn explicit_pool_sizes_are_honored_and_auto_is_clamped() {
+        let (net, dim, shape) = tiny_net();
+        let cfg = BatcherConfig { workers: 3, ..Default::default() };
+        let b = Batcher::spawn(net.clone(), dim, shape.clone(), cfg);
+        assert_eq!(b.workers(), 3);
+        assert_eq!(b.stats.worker_flushes().len(), 3);
+        drop(b);
+        let auto = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert!(auto.workers() >= 1 && auto.workers() <= cores);
+    }
+
+    #[test]
+    fn submit_after_shutdown_gets_shutting_down_reply() {
+        let (net, dim, shape) = tiny_net();
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        b.shutdown();
+        let rep = b.infer_blocking(1, vec![0.5; 12]).unwrap();
+        assert_eq!(rep.error.as_deref(), Some(ERR_SHUTTING_DOWN));
+        assert!(b.stats.rejected_shutdown.load(Ordering::Relaxed) >= 1);
     }
 }

@@ -1,37 +1,46 @@
-//! Inference serving layer: request router + dynamic batcher over the
-//! packed XNOR engine — the deployment story of the paper's discussion
-//! section ("BBP would enable a wide variety of DNNs to run on mobile
-//! devices"), shaped like a miniature vLLM-style router.
+//! Inference serving layer: request router + dynamic batcher + worker
+//! pool over the packed XNOR engine — the deployment story of the paper's
+//! discussion section ("BBP would enable a wide variety of DNNs to run on
+//! mobile devices"), shaped like a miniature vLLM-style router.
 //!
 //! Architecture (all std, no async runtime — offline sandbox):
 //!
 //! ```text
 //!   clients ── TCP, JSON-lines ──▶ acceptor threads
-//!                                      │  (bounded submit queue: backpressure)
-//!                                      ▼
-//!                               dynamic batcher ──▶ worker thread
-//!                               (max_batch / max_wait)   PackedNet::infer
-//!                                      ▲                      │ (tiled +
-//!                                      └── oneshot reply ◀────┘  threaded
-//!                                                               XNOR GEMM)
+//!                                      │  (bounded submit queue + bounded
+//!                                      ▼   submit wait: backpressure)
+//!                                  coalescer ── seals batches ──▶ worker pool
+//!                                  (max_batch / max_wait)      (N × PackedNet::infer,
+//!                                      ▲                        batches in flight
+//!                                      └── oneshot reply ◀──────┘ concurrently)
 //! ```
 //!
-//! Each coalesced flush runs the whole batch through the dispatched packed
-//! kernel rung (`GemmConfig` on the `PackedNet`; `--gemm-threads` /
-//! `--gemm-kernel` on the CLI), so one flush uses every core — and the
-//! SIMD rung when the CPU has it. See `docs/SERVING.md` for the full
-//! batcher contract.
+//! The coalescer keeps forming batch k+1 while the pool still runs batch
+//! k — the stats endpoint's `overlap` counter proves it on a live server.
+//! Each flush runs the whole batch through the dispatched packed kernel
+//! rung (`GemmConfig` on the `PackedNet`; `--gemm-threads` /
+//! `--gemm-kernel` on the CLI); the pool size defaults to
+//! `cores / GEMM threads` so pool × GEMM threads never oversubscribes
+//! (`--serve-workers` / TOML `[serve] workers` override). See
+//! `docs/SERVING.md` for the full batcher contract, drain semantics and
+//! stats field reference.
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 7, "pixels": [f32; in_dim]}
 //!   response: {"id": 7, "pred": 3, "logits": [...], "queue_us": n, "infer_us": n}
-//!   errors:   {"id": 7, "error": "..."}
+//!   errors:   {"id": 7, "error": "..."}  (incl. "shutting_down" during drain)
 //!   stats:    {"stats": true} -> {"requests": n, "batches": n, "mean_batch": x,
-//!              "flush_full": n, "flush_timeout": n, "kernel": "simd(avx2)",
-//!              "gemm_threads": n, "gemm_tile": n}
+//!              "flush_full": n, "flush_timeout": n, "workers": n,
+//!              "queued_batches": n, "in_flight": n, "overlap": n,
+//!              "worker_flushes": [n, ...], "submit_timeouts": n,
+//!              "rejected_shutdown": n, "infer_errors": n,
+//!              "kernel": "simd(avx2)", "gemm_threads": n, "gemm_tile": n}
 
 pub mod batcher;
 pub mod server;
 
-pub use batcher::{BatchStats, Batcher, BatcherConfig, InferRequest};
+pub use batcher::{
+    BatchStats, Batcher, BatcherConfig, InferEngine, InferReply, InferRequest, ERR_PAYLOAD,
+    ERR_SHUTTING_DOWN, ERR_SUBMIT_TIMEOUT,
+};
 pub use server::{serve, ServeConfig};

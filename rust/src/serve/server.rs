@@ -7,9 +7,11 @@
 //! Two request forms, one JSON object per line (`docs/SERVING.md`):
 //!
 //! * `{"id": 7, "pixels": [...]}` — inference; one reply line each.
-//! * `{"stats": true}` — served-traffic counters plus the resolved GEMM
-//!   kernel rung (`"kernel": "simd(avx2)"`, threads, tile), so operators
-//!   can confirm which rung of the ladder a live server is running.
+//! * `{"stats": true}` — served-traffic counters, batcher pool state
+//!   (`workers`, `in_flight`, `overlap`, per-worker flush counts) and the
+//!   resolved GEMM kernel rung (`"kernel": "simd(avx2)"`, threads, tile),
+//!   so operators can confirm which rung of the ladder a live server is
+//!   running and whether the pool actually pipelines flushes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -53,6 +55,9 @@ pub struct Server {
 }
 
 impl Server {
+    /// Stop accepting connections and begin the batcher's graceful drain:
+    /// in-flight batches finish, still-queued requests get a
+    /// `"shutting_down"` error reply instead of a hang.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // poke the listener so accept() returns
@@ -60,6 +65,7 @@ impl Server {
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
+        self.batcher.shutdown();
     }
 }
 
@@ -102,7 +108,8 @@ pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<
     Ok(Server { local_addr, stop, accept_thread: Some(accept_thread), batcher })
 }
 
-/// Render the stats reply: batcher counters + the resolved kernel rung.
+/// Render the stats reply: batcher counters, pool state, and the
+/// resolved kernel rung (field reference: `docs/SERVING.md`).
 fn stats_json(batcher: &Batcher, info: &EngineInfo) -> String {
     use std::sync::atomic::Ordering::Relaxed;
     let s = &batcher.stats;
@@ -112,6 +119,20 @@ fn stats_json(batcher: &Batcher, info: &EngineInfo) -> String {
     obj.insert("mean_batch".to_string(), Json::Num(s.mean_batch()));
     obj.insert("flush_full".to_string(), Json::Num(s.flush_full.load(Relaxed) as f64));
     obj.insert("flush_timeout".to_string(), Json::Num(s.flush_timeout.load(Relaxed) as f64));
+    obj.insert("workers".to_string(), Json::Num(batcher.workers() as f64));
+    obj.insert("queued_batches".to_string(), Json::Num(s.queued_batches.load(Relaxed) as f64));
+    obj.insert("in_flight".to_string(), Json::Num(s.in_flight.load(Relaxed) as f64));
+    obj.insert("overlap".to_string(), Json::Num(s.overlap.load(Relaxed) as f64));
+    obj.insert(
+        "worker_flushes".to_string(),
+        Json::Arr(s.worker_flushes().into_iter().map(|n| Json::Num(n as f64)).collect()),
+    );
+    obj.insert("submit_timeouts".to_string(), Json::Num(s.submit_timeouts.load(Relaxed) as f64));
+    obj.insert(
+        "rejected_shutdown".to_string(),
+        Json::Num(s.rejected_shutdown.load(Relaxed) as f64),
+    );
+    obj.insert("infer_errors".to_string(), Json::Num(s.infer_errors.load(Relaxed) as f64));
     obj.insert("kernel".to_string(), Json::Str(info.kernel.clone()));
     obj.insert("gemm_threads".to_string(), Json::Num(info.gemm_threads as f64));
     obj.insert("gemm_tile".to_string(), Json::Num(info.gemm_tile as f64));
@@ -137,21 +158,23 @@ fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, info: Arc<EngineI
                     batcher
                         .submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })?;
                     match rx.recv() {
-                        Ok(rep) if rep.pred != usize::MAX => {
-                            let mut obj = std::collections::BTreeMap::new();
-                            obj.insert("id".to_string(), Json::Num(rep.id as f64));
-                            obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
-                            obj.insert(
-                                "logits".to_string(),
-                                Json::Arr(
-                                    rep.logits.iter().map(|&v| Json::Num(v as f64)).collect(),
-                                ),
-                            );
-                            obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
-                            obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
-                            Json::Obj(obj).to_string()
-                        }
-                        Ok(rep) => error_json(rep.id, "payload size mismatch"),
+                        Ok(rep) => match rep.error {
+                            None => {
+                                let mut obj = std::collections::BTreeMap::new();
+                                obj.insert("id".to_string(), Json::Num(rep.id as f64));
+                                obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
+                                obj.insert(
+                                    "logits".to_string(),
+                                    Json::Arr(
+                                        rep.logits.iter().map(|&v| Json::Num(v as f64)).collect(),
+                                    ),
+                                );
+                                obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
+                                obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
+                                Json::Obj(obj).to_string()
+                            }
+                            Some(err) => error_json(rep.id, &err),
+                        },
                         Err(_) => error_json(id, "batcher dropped request"),
                     }
                 }
@@ -302,6 +325,17 @@ mod tests {
         assert_eq!(j.get("kernel").and_then(Json::as_str), Some(expected_kernel.as_str()));
         assert!(j.get("gemm_threads").and_then(Json::as_f64).unwrap() >= 1.0);
         assert!(j.get("gemm_tile").and_then(Json::as_f64).unwrap() >= 1.0);
+        // pool state fields
+        let workers = j.get("workers").and_then(Json::as_f64).unwrap();
+        assert!(workers >= 1.0);
+        let flushes = j.get("worker_flushes").and_then(Json::as_arr).unwrap();
+        assert_eq!(flushes.len(), workers as usize);
+        assert_eq!(flushes.iter().filter_map(Json::as_f64).sum::<f64>(), 1.0);
+        // the worker decrements in_flight just after scattering replies,
+        // so allow the tiny window where the flush is still winding down
+        assert!(j.get("in_flight").and_then(Json::as_f64).unwrap() <= 1.0);
+        assert_eq!(j.get("overlap").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("submit_timeouts").and_then(Json::as_f64), Some(0.0));
         // an inference request decorated with "stats": true is NOT
         // hijacked into a stats reply — it still gets its id-matched answer
         let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();

@@ -1,15 +1,24 @@
 //! Concurrency contract of the dynamic batcher: under N concurrent
 //! submitters every `InferRequest` gets exactly one `InferReply` with the
 //! matching `id`, and both flush policies (`max_batch` full-batch flush,
-//! `max_wait` timeout flush) actually trigger.
+//! `max_wait` timeout flush) actually trigger. A property test drives
+//! random submit/shutdown interleavings against the exactly-once reply
+//! invariant, and injected hung/panicking engines exercise the pool's
+//! failure paths (bounded submit wait, panic isolation). Runs under
+//! `cargo test --release` in CI alongside kernel_dispatch.
 
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 use bdnn::bitnet::network::{PackedNet, Params};
 use bdnn::config::ModelArch;
-use bdnn::serve::{Batcher, BatcherConfig};
+use bdnn::error::Result;
+use bdnn::proptest::ensure;
+use bdnn::serve::{
+    Batcher, BatcherConfig, InferEngine, InferRequest, ERR_SHUTTING_DOWN, ERR_SUBMIT_TIMEOUT,
+};
 use bdnn::tensor::Tensor;
 use bdnn::util::Pcg32;
 
@@ -56,7 +65,12 @@ fn spawn_batcher(cfg: BatcherConfig) -> Arc<Batcher> {
 
 #[test]
 fn n_submitters_each_get_exactly_one_matching_reply() {
-    let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10), queue_depth: 32 };
+    let cfg = BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(10),
+        queue_depth: 32,
+        ..BatcherConfig::default()
+    };
     let b = spawn_batcher(cfg);
     const SUBMITTERS: u64 = 8;
     const PER_THREAD: u64 = 16;
@@ -109,7 +123,12 @@ fn n_submitters_each_get_exactly_one_matching_reply() {
 fn full_batch_flush_policy_triggers() {
     // max_wait far beyond the test budget: the only way requests complete
     // is the max_batch flush path
-    let cfg = BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(30), queue_depth: 8 };
+    let cfg = BatcherConfig {
+        max_batch: 2,
+        max_wait: Duration::from_secs(30),
+        queue_depth: 8,
+        ..BatcherConfig::default()
+    };
     let b = spawn_batcher(cfg);
     let mut handles = Vec::new();
     for i in 0..4u64 {
@@ -133,7 +152,12 @@ fn full_batch_flush_policy_triggers() {
 fn timeout_flush_policy_triggers() {
     // max_batch far above what we submit: the only way the single request
     // completes is the max_wait timeout path
-    let cfg = BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5), queue_depth: 8 };
+    let cfg = BatcherConfig {
+        max_batch: 64,
+        max_wait: Duration::from_millis(5),
+        queue_depth: 8,
+        ..BatcherConfig::default()
+    };
     let b = spawn_batcher(cfg);
     let rep = b.infer_blocking(99, vec![0.25; IN_DIM]).unwrap();
     assert_eq!(rep.id, 99);
@@ -142,4 +166,176 @@ fn timeout_flush_policy_triggers() {
     assert_eq!(b.stats.requests.load(Ordering::SeqCst), 1);
     // queue latency was observed (the request aged before the flush)
     assert!(rep.queue_us > 0);
+}
+
+/// Property: for ANY interleaving of concurrent submits with a shutdown —
+/// any pool size (1, 2, auto), any batch/queue geometry, any shutdown
+/// instant — every submitter gets back exactly one reply: either a real
+/// prediction or a `shutting_down` / `submit_timeout` error. No reply is
+/// ever lost or duplicated.
+#[test]
+fn any_submit_shutdown_interleaving_replies_exactly_once() {
+    bdnn::proptest::check("submit-shutdown-interleaving", 0xD15C0, 12, |g| {
+        let cfg = BatcherConfig {
+            max_batch: g.usize_in(1, 6),
+            max_wait: Duration::from_micros(g.usize_in(0, 1500) as u64),
+            queue_depth: g.usize_in(1, 8),
+            workers: *g.choose(&[0usize, 1, 2]),
+            submit_timeout: Duration::from_millis(250),
+            ..BatcherConfig::default()
+        };
+        let b = spawn_batcher(cfg);
+        let n_threads = g.usize_in(1, 4);
+        let per = g.usize_in(1, 5) as u64;
+        let stop_after = Duration::from_micros(g.usize_in(0, 1200) as u64);
+
+        let barrier = Arc::new(Barrier::new(n_threads + 1));
+        let mut handles = Vec::new();
+        for t in 0..n_threads as u64 {
+            let (b2, bar) = (b.clone(), barrier.clone());
+            handles.push(std::thread::spawn(move || {
+                bar.wait();
+                (0..per)
+                    .map(|q| b2.infer_blocking(t * per + q, vec![0.5; IN_DIM]).unwrap())
+                    .collect::<Vec<_>>()
+            }));
+        }
+        barrier.wait();
+        std::thread::sleep(stop_after);
+        b.shutdown();
+
+        let mut ids = Vec::new();
+        for h in handles {
+            let replies = h.join().map_err(|_| "a submitter lost its reply".to_string())?;
+            for rep in replies {
+                match rep.error.as_deref() {
+                    None => ensure(
+                        rep.logits.len() == CLASSES && rep.pred < CLASSES,
+                        format!("id {}: malformed real reply", rep.id),
+                    )?,
+                    Some(e) => ensure(
+                        e == ERR_SHUTTING_DOWN || e == ERR_SUBMIT_TIMEOUT,
+                        format!("id {}: unexpected error '{e}'", rep.id),
+                    )?,
+                }
+                ids.push(rep.id);
+            }
+        }
+        ids.sort_unstable();
+        let expect: Vec<u64> = (0..n_threads as u64 * per).collect();
+        ensure(ids == expect, format!("duplicate or missing replies: got ids {ids:?}"))
+    });
+}
+
+/// Engine that blocks inside `infer_batch` until released — a stand-in
+/// for a hung/poisoned pool worker.
+struct HangingEngine {
+    release: Arc<AtomicBool>,
+}
+
+impl InferEngine for HangingEngine {
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        while !self.release.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rows = x.shape()[0];
+        Ok(Tensor::new(&[rows, CLASSES], vec![0.0; rows * CLASSES]))
+    }
+}
+
+/// Regression for the acceptor deadlock: `submit` used to block forever on
+/// a full queue, so one hung worker wedged every acceptor thread. Now it
+/// waits at most `submit_timeout`, answers `submit_timeout`, and drop
+/// still drains (detaching the hung worker after `drain_timeout`) — and
+/// every submitted request still gets exactly one reply.
+#[test]
+fn full_queue_with_hung_worker_times_out_instead_of_deadlocking() {
+    let release = Arc::new(AtomicBool::new(false));
+    let engine: Arc<dyn InferEngine> = Arc::new(HangingEngine { release: release.clone() });
+    let cfg = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 1,
+        workers: 1,
+        submit_timeout: Duration::from_millis(100),
+        drain_timeout: Duration::from_millis(200),
+    };
+    let b = Batcher::spawn(engine, IN_DIM, vec![IN_DIM], cfg);
+
+    // clog the whole pipeline: one batch hung in the worker, one sealed in
+    // the pool channel, one stuck in the coalescer's dispatch, one in the
+    // submit queue — then one more submit must bounce with a timeout
+    const N: u64 = 5;
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for id in 0..N {
+        b.submit(InferRequest {
+            id,
+            pixels: vec![0.5; IN_DIM],
+            enqueued: Instant::now(),
+            reply: tx.clone(),
+        })
+        .unwrap();
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "submit blocked like the old deadlock: {:?}",
+        t0.elapsed()
+    );
+    let timeouts = b.stats.submit_timeouts.load(Ordering::SeqCst);
+    assert!(timeouts >= 1, "no bounded-wait timeout despite a hung worker");
+
+    // drop must complete (graceful drain + detach of the hung worker)
+    let t1 = Instant::now();
+    drop(b);
+    assert!(t1.elapsed() < Duration::from_secs(3), "drop hung: {:?}", t1.elapsed());
+
+    // un-hang the detached worker so it can flush its in-flight batches,
+    // then account for every submitted request: exactly one reply each
+    release.store(true, Ordering::SeqCst);
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..N {
+        let rep = rx
+            .recv_timeout(Duration::from_secs(2))
+            .expect("a request was stranded without a reply");
+        assert!(by_id.insert(rep.id, rep.error.clone()).is_none(), "duplicate reply");
+    }
+    assert_eq!(by_id.len() as u64, N);
+    let errs: Vec<&str> =
+        by_id.values().filter_map(|e| e.as_deref()).collect();
+    assert!(errs.contains(&ERR_SUBMIT_TIMEOUT), "missing submit_timeout reply: {errs:?}");
+    assert!(errs.contains(&ERR_SHUTTING_DOWN), "missing shutting_down reply: {errs:?}");
+}
+
+/// Engine whose every `infer_batch` panics — the worst poisoned batch.
+struct PanickingEngine;
+
+impl InferEngine for PanickingEngine {
+    fn infer_batch(&self, _x: &Tensor) -> Result<Tensor> {
+        panic!("poisoned batch")
+    }
+}
+
+#[test]
+fn engine_panics_become_error_replies_and_do_not_kill_the_pool() {
+    let engine: Arc<dyn InferEngine> = Arc::new(PanickingEngine);
+    let cfg = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        ..BatcherConfig::default()
+    };
+    let b = Batcher::spawn(engine, IN_DIM, vec![IN_DIM], cfg);
+    // three batches in a row: the same worker must survive all of them
+    for id in 0..3u64 {
+        let rep = b.infer_blocking(id, vec![0.5; IN_DIM]).unwrap();
+        assert_eq!(rep.id, id);
+        assert_eq!(rep.pred, usize::MAX);
+        assert!(rep.logits.is_empty());
+        let err = rep.error.as_deref().expect("panicked batch must yield an error reply");
+        assert!(err.contains("panicked"), "unexpected error: {err}");
+    }
+    assert_eq!(b.stats.infer_errors.load(Ordering::SeqCst), 3);
+    // all three flushes were handled by the one (still-alive) worker
+    assert_eq!(b.stats.worker_flushes(), vec![3]);
 }

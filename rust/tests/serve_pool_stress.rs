@@ -1,0 +1,356 @@
+//! Concurrency soak for the batcher worker pool (CI job `serve-stress`
+//! runs this file alone, pinned to 2 cores, `--test-threads=1`).
+//!
+//! The invariants under attack, per iteration of the soak:
+//!
+//!  * **exactly-once** — every submitted request produces one and only
+//!    one reply (per-request oneshot channels are checked for both a
+//!    missing and a duplicate reply);
+//!  * **id ↔ logits pairing** — every valid reply's logits equal a
+//!    scalar-kernel oracle run of that request's own pixels, bit for bit
+//!    (packed-GEMM row results are batch-composition independent: integer
+//!    popcount accumulation per row, no cross-row float ops);
+//!  * **invalid payloads** — randomly injected wrong-size payloads get
+//!    the `payload size mismatch` error reply and never poison their
+//!    batchmates;
+//!  * **per-worker flush counters** — `worker_flushes()` has one slot per
+//!    pool worker, is monotone across rounds, and sums to `batches`.
+//!
+//! All of it runs under `workers ∈ {1, 2, auto}`, 100 iterations each.
+//! Separate tests pin down the pipelining itself: with `workers = 2` and
+//! a slow engine the `overlap` counter must fire; with `workers = 1` it
+//! must stay zero. A final test drives the pool through the real TCP
+//! front-end and the `{"stats": true}` endpoint.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use bdnn::bitnet::network::{PackedNet, Params};
+use bdnn::config::{GemmConfig, ModelArch};
+use bdnn::error::Result;
+use bdnn::serve::{
+    serve, Batcher, BatcherConfig, InferEngine, InferReply, InferRequest, ServeConfig, ERR_PAYLOAD,
+};
+use bdnn::tensor::Tensor;
+use bdnn::util::Pcg32;
+
+const IN_DIM: usize = 12;
+const CLASSES: usize = 4;
+
+fn tiny_arch() -> ModelArch {
+    ModelArch {
+        name: "stress".into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![IN_DIM],
+        classes: CLASSES,
+        hidden: vec![16],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 4,
+        eval_batch: 4,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    }
+}
+
+fn tiny_params() -> Params {
+    let mut r = Pcg32::seeded(0xBD);
+    let mut p = Params::new();
+    p.insert(
+        "L00_W".into(),
+        Tensor::new(&[IN_DIM, 16], (0..IN_DIM * 16).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert("L00_b".into(), Tensor::new(&[16], (0..16).map(|_| 0.1 * r.normal()).collect()));
+    p.insert(
+        "L01_W".into(),
+        Tensor::new(&[16, CLASSES], (0..16 * CLASSES).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert(
+        "L01_b".into(),
+        Tensor::new(&[CLASSES], (0..CLASSES).map(|_| 0.1 * r.normal()).collect()),
+    );
+    p
+}
+
+/// The served engine (auto-dispatched kernels) and the scalar oracle the
+/// soak compares every reply against.
+fn net_and_oracle() -> (Arc<PackedNet>, PackedNet) {
+    let (arch, params) = (tiny_arch(), tiny_params());
+    let net = Arc::new(PackedNet::prepare(&arch, &params).unwrap());
+    let oracle =
+        PackedNet::prepare(&arch, &params).unwrap().with_gemm_config(GemmConfig::serial());
+    (net, oracle)
+}
+
+/// Payload for request `id` in iteration `it`: usually `IN_DIM` pixels,
+/// sometimes (deterministically, ~1 in 8) a wrong-size payload that must
+/// bounce with [`ERR_PAYLOAD`].
+fn payload(it: u64, id: u64) -> (Vec<f32>, bool) {
+    let mut r = Pcg32::seeded(it.wrapping_mul(0x9E37_79B9).wrapping_add(id));
+    let valid = r.below(8) != 0;
+    let len = if valid { IN_DIM } else { [3usize, IN_DIM - 1, IN_DIM + 5][(id % 3) as usize] };
+    ((0..len).map(|_| r.normal()).collect(), valid)
+}
+
+/// One barrier-released barrage of `submitters x per_thread` requests
+/// through `b`, with duplicate/missing-reply detection on the per-request
+/// oneshot channels. Returns all replies keyed by id.
+fn barrage(b: &Arc<Batcher>, it: u64, submitters: u64, per_thread: u64) -> Vec<InferReply> {
+    let barrier = Arc::new(Barrier::new(submitters as usize));
+    let mut handles = Vec::new();
+    for t in 0..submitters {
+        let (b2, bar) = (b.clone(), barrier.clone());
+        handles.push(std::thread::spawn(move || {
+            bar.wait();
+            let mut out = Vec::new();
+            for q in 0..per_thread {
+                let id = t * per_thread + q;
+                let (pixels, _) = payload(it, id);
+                let (tx, rx) = mpsc::channel();
+                b2.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })
+                    .unwrap();
+                let rep = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .unwrap_or_else(|_| panic!("id {id}: reply lost"));
+                assert!(rx.try_recv().is_err(), "id {id}: duplicate reply");
+                out.push(rep);
+            }
+            out
+        }));
+    }
+    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+}
+
+fn check_replies(replies: &[InferReply], it: u64, total: u64, oracle: &PackedNet) {
+    assert_eq!(replies.len() as u64, total, "iteration {it}: reply count");
+    let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, total, "iteration {it}: duplicate or missing ids");
+    for rep in replies {
+        let (pixels, valid) = payload(it, rep.id);
+        if !valid {
+            assert_eq!(
+                rep.error.as_deref(),
+                Some(ERR_PAYLOAD),
+                "iteration {it}, id {}: invalid payload not bounced",
+                rep.id
+            );
+            continue;
+        }
+        assert!(rep.error.is_none(), "iteration {it}, id {}: {:?}", rep.id, rep.error);
+        let want = oracle.infer(&Tensor::new(&[1, IN_DIM], pixels)).unwrap();
+        assert_eq!(
+            rep.logits.as_slice(),
+            want.data(),
+            "iteration {it}, id {}: logits diverge from the scalar oracle",
+            rep.id
+        );
+        assert_eq!(rep.pred, want.argmax_rows()[0], "iteration {it}, id {}: pred", rep.id);
+    }
+}
+
+/// The soak proper: `iters` iterations of two barrages each, under a
+/// fixed pool size (0 = auto).
+fn soak(workers: usize, iters: u64) {
+    use std::sync::atomic::Ordering;
+    let (net, oracle) = net_and_oracle();
+    for it in 0..iters {
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 64,
+            workers,
+            ..BatcherConfig::default()
+        };
+        let b = Arc::new(Batcher::spawn(net.clone(), IN_DIM, vec![IN_DIM], cfg));
+        assert_eq!(b.stats.worker_flushes().len(), b.workers());
+
+        let replies = barrage(&b, it, 4, 6);
+        check_replies(&replies, it, 24, &oracle);
+        let flushes_a = b.stats.worker_flushes();
+
+        // second round against the same pool: counters must be monotone
+        let replies = barrage(&b, it, 2, 4);
+        check_replies(&replies, it, 8, &oracle);
+        let flushes_b = b.stats.worker_flushes();
+        for (w, (a, z)) in flushes_a.iter().zip(&flushes_b).enumerate() {
+            assert!(z >= a, "iteration {it}: worker {w} flush counter went backwards");
+        }
+        assert_eq!(
+            flushes_b.iter().sum::<u64>(),
+            b.stats.batches.load(Ordering::SeqCst),
+            "iteration {it}: flush attribution does not sum to batches"
+        );
+    }
+}
+
+#[test]
+fn soak_single_worker_100_iterations() {
+    soak(1, 100);
+}
+
+#[test]
+fn soak_two_workers_100_iterations() {
+    soak(2, 100);
+}
+
+#[test]
+fn soak_auto_workers_100_iterations() {
+    soak(0, 100);
+}
+
+/// Engine slow enough that concurrent flushes must overlap when the pool
+/// allows it.
+struct SlowEngine {
+    delay: Duration,
+}
+
+impl InferEngine for SlowEngine {
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        let rows = x.shape()[0];
+        Ok(Tensor::new(&[rows, CLASSES], vec![0.25; rows * CLASSES]))
+    }
+}
+
+fn slow_barrage(workers: usize) -> Arc<Batcher> {
+    let engine: Arc<dyn InferEngine> = Arc::new(SlowEngine { delay: Duration::from_millis(5) });
+    let cfg = BatcherConfig {
+        max_batch: 1, // every request is its own flush
+        max_wait: Duration::from_millis(1),
+        queue_depth: 64,
+        workers,
+        ..BatcherConfig::default()
+    };
+    let b = Arc::new(Batcher::spawn(engine, IN_DIM, vec![IN_DIM], cfg));
+    let mut handles = Vec::new();
+    for id in 0..8u64 {
+        let b2 = b.clone();
+        handles.push(std::thread::spawn(move || {
+            b2.infer_blocking(id, vec![0.5; IN_DIM]).unwrap()
+        }));
+    }
+    for h in handles {
+        assert!(h.join().unwrap().error.is_none());
+    }
+    b
+}
+
+#[test]
+fn two_workers_actually_pipeline_flushes() {
+    use std::sync::atomic::Ordering;
+    let b = slow_barrage(2);
+    assert!(
+        b.stats.overlap.load(Ordering::SeqCst) > 0,
+        "8 slow single-request flushes on a 2-worker pool never overlapped"
+    );
+    let flushes = b.stats.worker_flushes();
+    assert_eq!(flushes.iter().sum::<u64>(), 8);
+    assert!(flushes.iter().all(|&f| f > 0), "a pool worker sat idle: {flushes:?}");
+}
+
+#[test]
+fn single_worker_never_overlaps() {
+    use std::sync::atomic::Ordering;
+    let b = slow_barrage(1);
+    assert_eq!(b.stats.overlap.load(Ordering::SeqCst), 0, "workers=1 must serialize flushes");
+    assert_eq!(b.stats.worker_flushes(), vec![8]);
+}
+
+/// The same invariants through the real TCP front-end, plus the
+/// `{"stats": true}` pool fields.
+#[test]
+fn tcp_soak_with_stats_endpoint() {
+    use bdnn::config::json::{self, Json};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let (arch, params) = (tiny_arch(), tiny_params());
+    let net = Arc::new(PackedNet::prepare(&arch, &params).unwrap());
+    let oracle =
+        PackedNet::prepare(&arch, &params).unwrap().with_gemm_config(GemmConfig::serial());
+    let server = serve(
+        &arch,
+        net,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                workers: 2,
+                ..BatcherConfig::default()
+            },
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr;
+
+    const CONNS: u64 = 3;
+    const REQS: u64 = 10;
+    let oracle = Arc::new(oracle);
+    let mut handles = Vec::new();
+    for c in 0..CONNS {
+        let oracle = oracle.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).expect("connect");
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for q in 0..REQS {
+                let id = c * REQS + q;
+                let mut r = Pcg32::seeded(id);
+                let pixels: Vec<f32> = (0..IN_DIM).map(|_| r.normal()).collect();
+                let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();
+                conn.write_all(
+                    format!("{{\"id\": {id}, \"pixels\": [{}]}}\n", px.join(",")).as_bytes(),
+                )
+                .unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                let j = json::parse(&resp).unwrap();
+                assert_eq!(j.get("id").and_then(Json::as_f64), Some(id as f64), "{resp}");
+                assert!(j.get("error").is_none(), "unexpected error: {resp}");
+                let want = oracle.infer(&Tensor::new(&[1, IN_DIM], pixels)).unwrap();
+                let pred = j.get("pred").and_then(Json::as_usize).unwrap();
+                assert_eq!(pred, want.argmax_rows()[0], "{resp}");
+                assert_eq!(
+                    j.get("logits").and_then(Json::as_arr).unwrap().len(),
+                    CLASSES,
+                    "{resp}"
+                );
+            }
+            // a wrong-size payload on a live connection bounces cleanly
+            conn.write_all(b"{\"id\": 999, \"pixels\": [1.0, 2.0]}\n").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let j = json::parse(&resp).unwrap();
+            assert_eq!(j.get("error").and_then(Json::as_str), Some(ERR_PAYLOAD), "{resp}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // pool state over the wire
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(b"{\"stats\": true}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let j = json::parse(&resp).unwrap();
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("{k}: {resp}"));
+    assert_eq!(num("workers"), 2.0, "{resp}");
+    assert_eq!(num("requests"), (CONNS * REQS) as f64, "{resp}");
+    let flushes = j.get("worker_flushes").and_then(Json::as_arr).unwrap();
+    assert_eq!(flushes.len(), 2, "{resp}");
+    let flush_sum: f64 = flushes.iter().filter_map(Json::as_f64).sum();
+    assert_eq!(flush_sum, num("batches"), "{resp}");
+    assert_eq!(num("submit_timeouts"), 0.0, "{resp}");
+    assert_eq!(num("infer_errors"), 0.0, "{resp}");
+    assert!(num("in_flight") <= 2.0, "{resp}");
+    assert!(j.get("kernel").and_then(Json::as_str).is_some(), "{resp}");
+    server.shutdown();
+}
