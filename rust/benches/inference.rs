@@ -11,7 +11,7 @@ use bdnn::bitnet::network::{forward_float, PackedNet, Params};
 use bdnn::config::{GemmConfig, KernelKind, ModelArch, RunConfig};
 use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
 use bdnn::data::Dataset;
-use bdnn::serve::{Batcher, BatcherConfig};
+use bdnn::serve::{Batcher, BatcherConfig, ModelEntry, Registry};
 use bdnn::tensor::Tensor;
 use bdnn::util::Pcg32;
 use std::hint::black_box;
@@ -138,6 +138,53 @@ fn main() {
     }
     if let Some(s) = bench.speedup("pool workers=1  64 reqs", "pool workers=2  64 reqs") {
         println!("   pool speedup 2w vs 1w: {s:.2}x\n");
+    }
+
+    // registry sharding overhead: the same engine behind 1 shard vs 2
+    // shards at the SAME total worker budget (2 workers either way), with
+    // requests round-robined across the shards. The delta is what the
+    // per-shard queues + router cost when sharding buys no isolation —
+    // it should be near-zero, and this section keeps that visible in the
+    // perf trajectory.
+    println!("== registry sharding overhead (same total worker budget, 64 reqs) ==");
+    for shards in [1usize, 2] {
+        let name = format!("registry shards={shards}  64 reqs");
+        bench.run(&name, Some(64.0), || {
+            let entries: Vec<ModelEntry> = (0..shards)
+                .map(|s| {
+                    ModelEntry::from_engine(
+                        &format!("m{s}"),
+                        784,
+                        vec![784],
+                        pool_engine.clone(),
+                    )
+                })
+                .collect();
+            let cfg = BatcherConfig {
+                max_batch: 1,
+                max_wait: std::time::Duration::from_micros(100),
+                queue_depth: 128,
+                workers: 2 / shards,
+                ..BatcherConfig::default()
+            };
+            let r = Arc::new(Registry::spawn(entries, cfg).unwrap());
+            let handles: Vec<_> = (0..64u64)
+                .map(|id| {
+                    let r2 = r.clone();
+                    let model = format!("m{}", id as usize % shards);
+                    std::thread::spawn(move || {
+                        r2.infer_blocking(Some(&model), id, vec![0.5; 784]).unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            r.shutdown();
+        });
+    }
+    if let Some(s) = bench.speedup("registry shards=1  64 reqs", "registry shards=2  64 reqs") {
+        println!("   sharding ratio 1-shard vs 2-shard: {s:.2}x\n");
     }
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {

@@ -36,6 +36,29 @@ pub fn serve_banner(cfg: &GemmConfig, workers: usize) -> String {
     format!("{}, pool_workers={workers}", gemm_banner(cfg))
 }
 
+/// Banner for a multi-model registry: the gemm banner plus one line per
+/// shard with its resolved worker-pool size, so serve logs record how the
+/// core budget was divided across shards
+/// (`serve::divide_workers`).
+///
+/// ```
+/// use bdnn::{benchkit, config::GemmConfig};
+/// let b = benchkit::registry_banner(
+///     &GemmConfig::auto(),
+///     &[("mnist".to_string(), 2), ("cifar".to_string(), 1)],
+/// );
+/// assert!(b.starts_with("engine: kernel="));
+/// assert!(b.contains("shard 'mnist': pool_workers=2"));
+/// assert!(b.contains("shard 'cifar': pool_workers=1"));
+/// ```
+pub fn registry_banner(cfg: &GemmConfig, shards: &[(String, usize)]) -> String {
+    let mut out = gemm_banner(cfg);
+    for (name, workers) in shards {
+        out.push_str(&format!("\n  shard '{name}': pool_workers={workers}"));
+    }
+    out
+}
+
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct BenchResult {

@@ -9,7 +9,11 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub command: Option<String>,
     pub positional: Vec<String>,
-    flags: BTreeMap<String, String>,
+    /// Every occurrence of each flag, in CLI order. Scalar accessors take
+    /// the last occurrence (last wins); [`Args::strs`] reads them all —
+    /// repeatable flags like `--model name=path` collect instead of
+    /// silently overwriting.
+    flags: BTreeMap<String, Vec<String>>,
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
 
@@ -24,11 +28,11 @@ impl Args {
                     return Err("empty flag '--'".into());
                 }
                 if let Some((k, v)) = key.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.flags.insert(key.to_string(), it.next().unwrap());
+                    out.flags.entry(key.to_string()).or_default().push(it.next().unwrap());
                 } else {
-                    out.flags.insert(key.to_string(), "true".to_string());
+                    out.flags.entry(key.to_string()).or_default().push("true".to_string());
                 }
             } else if out.command.is_none() {
                 out.command = Some(a);
@@ -45,7 +49,14 @@ impl Args {
 
     pub fn str_opt(&self, key: &str) -> Option<&str> {
         self.consumed.borrow_mut().insert(key.to_string());
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in CLI order (empty when the
+    /// flag was never given) — `--model a=p --model b=q` yields both.
+    pub fn strs(&self, key: &str) -> Vec<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -123,6 +134,18 @@ mod tests {
         let a = parse("train --config x --epcohs 5");
         let _ = a.str_opt("config");
         assert_eq!(a.unknown_flags(), vec!["epcohs".to_string()]);
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order_and_last_wins_for_scalars() {
+        let a = parse("serve --model a=p1 --model=b=p2 --seed 1 --seed 9");
+        // strs() sees every occurrence in CLI order (both --k v and --k=v
+        // spellings; the value may itself contain '=')
+        assert_eq!(a.strs("model"), vec!["a=p1", "b=p2"]);
+        assert!(a.strs("absent").is_empty());
+        // scalar accessors take the last occurrence
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 9);
+        assert!(a.unknown_flags().is_empty());
     }
 
     #[test]

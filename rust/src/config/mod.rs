@@ -5,6 +5,8 @@
 pub mod json;
 pub mod toml;
 
+use std::collections::BTreeMap;
+
 use crate::error::{BdnnError, Result};
 use json::Json;
 use toml::TomlValue;
@@ -329,6 +331,10 @@ pub struct RunConfig {
     pub gemm: GemmConfig,
     /// serving pool + batch policy (`[serve]` TOML section)
     pub serve: ServeSettings,
+    /// multi-model serving: `[models]` TOML table of `name = "ckpt path"`
+    /// entries, one registry shard each (`bdnn serve`; repeatable
+    /// `--model name=path` CLI flags override same-named entries)
+    pub models: BTreeMap<String, String>,
 }
 
 impl Default for RunConfig {
@@ -350,6 +356,7 @@ impl Default for RunConfig {
             zca: false,
             gemm: GemmConfig::default(),
             serve: ServeSettings::default(),
+            models: BTreeMap::new(),
         }
     }
 }
@@ -425,6 +432,13 @@ impl RunConfig {
         }
         if let Some(v) = get("serve", "queue_depth") {
             cfg.serve.queue_depth = v.as_i64().ok_or_else(|| bad("serve.queue_depth"))? as usize;
+        }
+        if let Some(models) = doc.get("models") {
+            for (name, v) in models {
+                let path =
+                    v.as_str().ok_or_else(|| bad(&format!("models.{name}")))?.to_string();
+                cfg.models.insert(name.clone(), path);
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -519,6 +533,21 @@ seed = 7
         assert_eq!(RunConfig::from_toml_str("name = \"s\"").unwrap().serve, ServeSettings::default());
         assert!(RunConfig::from_toml_str("[serve]\nmax_batch = 0\n").is_err());
         assert!(RunConfig::from_toml_str("[serve]\nqueue_depth = 0\n").is_err());
+    }
+
+    #[test]
+    fn models_table_parses() {
+        let cfg = RunConfig::from_toml_str(
+            "name = \"m\"\n[models]\nmnist = \"runs/a/final.bdnn\"\ncifar = \"runs/b/final.bdnn\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models["mnist"], "runs/a/final.bdnn");
+        assert_eq!(cfg.models["cifar"], "runs/b/final.bdnn");
+        // absent section -> empty table; non-string values are rejected
+        assert!(RunConfig::from_toml_str("name = \"m\"").unwrap().models.is_empty());
+        let err = RunConfig::from_toml_str("[models]\nmnist = 3\n").unwrap_err();
+        assert!(format!("{err}").contains("models.mnist"), "{err}");
     }
 
     #[test]

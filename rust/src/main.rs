@@ -33,15 +33,22 @@ USAGE:
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
               [--gemm-kernel auto|scalar|tiled|threaded|simd]
   bdnn serve  --checkpoint runs/x/final.bdnn [--addr 127.0.0.1:7979]
-              [--serve-workers N] [--max-batch 64] [--max-wait-ms 2]
-              [--queue-depth 1024]
+              [--model NAME=CKPT]... [--serve-workers N] [--max-batch 64]
+              [--max-wait-ms 2] [--queue-depth 1024]
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
               [--gemm-kernel auto|scalar|tiled|threaded|simd]
-              (serve defaults from the TOML [serve] section, gemm from
-               [gemm]; 0 workers/threads = auto — the worker pool is
-               clamped to cores / GEMM threads so pool x GEMM threads
-               never oversubscribes; kernel "auto" probes CPU features:
-               simd when AVX2/NEON is present, threaded otherwise)
+              (multi-model: each --model NAME=CKPT adds a registry shard
+               with its own batcher queue + worker pool, as does each
+               entry of the TOML [models] table (name = "ckpt"; a CLI
+               name replaces a same-named TOML entry). Requests route by
+               their "model" field; without one they go to the default
+               shard — the --checkpoint model when given, else the first
+               [models] entry. Serve defaults come from the TOML [serve]
+               section, gemm from [gemm]; 0 workers/threads = auto — the
+               core budget is divided across shards so the pools together
+               never oversubscribe (every shard keeps >= 1 worker);
+               kernel "auto" probes CPU features: simd when AVX2/NEON is
+               present, threaded otherwise)
   bdnn exp    table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory
               [--quick|--full] [--checkpoint P] [--datasets mnist,cifar10]
   bdnn info   [--artifacts DIR]
@@ -167,11 +174,7 @@ fn load_checkpoint_arch(
         .to_string();
     let (params, meta) = checkpoint::load(&path)?;
     let man = Manifest::load(args.str_or("artifacts", "artifacts"))?;
-    let arch = man
-        .get(&format!("{}_train", meta.arch))?
-        .config
-        .clone()
-        .ok_or_else(|| bdnn::error::BdnnError::Manifest(format!("{}: no config", meta.arch)))?;
+    let arch = man.model_arch(&meta.arch)?.clone();
     Ok((params, arch, path))
 }
 
@@ -263,27 +266,68 @@ fn serve_settings_from_args(args: &Args) -> Result<bdnn::config::ServeSettings> 
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use bdnn::serve::{serve, BatcherConfig, ServeConfig};
-    let (params, arch, path) = load_checkpoint_arch(args)?;
+    use bdnn::serve::{serve_models, BatcherConfig, ModelEntry, ServeConfig};
     let addr = args.str_or("addr", "127.0.0.1:7979");
     let settings = serve_settings_from_args(args)?;
     let gemm = gemm_from_args(args)?;
-    let net =
-        std::sync::Arc::new(PackedNet::prepare(&arch, &params)?.with_gemm_config(gemm));
+    let man = Manifest::load(args.str_or("artifacts", "artifacts"))?;
+
+    // model specs, one registry shard each: a plain --checkpoint is the
+    // first (default) shard under its arch name; then the TOML [models]
+    // table; then repeatable --model name=path flags (a CLI name replaces
+    // a same-named TOML entry)
+    let mut specs: Vec<(Option<String>, String)> = Vec::new();
+    if let Some(path) = args.str_opt("config") {
+        for (name, ckpt) in RunConfig::from_toml_file(path)?.models {
+            specs.push((Some(name), ckpt));
+        }
+    }
+    for m in args.strs("model") {
+        let (name, ckpt) = m
+            .split_once('=')
+            .ok_or_else(|| cfg_err(format!("--model expects name=path, got '{m}'")))?;
+        specs.retain(|(n, _)| n.as_deref() != Some(name)); // CLI wins
+        specs.push((Some(name.to_string()), ckpt.to_string()));
+    }
+    if let Some(ckpt) = args.str_opt("checkpoint") {
+        specs.insert(0, (None, ckpt.to_string()));
+    }
+    if specs.is_empty() {
+        return Err(cfg_err("--checkpoint or --model name=path is required".into()));
+    }
+
     println!(
-        "serving {path} ({}, packed {} bytes) on {addr}  [max_batch={}, max_wait={}ms]",
-        arch.name,
-        net.packed_weight_bytes(),
+        "serving {} model shard(s) on {addr}  [max_batch={}, max_wait={}ms]",
+        specs.len(),
         settings.max_batch,
         settings.max_wait_ms,
     );
-    println!("protocol: one JSON line per request: {{\"id\": n, \"pixels\": [f32; {}]}}", arch.in_dim());
-    let server = serve(
-        &arch,
-        net,
-        ServeConfig { addr, batcher: BatcherConfig::from(settings) },
-    )?;
-    println!("{}", bdnn::benchkit::serve_banner(&gemm, server.batcher.workers()));
+    let mut entries = Vec::with_capacity(specs.len());
+    for (name, ckpt) in specs {
+        let (params, meta) = checkpoint::load(&ckpt)?;
+        let arch = man.model_arch(&meta.arch)?.clone();
+        let net =
+            std::sync::Arc::new(PackedNet::prepare(&arch, &params)?.with_gemm_config(gemm));
+        let name = name.unwrap_or_else(|| arch.name.clone());
+        println!(
+            "  model '{name}': {ckpt} ({}, packed {} bytes, in_dim {})",
+            arch.name,
+            net.packed_weight_bytes(),
+            arch.in_dim(),
+        );
+        entries.push(ModelEntry::from_packed(&name, &arch, net));
+    }
+    println!(
+        "protocol: one JSON line per request: {{\"id\": n, \"model\": \"name\", \"pixels\": [f32; in_dim]}} (\"model\" optional: routes to the first shard)"
+    );
+    let server =
+        serve_models(entries, ServeConfig { addr, batcher: BatcherConfig::from(settings) })?;
+    let shards: Vec<(String, usize)> = server
+        .registry
+        .iter()
+        .map(|s| (s.name.clone(), s.batcher.workers()))
+        .collect();
+    println!("{}", bdnn::benchkit::registry_banner(&gemm, &shards));
     println!("listening on {} (ctrl-c to stop)", server.local_addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -186,6 +186,25 @@ impl Manifest {
             ))
         })
     }
+
+    /// The model architecture for a checkpoint's `arch` base name: tries
+    /// the artifact named `base`, then `base_train`, then `base_eval`,
+    /// returning the first one that carries a config. Checkpoints record
+    /// only the base name, while AOT manifests register the train/eval
+    /// pair — this is the lookup both the CLI's single `--checkpoint` path
+    /// and every `--model name=path` registry entry go through.
+    pub fn model_arch(&self, base: &str) -> Result<&ModelArch> {
+        let candidates = [base.to_string(), format!("{base}_train"), format!("{base}_eval")];
+        for c in &candidates {
+            if let Some(arch) = self.artifacts.get(c).and_then(|a| a.config.as_ref()) {
+                return Ok(arch);
+            }
+        }
+        Err(BdnnError::Manifest(format!(
+            "no artifact with a model config for '{base}' (tried: {})",
+            candidates.join(", ")
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -228,6 +247,37 @@ mod tests {
         let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
         let err = format!("{}", m.get("nope").unwrap_err());
         assert!(err.contains("smoke"), "{err}");
+    }
+
+    const WITH_CONFIG: &str = r#"{
+      "format": 1,
+      "artifacts": {
+        "mnist_mlp_train": {
+          "file": "t.hlo.txt", "kind": "train", "inputs": [], "outputs": [],
+          "config": {"name": "mnist_mlp", "arch": "mlp", "mode": "bdnn",
+                     "in_shape": [784], "classes": 10, "hidden": [128],
+                     "maps": [], "fc": [], "bn": "none", "batch": 32,
+                     "eval_batch": 32, "k_steps": 1}
+        },
+        "bare": {
+          "file": "b.hlo.txt", "kind": "smoke", "inputs": [], "outputs": []
+        }
+      }
+    }"#;
+
+    #[test]
+    fn model_arch_tries_base_then_train_then_eval() {
+        let m = Manifest::parse(WITH_CONFIG, PathBuf::from(".")).unwrap();
+        // checkpoints record the base name; the _train artifact has the config
+        let a = m.model_arch("mnist_mlp").unwrap();
+        assert_eq!(a.name, "mnist_mlp");
+        assert_eq!(a.in_dim(), 784);
+        // the exact artifact name also works
+        assert_eq!(m.model_arch("mnist_mlp_train").unwrap().classes, 10);
+        // an artifact that exists but has no config is skipped, and the
+        // error lists every name tried
+        let err = format!("{}", m.model_arch("bare").unwrap_err());
+        assert!(err.contains("bare_train") && err.contains("bare_eval"), "{err}");
     }
 
     #[test]

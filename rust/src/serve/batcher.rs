@@ -259,6 +259,21 @@ impl Batcher {
         in_shape: Vec<usize>,
         cfg: BatcherConfig,
     ) -> Self {
+        Self::spawn_named(engine, in_dim, in_shape, cfg, "model")
+    }
+
+    /// [`Batcher::spawn`] with a shard label baked into the thread names
+    /// (`bdnn-<label>-coal`, `bdnn-<label>-w<n>`), so a multi-model
+    /// server's per-shard pools are attributable in `ps -T` / debugger
+    /// output. The registry labels each shard's batcher with its model
+    /// name.
+    pub fn spawn_named(
+        engine: Arc<dyn InferEngine>,
+        in_dim: usize,
+        in_shape: Vec<usize>,
+        cfg: BatcherConfig,
+        label: &str,
+    ) -> Self {
         let workers = cfg.resolved_workers(engine.infer_parallelism());
         let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_depth.max(1));
         // pipeline depth: up to `workers` sealed batches queue ahead of
@@ -276,15 +291,22 @@ impl Batcher {
             let stats = stats.clone();
             let done = done_tx.clone();
             let shape = in_shape.clone();
-            worker_handles.push(std::thread::spawn(move || {
-                run_pool_worker(w, engine, batch_rx, in_dim, shape, stats, done);
-            }));
+            let handle = std::thread::Builder::new()
+                .name(format!("bdnn-{label}-w{w}"))
+                .spawn(move || {
+                    run_pool_worker(w, engine, batch_rx, in_dim, shape, stats, done);
+                })
+                .expect("spawn pool worker thread");
+            worker_handles.push(handle);
         }
         let c_stats = stats.clone();
         let c_stop = stop.clone();
-        let coalescer = std::thread::spawn(move || {
-            run_coalescer(rx, batch_tx, cfg, c_stats, c_stop);
-        });
+        let coalescer = std::thread::Builder::new()
+            .name(format!("bdnn-{label}-coal"))
+            .spawn(move || {
+                run_coalescer(rx, batch_tx, cfg, c_stats, c_stop);
+            })
+            .expect("spawn coalescer thread");
         Self {
             tx,
             stats,

@@ -1,46 +1,68 @@
-//! Inference serving layer: request router + dynamic batcher + worker
-//! pool over the packed XNOR engine — the deployment story of the paper's
-//! discussion section ("BBP would enable a wide variety of DNNs to run on
-//! mobile devices"), shaped like a miniature vLLM-style router.
+//! Inference serving layer: model registry + request router + per-shard
+//! dynamic batchers over the packed XNOR engine — the deployment story of
+//! the paper's discussion section ("BBP would enable a wide variety of
+//! DNNs to run on mobile devices"), shaped like a miniature vLLM-style
+//! router. Packed binary weights are small enough that dozens of models
+//! fit where one float model would, so one process serves N of them.
 //!
 //! Architecture (all std, no async runtime — offline sandbox):
 //!
 //! ```text
 //!   clients ── TCP, JSON-lines ──▶ acceptor threads
-//!                                      │  (bounded submit queue + bounded
-//!                                      ▼   submit wait: backpressure)
-//!                                  coalescer ── seals batches ──▶ worker pool
-//!                                  (max_batch / max_wait)      (N × PackedNet::infer,
-//!                                      ▲                        batches in flight
-//!                                      └── oneshot reply ◀──────┘ concurrently)
+//!                                      │ route by request "model" field
+//!                                      │ (absent ⇒ default shard)
+//!               ┌──────────────────────┼──────────────────────┐
+//!               ▼ shard "a"            ▼ shard "b"            ▼ …
+//!          coalescer a            coalescer b
+//!          (max_batch/max_wait)   (own bounded queue)
+//!               │ sealed batches       │
+//!               ▼                      ▼
+//!          worker pool a          worker pool b
+//!          (w_a × infer)          (w_b × infer, parked while idle)
+//!               └──────── oneshot reply per request ──────────┘
 //! ```
 //!
-//! The coalescer keeps forming batch k+1 while the pool still runs batch
-//! k — the stats endpoint's `overlap` counter proves it on a live server.
-//! Each flush runs the whole batch through the dispatched packed kernel
-//! rung (`GemmConfig` on the `PackedNet`; `--gemm-threads` /
-//! `--gemm-kernel` on the CLI); the pool size defaults to
-//! `cores / GEMM threads` so pool × GEMM threads never oversubscribes
-//! (`--serve-workers` / TOML `[serve] workers` override). See
-//! `docs/SERVING.md` for the full batcher contract, drain semantics and
-//! stats field reference.
+//! Every shard owns its own submit queue, coalescer and worker pool
+//! ([`Registry`]), so shards are isolated by construction: a hung engine
+//! in shard `a` can exhaust only `a`'s queue — `b`'s submit path never
+//! blocks on it. The worker budget splits the machine's cores across
+//! shards ([`divide_workers`]: every shard ≥ 1 worker, and beyond that
+//! floor `Σ workers × GEMM threads ≤ cores` — the multi-shard
+//! generalization of the PR 3 oversubscription rule). An idle shard's
+//! workers park on an empty channel recv and cost nothing. Each coalescer
+//! keeps forming batch k+1 while its pool still runs batch k — the stats
+//! endpoint's per-shard `overlap` counter proves it on a live server.
+//!
+//! Single-model servers are a one-entry registry: [`serve`] keeps its PR 3
+//! signature and behaviour (no `"model"` field needed on the wire);
+//! [`serve_models`] is the N-model entry point (`--model name=path` /
+//! TOML `[models]` on the CLI). See `docs/SERVING.md` for the batcher
+//! contract, drain semantics, worker budget rule and stats reference.
 //!
 //! Protocol: one JSON object per line.
-//!   request:  {"id": 7, "pixels": [f32; in_dim]}
+//!   request:  {"id": 7, "pixels": [f32; in_dim]}            (default shard)
+//!             {"id": 7, "model": "m", "pixels": [...]}      (shard "m")
 //!   response: {"id": 7, "pred": 3, "logits": [...], "queue_us": n, "infer_us": n}
-//!   errors:   {"id": 7, "error": "..."}  (incl. "shutting_down" during drain)
-//!   stats:    {"stats": true} -> {"requests": n, "batches": n, "mean_batch": x,
-//!              "flush_full": n, "flush_timeout": n, "workers": n,
-//!              "queued_batches": n, "in_flight": n, "overlap": n,
-//!              "worker_flushes": [n, ...], "submit_timeouts": n,
-//!              "rejected_shutdown": n, "infer_errors": n,
-//!              "kernel": "simd(avx2)", "gemm_threads": n, "gemm_tile": n}
+//!   errors:   {"id": 7, "error": "..."}  (incl. "shutting_down" during
+//!             drain and "unknown_model" + "detail" for unregistered names)
+//!   stats:    {"stats": true} -> all-shards rollup: the single-model
+//!             field set of PR 3 with counters summed across shards
+//!             ("requests", "batches", "mean_batch", "flush_full",
+//!             "flush_timeout", "workers", "queued_batches", "in_flight",
+//!             "overlap", "worker_flushes", "submit_timeouts",
+//!             "rejected_shutdown", "infer_errors", "kernel",
+//!             "gemm_threads", "gemm_tile") plus "models": [names],
+//!             "unknown_model": n and "shards": {name: per-shard section}
+//!   stats:    {"stats": true, "model": "m"} -> shard "m"'s section only
+//!             (its own counters + "model" + its resolved kernel facts)
 
 pub mod batcher;
+pub mod registry;
 pub mod server;
 
 pub use batcher::{
     BatchStats, Batcher, BatcherConfig, InferEngine, InferReply, InferRequest, ERR_PAYLOAD,
     ERR_SHUTTING_DOWN, ERR_SUBMIT_TIMEOUT,
 };
-pub use server::{serve, ServeConfig};
+pub use registry::{divide_workers, ModelEntry, ModelShard, Registry, ERR_UNKNOWN_MODEL};
+pub use server::{serve, serve_models, serve_registry, ServeConfig, Server};

@@ -1,0 +1,397 @@
+//! Model registry: N named engines, each behind its own per-shard
+//! [`Batcher`] (coalescer + worker pool), plus the core-budget divider
+//! that splits the machine across live shards.
+//!
+//! The single-model serve path (`serve::serve`) is now a one-entry
+//! registry: requests without a `"model"` field route to the default
+//! shard (the first registered model), so PR 3 behaviour is preserved
+//! bit-for-bit. Multi-model servers register one [`ModelEntry`] per
+//! packed network ([`crate::serve::serve_models`]); the router in
+//! `serve::server` dispatches each request line to its shard by name.
+//!
+//! Isolation is structural: every shard owns its own submit queue,
+//! coalescer thread and worker pool, so a hung or panicking engine in
+//! shard A can exhaust only A's queue — B's submit path never blocks on
+//! it (pinned by `rust/tests/serve_multi_model.rs`). Idle shards park
+//! their workers on an empty channel recv; they burn no cycles until a
+//! request routes to them.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::batcher::{Batcher, BatcherConfig, InferEngine, InferReply};
+use crate::bitnet::network::PackedNet;
+use crate::config::ModelArch;
+use crate::error::{BdnnError, Result};
+
+/// Error string carried by replies to requests naming a model that is not
+/// in the registry (the structured reply replaces the closed connection
+/// the router used to produce).
+pub const ERR_UNKNOWN_MODEL: &str = "unknown_model";
+
+/// Divide `cores` across shards with per-flush widths `engine_threads`,
+/// returning the worker-pool size for each shard.
+///
+/// This is the multi-shard generalization of the PR 3 oversubscription
+/// rule (`pool × GEMM threads ≤ cores`): workers are granted round-robin,
+/// one at a time, while the grant still fits in the core budget
+/// (water-filling), so the contract is
+///
+/// * every shard gets **at least one** worker (liveness — a shard with
+///   zero workers would strand its queue), even when the floor alone
+///   oversubscribes a small machine;
+/// * beyond that floor, `Σ workers[i] × engine_threads[i]` never exceeds
+///   `cores` — the pools together never oversubscribe the machine;
+/// * a single shard degenerates to the PR 3 clamp
+///   `max(1, cores / engine_threads)` exactly;
+/// * the split is deterministic in (cores, engine_threads) — no machine
+///   state is consulted, so tests can pin it.
+///
+/// ```
+/// use bdnn::serve::divide_workers;
+/// // two serial-GEMM shards split an 8-core box evenly
+/// assert_eq!(divide_workers(8, &[1, 1]), vec![4, 4]);
+/// // the liveness floor wins over the budget on a small machine
+/// assert_eq!(divide_workers(2, &[4, 4]), vec![1, 1]);
+/// // one shard = the PR 3 clamp: max(1, 8 / 3)
+/// assert_eq!(divide_workers(8, &[3]), vec![2]);
+/// ```
+pub fn divide_workers(cores: usize, engine_threads: &[usize]) -> Vec<usize> {
+    let cores = cores.max(1);
+    let t: Vec<usize> = engine_threads.iter().map(|&x| x.max(1)).collect();
+    if t.is_empty() {
+        return vec![];
+    }
+    let mut w = vec![1usize; t.len()];
+    let mut used: usize = t.iter().sum();
+    loop {
+        let mut granted = false;
+        for (wi, &ti) in w.iter_mut().zip(&t) {
+            if used + ti <= cores {
+                *wi += 1;
+                used += ti;
+                granted = true;
+            }
+        }
+        if !granted {
+            return w;
+        }
+    }
+}
+
+/// One model to be registered: a prepared engine plus the facts the stats
+/// endpoint reports per shard.
+pub struct ModelEntry {
+    pub name: String,
+    pub engine: Arc<dyn InferEngine>,
+    pub in_dim: usize,
+    pub in_shape: Vec<usize>,
+    /// Resolved kernel rung description (e.g. `"simd(avx2)"`).
+    pub kernel: String,
+    /// Effective per-flush GEMM threads of the resolved rung.
+    pub gemm_threads: usize,
+    pub gemm_tile: usize,
+}
+
+impl ModelEntry {
+    /// Entry for a prepared [`PackedNet`], capturing its resolved kernel
+    /// facts once (the same capture `serve` did in PR 2/3).
+    pub fn from_packed(name: &str, arch: &ModelArch, net: Arc<PackedNet>) -> Self {
+        let gemm = net.gemm_config();
+        let dispatch = crate::bitnet::dispatch::KernelDispatch::resolve(&gemm);
+        Self {
+            name: name.to_string(),
+            in_dim: arch.in_dim(),
+            in_shape: arch.in_shape.clone(),
+            kernel: dispatch.describe(),
+            gemm_threads: dispatch.effective_threads(&gemm),
+            gemm_tile: gemm.tile,
+            engine: net,
+        }
+    }
+
+    /// Entry for an arbitrary engine (tests inject slow/hung/panicking
+    /// engines per shard this way).
+    pub fn from_engine(
+        name: &str,
+        in_dim: usize,
+        in_shape: Vec<usize>,
+        engine: Arc<dyn InferEngine>,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            in_dim,
+            in_shape,
+            kernel: "custom".to_string(),
+            gemm_threads: engine.infer_parallelism(),
+            gemm_tile: 0,
+            engine,
+        }
+    }
+}
+
+/// One live shard: a named [`Batcher`] (its own coalescer + pool) plus
+/// the immutable facts its stats section reports.
+pub struct ModelShard {
+    pub name: String,
+    pub batcher: Arc<Batcher>,
+    pub in_dim: usize,
+    pub kernel: String,
+    pub gemm_threads: usize,
+    pub gemm_tile: usize,
+}
+
+/// The model registry: shard lookup by name, a default shard for
+/// model-less requests (backward compatibility with the single-model
+/// protocol), and the unknown-model counter for the stats rollup.
+pub struct Registry {
+    shards: BTreeMap<String, Arc<ModelShard>>,
+    default: String,
+    /// Inference requests naming a model not in the registry (each was
+    /// answered with a structured [`ERR_UNKNOWN_MODEL`] reply).
+    pub unknown_models: AtomicU64,
+}
+
+impl Registry {
+    /// Spawn one batcher per entry. The first entry becomes the default
+    /// shard (requests without a `"model"` field route to it).
+    ///
+    /// Worker budgeting: with `cfg.workers == 0` (auto) the machine's
+    /// cores are split across shards by [`divide_workers`] on each
+    /// engine's per-flush parallelism; an explicit `cfg.workers` is
+    /// honored per shard, exactly like the single-model batcher.
+    pub fn spawn(entries: Vec<ModelEntry>, cfg: BatcherConfig) -> Result<Self> {
+        if entries.is_empty() {
+            return Err(BdnnError::Runtime("registry needs at least one model".into()));
+        }
+        let budget: Vec<usize> = if cfg.workers == 0 {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let threads: Vec<usize> =
+                entries.iter().map(|e| e.engine.infer_parallelism()).collect();
+            divide_workers(cores, &threads)
+        } else {
+            vec![cfg.workers; entries.len()]
+        };
+        let default = entries[0].name.clone();
+        let mut shards = BTreeMap::new();
+        for (entry, workers) in entries.into_iter().zip(budget) {
+            let batcher = Arc::new(Batcher::spawn_named(
+                entry.engine,
+                entry.in_dim,
+                entry.in_shape,
+                BatcherConfig { workers, ..cfg },
+                &entry.name,
+            ));
+            let shard = Arc::new(ModelShard {
+                name: entry.name.clone(),
+                batcher,
+                in_dim: entry.in_dim,
+                kernel: entry.kernel,
+                gemm_threads: entry.gemm_threads,
+                gemm_tile: entry.gemm_tile,
+            });
+            if shards.insert(entry.name.clone(), shard).is_some() {
+                return Err(BdnnError::Runtime(format!(
+                    "duplicate model name '{}' in registry",
+                    entry.name
+                )));
+            }
+        }
+        Ok(Self { shards, default, unknown_models: AtomicU64::new(0) })
+    }
+
+    /// Route an inference request to its shard. `None` (no `"model"`
+    /// field on the wire) routes to the default shard. A miss counts
+    /// toward `unknown_models` and returns the known names — the router
+    /// turns it into a structured [`ERR_UNKNOWN_MODEL`] reply.
+    pub fn route(&self, model: Option<&str>) -> std::result::Result<&Arc<ModelShard>, String> {
+        let name = model.unwrap_or(&self.default);
+        match self.shards.get(name) {
+            Some(s) => Ok(s),
+            None => {
+                self.unknown_models.fetch_add(1, Ordering::Relaxed);
+                let known: Vec<&str> = self.shards.keys().map(|s| s.as_str()).collect();
+                Err(format!("unknown model '{name}' (known: {})", known.join(", ")))
+            }
+        }
+    }
+
+    /// Shard lookup without the unknown-model accounting (stats queries
+    /// for a missing model are client errors, not routed traffic).
+    pub fn shard(&self, name: &str) -> Option<&Arc<ModelShard>> {
+        self.shards.get(name)
+    }
+
+    /// The shard model-less requests route to (the first registered
+    /// model).
+    pub fn default_shard(&self) -> &Arc<ModelShard> {
+        &self.shards[&self.default]
+    }
+
+    /// All shards, in name order (the stats rollup's iteration order).
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<ModelShard>> {
+        self.shards.values()
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.shards.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Begin a graceful drain on every shard (each batcher finishes its
+    /// in-flight batches and answers queued requests with
+    /// `shutting_down`). Drop completes each shard's drain.
+    pub fn shutdown(&self) {
+        for s in self.shards.values() {
+            s.batcher.shutdown();
+        }
+    }
+
+    /// Convenience: route + submit + wait. An unknown model yields an
+    /// [`ERR_UNKNOWN_MODEL`] error reply (same shape the router sends on
+    /// the wire) rather than an `Err`.
+    pub fn infer_blocking(
+        &self,
+        model: Option<&str>,
+        id: u64,
+        pixels: Vec<f32>,
+    ) -> Result<InferReply> {
+        match self.route(model) {
+            Ok(shard) => shard.batcher.infer_blocking(id, pixels),
+            Err(_) => Ok(InferReply {
+                id,
+                pred: usize::MAX,
+                logits: vec![],
+                queue_us: 0,
+                infer_us: 0,
+                error: Some(ERR_UNKNOWN_MODEL.to_string()),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Result as BdnnResult;
+    use crate::tensor::Tensor;
+
+    /// Fixed-logits engine so registry plumbing is testable without
+    /// packing a network.
+    struct ConstEngine {
+        logit: f32,
+        threads: usize,
+    }
+
+    impl InferEngine for ConstEngine {
+        fn infer_batch(&self, x: &Tensor) -> BdnnResult<Tensor> {
+            let rows = x.shape()[0];
+            Ok(Tensor::new(&[rows, 2], vec![self.logit; rows * 2]))
+        }
+
+        fn infer_parallelism(&self) -> usize {
+            self.threads
+        }
+    }
+
+    fn entry(name: &str, logit: f32, threads: usize) -> ModelEntry {
+        ModelEntry::from_engine(
+            name,
+            4,
+            vec![4],
+            Arc::new(ConstEngine { logit, threads }),
+        )
+    }
+
+    #[test]
+    fn divider_honors_budget_and_liveness() {
+        assert_eq!(divide_workers(8, &[1, 1]), vec![4, 4]);
+        assert_eq!(divide_workers(8, &[1, 1, 1]), vec![3, 3, 2]);
+        assert_eq!(divide_workers(2, &[4, 4]), vec![1, 1]); // floor wins
+        assert_eq!(divide_workers(8, &[3]), vec![2]); // single shard = PR 3 clamp
+        assert_eq!(divide_workers(1, &[1]), vec![1]);
+        assert_eq!(divide_workers(16, &[4, 2]), vec![3, 2]); // 3*4 + 2*2 = 16
+        assert_eq!(divide_workers(5, &[0]), vec![5]); // 0 threads clamps to 1
+        assert!(divide_workers(8, &[]).is_empty());
+    }
+
+    #[test]
+    fn explicit_workers_are_honored_per_shard() {
+        let cfg = BatcherConfig { workers: 3, ..BatcherConfig::default() };
+        let r = Registry::spawn(vec![entry("a", 1.0, 1), entry("b", 2.0, 1)], cfg).unwrap();
+        for s in r.iter() {
+            assert_eq!(s.batcher.workers(), 3, "shard {}", s.name);
+        }
+    }
+
+    #[test]
+    fn auto_workers_divide_cores_across_shards() {
+        let cfg = BatcherConfig::default(); // workers: 0 = auto
+        let r = Registry::spawn(vec![entry("a", 1.0, 1), entry("b", 2.0, 1)], cfg).unwrap();
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let total: usize = r.iter().map(|s| s.batcher.workers()).sum();
+        assert!(total <= cores.max(2), "pools oversubscribe: {total} workers, {cores} cores");
+        for s in r.iter() {
+            assert!(s.batcher.workers() >= 1, "shard {} starved", s.name);
+        }
+    }
+
+    #[test]
+    fn routes_default_and_counts_unknown() {
+        let r = Registry::spawn(
+            vec![entry("first", 1.0, 1), entry("other", 2.0, 1)],
+            BatcherConfig { workers: 1, ..BatcherConfig::default() },
+        )
+        .unwrap();
+        // registration order picks the default, not BTreeMap order
+        assert_eq!(r.route(None).unwrap().name, "first");
+        assert_eq!(r.route(Some("other")).unwrap().name, "other");
+        assert_eq!(r.unknown_models.load(Ordering::Relaxed), 0);
+        let err = r.route(Some("nope")).unwrap_err();
+        assert!(err.contains("nope") && err.contains("first") && err.contains("other"), "{err}");
+        assert_eq!(r.unknown_models.load(Ordering::Relaxed), 1);
+        // shard() is the no-accounting lookup (stats path)
+        assert!(r.shard("missing").is_none());
+        assert_eq!(r.unknown_models.load(Ordering::Relaxed), 1);
+        assert_eq!(r.names(), vec!["first", "other"]);
+        assert_eq!(r.len(), 2);
+        r.shutdown();
+    }
+
+    #[test]
+    fn empty_and_duplicate_registries_error() {
+        assert!(Registry::spawn(vec![], BatcherConfig::default()).is_err());
+        let cfg = BatcherConfig { workers: 1, ..BatcherConfig::default() };
+        assert!(Registry::spawn(vec![entry("m", 1.0, 1), entry("m", 2.0, 1)], cfg).is_err());
+    }
+
+    #[test]
+    fn infer_blocking_replies_per_model_and_flags_unknown() {
+        let r = Registry::spawn(
+            vec![entry("a", 1.0, 1), entry("b", 2.0, 1)],
+            BatcherConfig { workers: 1, ..BatcherConfig::default() },
+        )
+        .unwrap();
+        let a = r.infer_blocking(Some("a"), 1, vec![0.0; 4]).unwrap();
+        assert_eq!(a.logits, vec![1.0, 1.0]);
+        let b = r.infer_blocking(Some("b"), 2, vec![0.0; 4]).unwrap();
+        assert_eq!(b.logits, vec![2.0, 2.0]);
+        let default = r.infer_blocking(None, 3, vec![0.0; 4]).unwrap();
+        assert_eq!(default.logits, vec![1.0, 1.0], "default must be the first entry");
+        let missing = r.infer_blocking(Some("zzz"), 4, vec![0.0; 4]).unwrap();
+        assert_eq!(missing.error.as_deref(), Some(ERR_UNKNOWN_MODEL));
+        assert_eq!(missing.id, 4);
+        assert!(missing.logits.is_empty());
+        assert_eq!(r.unknown_models.load(Ordering::Relaxed), 1);
+        r.shutdown();
+    }
+}

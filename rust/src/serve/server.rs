@@ -1,18 +1,27 @@
-//! TCP front-end: JSON-lines protocol over the dynamic batcher.
+//! TCP front-end: JSON-lines protocol routed over per-model batcher
+//! shards.
 //!
 //! One thread per connection (requests on a connection are pipelined: the
-//! reader thread submits, replies return in completion order). `serve`
-//! blocks; tests drive it through a real socket on 127.0.0.1:0.
+//! reader thread submits, replies return in completion order). Each
+//! request line may name its `"model"`; the router sends it to that
+//! shard's batcher, and a line without the field routes to the default
+//! shard — the sole model on a single-model server, so the PR 3 protocol
+//! keeps working unchanged. Tests drive it through a real socket on
+//! 127.0.0.1:0.
 //!
-//! Two request forms, one JSON object per line (`docs/SERVING.md`):
+//! Request forms, one JSON object per line (`docs/SERVING.md`):
 //!
-//! * `{"id": 7, "pixels": [...]}` — inference; one reply line each.
-//! * `{"stats": true}` — served-traffic counters, batcher pool state
-//!   (`workers`, `in_flight`, `overlap`, per-worker flush counts) and the
-//!   resolved GEMM kernel rung (`"kernel": "simd(avx2)"`, threads, tile),
-//!   so operators can confirm which rung of the ladder a live server is
-//!   running and whether the pool actually pipelines flushes.
+//! * `{"id": 7, "pixels": [...]}` — inference on the default shard.
+//! * `{"id": 7, "model": "m", "pixels": [...]}` — inference on shard `m`;
+//!   an unregistered name gets a structured `"unknown_model"` error reply
+//!   (the connection stays open).
+//! * `{"stats": true}` — all-shards rollup: summed traffic counters at
+//!   the top level (the PR 3 single-model shape, so existing consumers
+//!   keep parsing), plus `"models"`, `"unknown_model"` and a `"shards"`
+//!   object with each shard's own section.
+//! * `{"stats": true, "model": "m"}` — shard `m`'s section alone.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,6 +29,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::batcher::{Batcher, BatcherConfig, InferRequest};
+use super::registry::{ModelEntry, ModelShard, Registry, ERR_UNKNOWN_MODEL};
 use crate::bitnet::network::PackedNet;
 use crate::config::json::{self, Json};
 use crate::config::ModelArch;
@@ -38,25 +48,21 @@ impl Default for ServeConfig {
     }
 }
 
-/// Immutable engine facts reported by the stats endpoint (captured once
-/// at startup from the `PackedNet`'s resolved `GemmConfig`).
-struct EngineInfo {
-    kernel: String,
-    gemm_threads: usize,
-    gemm_tile: usize,
-}
-
-/// Running server handle (listener thread + batcher).
+/// Running server handle (listener thread + model registry).
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// The default shard's batcher — the whole pool on a single-model
+    /// server (kept as a field for PR 3 callers and tests).
     pub batcher: Arc<Batcher>,
+    /// All shards (single-model servers hold a one-entry registry).
+    pub registry: Arc<Registry>,
 }
 
 impl Server {
-    /// Stop accepting connections and begin the batcher's graceful drain:
-    /// in-flight batches finish, still-queued requests get a
+    /// Stop accepting connections and begin every shard's graceful
+    /// drain: in-flight batches finish, still-queued requests get a
     /// `"shutting_down"` error reply instead of a hang.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
@@ -65,29 +71,35 @@ impl Server {
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
-        self.batcher.shutdown();
+        self.registry.shutdown();
     }
 }
 
-/// Start serving a packed network. Returns a handle; callers connect with
-/// JSON-lines: {"id": n, "pixels": [...]} -> one JSON reply line each.
+/// Start serving a single packed network (the PR 3 entry point): a
+/// one-entry registry whose default shard is the model, so requests with
+/// no `"model"` field behave exactly as before.
 pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<Server> {
-    let in_dim = arch.in_dim();
-    let in_shape = arch.in_shape.clone();
-    let gemm = net.gemm_config();
-    let dispatch = crate::bitnet::KernelDispatch::resolve(&gemm);
-    let info = Arc::new(EngineInfo {
-        kernel: dispatch.describe(),
-        gemm_threads: dispatch.effective_threads(&gemm),
-        gemm_tile: gemm.tile,
-    });
-    let batcher = Arc::new(Batcher::spawn(net, in_dim, in_shape, cfg.batcher));
-    let listener = TcpListener::bind(&cfg.addr)
-        .map_err(|e| BdnnError::Runtime(format!("bind {}: {e}", cfg.addr)))?;
+    serve_models(vec![ModelEntry::from_packed(&arch.name, arch, net)], cfg)
+}
+
+/// Start serving N named models, one batcher shard each. The first entry
+/// is the default shard (model-less requests route to it); worker
+/// budgeting across shards follows [`crate::serve::divide_workers`] when
+/// `cfg.batcher.workers == 0`.
+pub fn serve_models(models: Vec<ModelEntry>, cfg: ServeConfig) -> Result<Server> {
+    let registry = Arc::new(Registry::spawn(models, cfg.batcher)?);
+    serve_registry(registry, &cfg.addr)
+}
+
+/// Bind the listener over an already-spawned registry (tests build exotic
+/// registries — hung/panicking shards — and serve them directly).
+pub fn serve_registry(registry: Arc<Registry>, addr: &str) -> Result<Server> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| BdnnError::Runtime(format!("bind {addr}: {e}")))?;
     let local_addr = listener.local_addr().map_err(BdnnError::Io)?;
     let stop = Arc::new(AtomicBool::new(false));
     let accept_stop = stop.clone();
-    let accept_batcher = batcher.clone();
+    let accept_registry = registry.clone();
     let accept_thread = std::thread::spawn(move || {
         for stream in listener.incoming() {
             if accept_stop.load(Ordering::SeqCst) {
@@ -95,25 +107,28 @@ pub fn serve(arch: &ModelArch, net: Arc<PackedNet>, cfg: ServeConfig) -> Result<
             }
             match stream {
                 Ok(s) => {
-                    let b = accept_batcher.clone();
-                    let i = info.clone();
+                    let r = accept_registry.clone();
                     std::thread::spawn(move || {
-                        let _ = handle_connection(s, b, i);
+                        let _ = handle_connection(s, r);
                     });
                 }
                 Err(_) => return,
             }
         }
     });
-    Ok(Server { local_addr, stop, accept_thread: Some(accept_thread), batcher })
+    let batcher = registry.default_shard().batcher.clone();
+    Ok(Server { local_addr, stop, accept_thread: Some(accept_thread), batcher, registry })
 }
 
-/// Render the stats reply: batcher counters, pool state, and the
-/// resolved kernel rung (field reference: `docs/SERVING.md`).
-fn stats_json(batcher: &Batcher, info: &EngineInfo) -> String {
+/// One shard's stats section: its batcher counters, pool state and
+/// resolved kernel rung, plus the shard's model name (field reference:
+/// `docs/SERVING.md`).
+fn shard_stats(shard: &ModelShard) -> BTreeMap<String, Json> {
     use std::sync::atomic::Ordering::Relaxed;
+    let batcher = &shard.batcher;
     let s = &batcher.stats;
-    let mut obj = std::collections::BTreeMap::new();
+    let mut obj = BTreeMap::new();
+    obj.insert("model".to_string(), Json::Str(shard.name.clone()));
     obj.insert("requests".to_string(), Json::Num(s.requests.load(Relaxed) as f64));
     obj.insert("batches".to_string(), Json::Num(s.batches.load(Relaxed) as f64));
     obj.insert("mean_batch".to_string(), Json::Num(s.mean_batch()));
@@ -133,13 +148,80 @@ fn stats_json(batcher: &Batcher, info: &EngineInfo) -> String {
         Json::Num(s.rejected_shutdown.load(Relaxed) as f64),
     );
     obj.insert("infer_errors".to_string(), Json::Num(s.infer_errors.load(Relaxed) as f64));
-    obj.insert("kernel".to_string(), Json::Str(info.kernel.clone()));
-    obj.insert("gemm_threads".to_string(), Json::Num(info.gemm_threads as f64));
-    obj.insert("gemm_tile".to_string(), Json::Num(info.gemm_tile as f64));
+    obj.insert("kernel".to_string(), Json::Str(shard.kernel.clone()));
+    obj.insert("gemm_threads".to_string(), Json::Num(shard.gemm_threads as f64));
+    obj.insert("gemm_tile".to_string(), Json::Num(shard.gemm_tile as f64));
+    obj
+}
+
+/// The all-shards rollup. Summed counters sit at the **top level** in the
+/// exact single-model shape of PR 3 (with one shard the values are
+/// identical, so old consumers keep working); `"shards"` nests each
+/// shard's own section and `"unknown_model"` counts misrouted requests.
+fn rollup_stats(registry: &Registry) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut obj = BTreeMap::new();
+    let mut requests = 0u64;
+    let mut batches = 0u64;
+    let mut flush_full = 0u64;
+    let mut flush_timeout = 0u64;
+    let mut workers = 0usize;
+    let mut queued_batches = 0u64;
+    let mut in_flight = 0u64;
+    let mut overlap = 0u64;
+    let mut worker_flushes: Vec<Json> = Vec::new();
+    let mut submit_timeouts = 0u64;
+    let mut rejected_shutdown = 0u64;
+    let mut infer_errors = 0u64;
+    let mut shards = BTreeMap::new();
+    for shard in registry.iter() {
+        let s = &shard.batcher.stats;
+        requests += s.requests.load(Relaxed);
+        batches += s.batches.load(Relaxed);
+        flush_full += s.flush_full.load(Relaxed);
+        flush_timeout += s.flush_timeout.load(Relaxed);
+        workers += shard.batcher.workers();
+        queued_batches += s.queued_batches.load(Relaxed);
+        in_flight += s.in_flight.load(Relaxed);
+        overlap += s.overlap.load(Relaxed);
+        worker_flushes.extend(s.worker_flushes().into_iter().map(|n| Json::Num(n as f64)));
+        submit_timeouts += s.submit_timeouts.load(Relaxed);
+        rejected_shutdown += s.rejected_shutdown.load(Relaxed);
+        infer_errors += s.infer_errors.load(Relaxed);
+        shards.insert(shard.name.clone(), Json::Obj(shard_stats(shard)));
+    }
+    obj.insert("requests".to_string(), Json::Num(requests as f64));
+    obj.insert("batches".to_string(), Json::Num(batches as f64));
+    let mean = if batches == 0 { 0.0 } else { requests as f64 / batches as f64 };
+    obj.insert("mean_batch".to_string(), Json::Num(mean));
+    obj.insert("flush_full".to_string(), Json::Num(flush_full as f64));
+    obj.insert("flush_timeout".to_string(), Json::Num(flush_timeout as f64));
+    obj.insert("workers".to_string(), Json::Num(workers as f64));
+    obj.insert("queued_batches".to_string(), Json::Num(queued_batches as f64));
+    obj.insert("in_flight".to_string(), Json::Num(in_flight as f64));
+    obj.insert("overlap".to_string(), Json::Num(overlap as f64));
+    obj.insert("worker_flushes".to_string(), Json::Arr(worker_flushes));
+    obj.insert("submit_timeouts".to_string(), Json::Num(submit_timeouts as f64));
+    obj.insert("rejected_shutdown".to_string(), Json::Num(rejected_shutdown as f64));
+    obj.insert("infer_errors".to_string(), Json::Num(infer_errors as f64));
+    // kernel facts: the default shard's, like the single-model endpoint
+    let d = registry.default_shard();
+    obj.insert("kernel".to_string(), Json::Str(d.kernel.clone()));
+    obj.insert("gemm_threads".to_string(), Json::Num(d.gemm_threads as f64));
+    obj.insert("gemm_tile".to_string(), Json::Num(d.gemm_tile as f64));
+    obj.insert(
+        "models".to_string(),
+        Json::Arr(registry.names().into_iter().map(|n| Json::Str(n.to_string())).collect()),
+    );
+    obj.insert(
+        "unknown_model".to_string(),
+        Json::Num(registry.unknown_models.load(Relaxed) as f64),
+    );
+    obj.insert("shards".to_string(), Json::Obj(shards));
     Json::Obj(obj).to_string()
 }
 
-fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, info: Arc<EngineInfo>) -> Result<()> {
+fn handle_connection(stream: TcpStream, registry: Arc<Registry>) -> Result<()> {
     let peer = stream.try_clone().map_err(BdnnError::Io)?;
     let reader = BufReader::new(stream);
     let mut writer = peer;
@@ -151,33 +233,51 @@ fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, info: Arc<EngineI
         // parse once; stats detection and request extraction share the Json
         let response = match json::parse(&line) {
             Err(e) => error_json(0, &format!("bad json: {e}")),
-            Ok(j) if is_stats_request(&j) => stats_json(&batcher, &info),
+            Ok(j) if is_stats_request(&j) => match j.get("model").map(|m| m.as_str()) {
+                // {"stats": true} — the all-shards rollup
+                None => rollup_stats(&registry),
+                // {"stats": true, "model": "m"} — that shard's section.
+                // shard() skips the unknown-model accounting: a stats
+                // query for a missing model is a client error, not
+                // misrouted inference traffic.
+                Some(Some(name)) => match registry.shard(name) {
+                    Some(shard) => Json::Obj(shard_stats(shard)).to_string(),
+                    None => error_json(0, &format!("unknown model '{name}'")),
+                },
+                Some(None) => error_json(0, "'model' must be a string"),
+            },
             Ok(j) => match parse_request(&j) {
-                Ok((id, pixels)) => {
-                    let (tx, rx) = std::sync::mpsc::channel();
-                    batcher
-                        .submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })?;
-                    match rx.recv() {
-                        Ok(rep) => match rep.error {
-                            None => {
-                                let mut obj = std::collections::BTreeMap::new();
-                                obj.insert("id".to_string(), Json::Num(rep.id as f64));
-                                obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
-                                obj.insert(
-                                    "logits".to_string(),
-                                    Json::Arr(
-                                        rep.logits.iter().map(|&v| Json::Num(v as f64)).collect(),
-                                    ),
-                                );
-                                obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
-                                obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
-                                Json::Obj(obj).to_string()
-                            }
-                            Some(err) => error_json(rep.id, &err),
-                        },
-                        Err(_) => error_json(id, "batcher dropped request"),
+                Ok((id, model, pixels)) => match registry.route(model.as_deref()) {
+                    Ok(shard) => {
+                        let (tx, rx) = std::sync::mpsc::channel();
+                        shard.batcher.submit(InferRequest {
+                            id,
+                            pixels,
+                            enqueued: Instant::now(),
+                            reply: tx,
+                        })?;
+                        match rx.recv() {
+                            Ok(rep) => match rep.error {
+                                None => reply_json(&rep),
+                                Some(err) => error_json(rep.id, &err),
+                            },
+                            Err(_) => error_json(id, "batcher dropped request"),
+                        }
                     }
-                }
+                    // structured reply, not a closed connection: the
+                    // "error" field carries the stable ERR_UNKNOWN_MODEL
+                    // token, "detail" the human message with known names
+                    Err(detail) => {
+                        let mut obj = BTreeMap::new();
+                        obj.insert("id".to_string(), Json::Num(id as f64));
+                        obj.insert("error".to_string(), Json::Str(ERR_UNKNOWN_MODEL.to_string()));
+                        if let Some(m) = model {
+                            obj.insert("model".to_string(), Json::Str(m));
+                        }
+                        obj.insert("detail".to_string(), Json::Str(detail));
+                        Json::Obj(obj).to_string()
+                    }
+                },
                 Err(e) => error_json(0, &e),
             },
         };
@@ -185,6 +285,19 @@ fn handle_connection(stream: TcpStream, batcher: Arc<Batcher>, info: Arc<EngineI
         writer.write_all(b"\n").map_err(BdnnError::Io)?;
     }
     Ok(())
+}
+
+fn reply_json(rep: &super::batcher::InferReply) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(rep.id as f64));
+    obj.insert("pred".to_string(), Json::Num(rep.pred as f64));
+    obj.insert(
+        "logits".to_string(),
+        Json::Arr(rep.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    obj.insert("queue_us".to_string(), Json::Num(rep.queue_us as f64));
+    obj.insert("infer_us".to_string(), Json::Num(rep.infer_us as f64));
+    Json::Obj(obj).to_string()
 }
 
 /// `{"stats": true}` objects are stats queries, not inference requests.
@@ -197,8 +310,12 @@ fn is_stats_request(j: &Json) -> bool {
         && j.get("pixels").is_none()
 }
 
-fn parse_request(j: &Json) -> std::result::Result<(u64, Vec<f32>), String> {
+fn parse_request(j: &Json) -> std::result::Result<(u64, Option<String>, Vec<f32>), String> {
     let id = j.get("id").and_then(Json::as_f64).ok_or("missing 'id'")? as u64;
+    let model = match j.get("model") {
+        None => None,
+        Some(m) => Some(m.as_str().ok_or("'model' must be a string")?.to_string()),
+    };
     let pixels = j
         .get("pixels")
         .and_then(Json::as_arr)
@@ -206,11 +323,11 @@ fn parse_request(j: &Json) -> std::result::Result<(u64, Vec<f32>), String> {
         .iter()
         .map(|v| v.as_f64().map(|f| f as f32).ok_or("non-numeric pixel"))
         .collect::<std::result::Result<Vec<f32>, _>>()?;
-    Ok((id, pixels))
+    Ok((id, model, pixels))
 }
 
 fn error_json(id: u64, msg: &str) -> String {
-    let mut obj = std::collections::BTreeMap::new();
+    let mut obj = BTreeMap::new();
     obj.insert("id".to_string(), Json::Num(id as f64));
     obj.insert("error".to_string(), Json::Str(msg.to_string()));
     Json::Obj(obj).to_string()
@@ -336,6 +453,10 @@ mod tests {
         assert!(j.get("in_flight").and_then(Json::as_f64).unwrap() <= 1.0);
         assert_eq!(j.get("overlap").and_then(Json::as_f64), Some(0.0));
         assert_eq!(j.get("submit_timeouts").and_then(Json::as_f64), Some(0.0));
+        // the rollup names its shards (one here: the model itself)
+        let models = j.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(j.get("unknown_model").and_then(Json::as_f64), Some(0.0));
         // an inference request decorated with "stats": true is NOT
         // hijacked into a stats reply — it still gets its id-matched answer
         let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();
@@ -380,6 +501,66 @@ mod tests {
         let mut ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_shard_stats_and_model_routing_over_one_socket() {
+        // two copies of the tiny net under different names; model-tagged
+        // requests route per shard, per-shard stats sections attribute them
+        let (arch, net) = tiny();
+        let e1 = ModelEntry::from_packed("alpha", &arch, net.clone());
+        let e2 = ModelEntry::from_packed("beta", &arch, net);
+        let server = serve_models(
+            vec![e1, e2],
+            ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                batcher: BatcherConfig { workers: 1, ..BatcherConfig::default() },
+            },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut r = Pcg32::seeded(21);
+        let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();
+        let line_for = |id: u64, model: &str| {
+            format!("{{\"id\": {id}, \"model\": \"{model}\", \"pixels\": [{}]}}\n", px.join(","))
+        };
+        let mut line = String::new();
+        for (id, m) in [(1u64, "alpha"), (2, "beta"), (3, "beta")] {
+            conn.write_all(line_for(id, m).as_bytes()).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let j = json::parse(&line).unwrap();
+            assert_eq!(j.get("id").and_then(Json::as_f64), Some(id as f64), "{line}");
+            assert!(j.get("pred").is_some(), "{line}");
+        }
+        conn.write_all(b"{\"stats\": true, \"model\": \"beta\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("model").and_then(Json::as_str), Some("beta"));
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(2.0), "{line}");
+        // rollup sums both shards and exposes the shard sections
+        conn.write_all(b"{\"stats\": true}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(3.0), "{line}");
+        let shards = j.get("shards").and_then(Json::as_obj).unwrap();
+        assert_eq!(shards.len(), 2, "{line}");
+        // unknown model: structured reply, connection stays open
+        conn.write_all(line_for(9, "gamma").as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("error").and_then(Json::as_str), Some(ERR_UNKNOWN_MODEL), "{line}");
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(9.0), "{line}");
+        conn.write_all(line_for(10, "alpha").as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"pred\""), "connection must survive the unknown model: {line}");
         server.shutdown();
     }
 }

@@ -1,0 +1,942 @@
+//! Cross-shard isolation & determinism suite for the multi-model serve
+//! path (`serve::Registry` + per-shard batchers + the TCP router).
+//!
+//! The invariants under attack:
+//!
+//!  * **exactly-once per shard** — barrier-released submitters spraying
+//!    requests across models get one and only one reply each, under
+//!    panicking and hung engine injection (100-iteration soak);
+//!  * **no cross-shard payload bleed** — every valid reply's logits are
+//!    bit-identical to a scalar-oracle run of that request's pixels
+//!    through *its own* model, for every forced kernel rung;
+//!  * **shard isolation** — a hung engine in shard A exhausts only A's
+//!    queue; B's submit path keeps answering at full speed;
+//!  * **drain everywhere** — `Registry::shutdown` delivers a reply
+//!    (`shutting_down` or a real one) to every queued request in every
+//!    shard, and post-shutdown submits bounce immediately;
+//!  * **stats attribution** — per-shard counters are monotone and sum to
+//!    the all-shards rollup over the real TCP front-end;
+//!  * **worker budget** — `divide_workers` never oversubscribes and never
+//!    starves a shard (property test);
+//!  * **backward compatibility** — a single-model server with no
+//!    `"model"` field on the wire reproduces the PR 3 golden fixtures
+//!    bit-for-bit in submission order.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use bdnn::bitnet::network::{PackedNet, Params};
+use bdnn::config::json::{self, Json};
+use bdnn::config::{GemmConfig, KernelKind, ModelArch};
+use bdnn::error::Result;
+use bdnn::proptest::{check, ensure};
+use bdnn::serve::{
+    divide_workers, serve, serve_models, serve_registry, BatcherConfig, InferEngine, InferReply,
+    InferRequest, ModelEntry, Registry, ServeConfig, ERR_PAYLOAD, ERR_SHUTTING_DOWN,
+    ERR_SUBMIT_TIMEOUT, ERR_UNKNOWN_MODEL,
+};
+use bdnn::tensor::Tensor;
+use bdnn::util::Pcg32;
+
+const IN_DIM: usize = 12;
+const CLASSES: usize = 4;
+const MODELS: usize = 3;
+
+fn arch(name: &str) -> ModelArch {
+    ModelArch {
+        name: name.into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![IN_DIM],
+        classes: CLASSES,
+        hidden: vec![16],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 4,
+        eval_batch: 4,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    }
+}
+
+/// Per-model weights: each model index gets its own seed, so the three
+/// shards compute genuinely different logits — any cross-shard payload or
+/// reply bleed shows up as an oracle mismatch.
+fn params(model: usize) -> Params {
+    let mut r = Pcg32::seeded(0xB0DE_u64 ^ (model as u64 + 1).wrapping_mul(0x9E37_79B9));
+    let mut p = Params::new();
+    p.insert(
+        "L00_W".into(),
+        Tensor::new(&[IN_DIM, 16], (0..IN_DIM * 16).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert("L00_b".into(), Tensor::new(&[16], (0..16).map(|_| 0.1 * r.normal()).collect()));
+    p.insert(
+        "L01_W".into(),
+        Tensor::new(&[16, CLASSES], (0..16 * CLASSES).map(|_| r.uniform(-1.0, 1.0)).collect()),
+    );
+    p.insert(
+        "L01_b".into(),
+        Tensor::new(&[CLASSES], (0..CLASSES).map(|_| 0.1 * r.normal()).collect()),
+    );
+    p
+}
+
+fn model_name(m: usize) -> String {
+    format!("m{m}")
+}
+
+/// One packed net per (model, kernel) and the scalar oracles the replies
+/// are compared against.
+fn net(model: usize, kernel: KernelKind) -> Arc<PackedNet> {
+    let gemm = GemmConfig { tile: 8, threads: 2, kernel };
+    Arc::new(
+        PackedNet::prepare(&arch(&model_name(model)), &params(model))
+            .unwrap()
+            .with_gemm_config(gemm),
+    )
+}
+
+fn oracle(model: usize) -> PackedNet {
+    PackedNet::prepare(&arch(&model_name(model)), &params(model))
+        .unwrap()
+        .with_gemm_config(GemmConfig::serial())
+}
+
+fn entry(model: usize, kernel: KernelKind) -> ModelEntry {
+    ModelEntry::from_packed(&model_name(model), &arch(&model_name(model)), net(model, kernel))
+}
+
+/// Engine that blocks inside `infer_batch` until released — a hung shard.
+struct HangingEngine {
+    release: Arc<AtomicBool>,
+}
+
+impl InferEngine for HangingEngine {
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        while !self.release.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rows = x.shape()[0];
+        Ok(Tensor::new(&[rows, CLASSES], vec![0.0; rows * CLASSES]))
+    }
+}
+
+/// Engine whose every `infer_batch` panics — a poisoned shard.
+struct PanickingEngine;
+
+impl InferEngine for PanickingEngine {
+    fn infer_batch(&self, _x: &Tensor) -> Result<Tensor> {
+        panic!("poisoned batch")
+    }
+}
+
+/// Engine slow enough that a shard's queue visibly backs up.
+struct SlowEngine {
+    delay: Duration,
+}
+
+impl InferEngine for SlowEngine {
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        let rows = x.shape()[0];
+        Ok(Tensor::new(&[rows, CLASSES], vec![0.25; rows * CLASSES]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// satellite: property test for the worker-budget divider
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_budget_divider_never_oversubscribes_or_starves() {
+    check("divide_workers contract", 0xD1F1DE, 200, |g| {
+        let cores = g.usize_in(1, 64);
+        let shards = g.usize_in(1, 8);
+        let threads: Vec<usize> = (0..shards).map(|_| g.usize_in(1, 8)).collect();
+        let w = divide_workers(cores, &threads);
+        ensure(w.len() == shards, format!("len {} != {shards}", w.len()))?;
+        // liveness: no shard is starved to zero workers
+        ensure(w.iter().all(|&x| x >= 1), format!("starved shard: {w:?}"))?;
+        // budget: beyond the 1-worker-per-shard floor, the pools together
+        // never oversubscribe the cores
+        let used: usize = w.iter().zip(&threads).map(|(&wi, &ti)| wi * ti).sum();
+        let floor: usize = threads.iter().sum();
+        ensure(
+            used <= cores.max(floor),
+            format!("oversubscribed: {w:?} x {threads:?} = {used} > max({cores}, {floor})"),
+        )?;
+        // single shard degenerates to the PR 3 clamp exactly
+        if shards == 1 {
+            ensure(
+                w[0] == (cores / threads[0]).max(1),
+                format!("single-shard clamp: {w:?} for cores={cores}, t={threads:?}"),
+            )?;
+        }
+        // deterministic in its inputs
+        ensure(divide_workers(cores, &threads) == w, "non-deterministic split".to_string())?;
+        // maximal: no further worker fits anywhere (water-filling stopped
+        // only because every grant would burst the budget)
+        let min_t = *threads.iter().min().unwrap();
+        ensure(
+            used + min_t > cores,
+            format!("left budget on the table: used {used} + min {min_t} <= {cores}"),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the 100-iteration mixed-model soak (headline acceptance criterion)
+// ---------------------------------------------------------------------------
+
+const SUBMITTERS: u64 = 4;
+const PER_THREAD: u64 = 6;
+const TOTAL: u64 = SUBMITTERS * PER_THREAD;
+
+/// Payload for request `id` in iteration `it`: usually `IN_DIM` pixels,
+/// sometimes (deterministically, ~1 in 8) a wrong-size payload that must
+/// bounce with [`ERR_PAYLOAD`].
+fn payload(it: u64, id: u64) -> (Vec<f32>, bool) {
+    let mut r = Pcg32::seeded(it.wrapping_mul(0x9E37_79B9).wrapping_add(id));
+    let valid = r.below(8) != 0;
+    let len = if valid { IN_DIM } else { [3usize, IN_DIM - 1, IN_DIM + 5][(id % 3) as usize] };
+    ((0..len).map(|_| r.normal()).collect(), valid)
+}
+
+/// Which shard request `id` targets in iteration `it`: round-robin over
+/// the three real models, with every 6th request rerouted to the poisoned
+/// shard on panic-injection iterations.
+fn target(it: u64, id: u64, poison: bool) -> String {
+    if poison && id % 6 == 5 {
+        "poison".to_string()
+    } else {
+        model_name(((it + id) % MODELS as u64) as usize)
+    }
+}
+
+#[test]
+fn soak_mixed_model_100_iterations() {
+    // prepare every (model, kernel) net once; iterations only respawn the
+    // registry around them
+    let nets: Vec<Vec<Arc<PackedNet>>> = KernelKind::ALL
+        .iter()
+        .map(|&k| (0..MODELS).map(|m| net(m, k)).collect())
+        .collect();
+    let oracles: Vec<PackedNet> = (0..MODELS).map(oracle).collect();
+
+    for it in 0..100u64 {
+        let kernel_idx = (it % KernelKind::ALL.len() as u64) as usize;
+        let poison = it % 5 == 4;
+        let hung = it % 7 == 3;
+        let mut entries: Vec<ModelEntry> = (0..MODELS)
+            .map(|m| {
+                ModelEntry::from_packed(
+                    &model_name(m),
+                    &arch(&model_name(m)),
+                    nets[kernel_idx][m].clone(),
+                )
+            })
+            .collect();
+        if poison {
+            entries.push(ModelEntry::from_engine(
+                "poison",
+                IN_DIM,
+                vec![IN_DIM],
+                Arc::new(PanickingEngine),
+            ));
+        }
+        let release = Arc::new(AtomicBool::new(false));
+        if hung {
+            entries.push(ModelEntry::from_engine(
+                "hung",
+                IN_DIM,
+                vec![IN_DIM],
+                Arc::new(HangingEngine { release: release.clone() }),
+            ));
+        }
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+            workers: if it % 2 == 0 { 1 } else { 0 }, // explicit and auto-divided
+            drain_timeout: Duration::from_secs(1),
+            ..BatcherConfig::default()
+        };
+        let registry = Arc::new(Registry::spawn(entries, cfg).unwrap());
+
+        // a request parked inside the hung shard for the whole barrage:
+        // its engine blocks, its pool worker blocks, and none of that may
+        // leak into the healthy shards below
+        let hung_rx = if hung {
+            let (tx, rx) = mpsc::channel();
+            registry
+                .route(Some("hung"))
+                .unwrap()
+                .batcher
+                .submit(InferRequest {
+                    id: 9_999,
+                    pixels: vec![0.5; IN_DIM],
+                    enqueued: Instant::now(),
+                    reply: tx,
+                })
+                .unwrap();
+            Some(rx)
+        } else {
+            None
+        };
+
+        // barrier-released mixed-model barrage with duplicate/missing
+        // detection on the per-request oneshot channels
+        let barrier = Arc::new(Barrier::new(SUBMITTERS as usize));
+        let mut handles = Vec::new();
+        for t in 0..SUBMITTERS {
+            let (r2, bar) = (registry.clone(), barrier.clone());
+            handles.push(std::thread::spawn(move || {
+                bar.wait();
+                let mut out = Vec::new();
+                for q in 0..PER_THREAD {
+                    let id = t * PER_THREAD + q;
+                    let model = target(it, id, poison);
+                    let (pixels, _) = payload(it, id);
+                    let (tx, rx) = mpsc::channel();
+                    let shard = r2.route(Some(&model)).unwrap().clone();
+                    shard
+                        .batcher
+                        .submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })
+                        .unwrap();
+                    let rep = rx
+                        .recv_timeout(Duration::from_secs(10))
+                        .unwrap_or_else(|_| panic!("iteration {it}, id {id}: reply lost"));
+                    assert!(rx.try_recv().is_err(), "iteration {it}, id {id}: duplicate reply");
+                    out.push(rep);
+                }
+                out
+            }));
+        }
+        let replies: Vec<InferReply> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+
+        // exactly-once across every shard
+        assert_eq!(replies.len() as u64, TOTAL, "iteration {it}: reply count");
+        let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, TOTAL, "iteration {it}: duplicate or missing ids");
+
+        // reply contents: payload errors bounce, poisoned flushes become
+        // error replies, and every healthy reply is bit-identical to the
+        // scalar oracle of its own model — no cross-shard bleed
+        let mut valid_per_model = vec![0u64; MODELS];
+        for rep in &replies {
+            let (pixels, valid) = payload(it, rep.id);
+            let model = target(it, rep.id, poison);
+            if !valid {
+                assert_eq!(
+                    rep.error.as_deref(),
+                    Some(ERR_PAYLOAD),
+                    "iteration {it}, id {}: invalid payload not bounced",
+                    rep.id
+                );
+                continue;
+            }
+            if model == "poison" {
+                let err = rep.error.as_deref().unwrap_or_else(|| {
+                    panic!("iteration {it}, id {}: poisoned shard sent a real reply", rep.id)
+                });
+                assert!(err.contains("panicked"), "iteration {it}, id {}: {err}", rep.id);
+                continue;
+            }
+            let m: usize = model[1..].parse().unwrap();
+            valid_per_model[m] += 1;
+            assert!(rep.error.is_none(), "iteration {it}, id {}: {:?}", rep.id, rep.error);
+            let want = oracles[m].infer(&Tensor::new(&[1, IN_DIM], pixels)).unwrap();
+            assert_eq!(
+                rep.logits.as_slice(),
+                want.data(),
+                "iteration {it}, id {} (model {model}): logits diverge from its own oracle",
+                rep.id
+            );
+            assert_eq!(rep.pred, want.argmax_rows()[0], "iteration {it}, id {}", rep.id);
+        }
+
+        // per-shard stats attribute exactly the valid traffic each model
+        // shard actually served (the `requests` counter is valid-only)
+        for m in 0..MODELS {
+            let shard = registry.shard(&model_name(m)).unwrap();
+            assert_eq!(
+                shard.batcher.stats.requests.load(Ordering::SeqCst),
+                valid_per_model[m],
+                "iteration {it}: shard m{m} request attribution"
+            );
+        }
+
+        // release the hung engine; its parked request gets its reply too
+        if let Some(rx) = hung_rx {
+            release.store(true, Ordering::SeqCst);
+            let rep = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("hung-shard request stranded after release");
+            assert!(rep.error.is_none(), "hung-shard reply: {:?}", rep.error);
+            assert_eq!(rep.logits, vec![0.0; CLASSES]);
+            assert!(rx.try_recv().is_err(), "hung-shard duplicate reply");
+        }
+        registry.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shard isolation: a hung engine in A never stalls B
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hung_shard_never_stalls_sibling_shards() {
+    let release = Arc::new(AtomicBool::new(false));
+    let entries = vec![
+        ModelEntry::from_engine(
+            "hung",
+            IN_DIM,
+            vec![IN_DIM],
+            Arc::new(HangingEngine { release: release.clone() }),
+        ),
+        ModelEntry::from_packed("live", &arch("live"), net(0, KernelKind::Auto)),
+    ];
+    let cfg = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 1,
+        workers: 1,
+        submit_timeout: Duration::from_millis(150),
+        drain_timeout: Duration::from_millis(500),
+    };
+    let registry = Arc::new(Registry::spawn(entries, cfg).unwrap());
+    let live_oracle = oracle(0);
+
+    // clog the hung shard's entire pipeline: engine + pool channel +
+    // coalescer dispatch + submit queue, with one more submit bouncing on
+    // the bounded wait
+    const CLOG: u64 = 5;
+    let (tx, rx) = mpsc::channel();
+    for id in 0..CLOG {
+        registry
+            .route(Some("hung"))
+            .unwrap()
+            .batcher
+            .submit(InferRequest {
+                id,
+                pixels: vec![0.5; IN_DIM],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+
+    // the sibling shard must keep serving at full speed: its own queue,
+    // its own pool — nothing shared with the wedged shard
+    let t0 = Instant::now();
+    let mut r = Pcg32::seeded(7);
+    for id in 100..108u64 {
+        let pixels: Vec<f32> = (0..IN_DIM).map(|_| r.normal()).collect();
+        let rep = registry.infer_blocking(Some("live"), id, pixels.clone()).unwrap();
+        assert!(rep.error.is_none(), "live shard failed beside a hung one: {:?}", rep.error);
+        let want = live_oracle.infer(&Tensor::new(&[1, IN_DIM], pixels)).unwrap();
+        assert_eq!(rep.logits.as_slice(), want.data(), "id {id}");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "sibling shard stalled behind the hung shard: {:?}",
+        t0.elapsed()
+    );
+
+    // the backpressure stayed where it belongs
+    let hung_stats = &registry.shard("hung").unwrap().batcher.stats;
+    let live_stats = &registry.shard("live").unwrap().batcher.stats;
+    assert!(
+        hung_stats.submit_timeouts.load(Ordering::SeqCst) >= 1,
+        "clogged shard never hit its bounded submit wait"
+    );
+    assert_eq!(
+        live_stats.submit_timeouts.load(Ordering::SeqCst),
+        0,
+        "sibling shard saw submit timeouts"
+    );
+
+    // release the hung engine: every clogged request still gets exactly
+    // one reply (real zeros or the bounded-wait timeout)
+    release.store(true, Ordering::SeqCst);
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..CLOG {
+        let rep = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("a clogged request was stranded without a reply");
+        assert!(by_id.insert(rep.id, rep.error.clone()).is_none(), "duplicate reply");
+    }
+    assert_eq!(by_id.len() as u64, CLOG);
+    for (id, err) in &by_id {
+        assert!(
+            err.is_none() || err.as_deref() == Some(ERR_SUBMIT_TIMEOUT),
+            "id {id}: unexpected error {err:?}"
+        );
+    }
+    assert!(
+        by_id.values().any(|e| e.as_deref() == Some(ERR_SUBMIT_TIMEOUT)),
+        "no clogged submit bounced: {by_id:?}"
+    );
+    registry.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// graceful drain across shards
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drain_delivers_shutting_down_to_every_queued_request_across_shards() {
+    let slow = |_: usize| -> Arc<dyn InferEngine> {
+        Arc::new(SlowEngine { delay: Duration::from_millis(10) })
+    };
+    let entries = vec![
+        ModelEntry::from_engine("s0", IN_DIM, vec![IN_DIM], slow(0)),
+        ModelEntry::from_engine("s1", IN_DIM, vec![IN_DIM], slow(1)),
+    ];
+    let cfg = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 64,
+        workers: 1,
+        drain_timeout: Duration::from_secs(2),
+        ..BatcherConfig::default()
+    };
+    let registry = Arc::new(Registry::spawn(entries, cfg).unwrap());
+
+    // 32 requests alternating shards, all queued faster than the 10 ms
+    // flushes can drain them — most are still waiting when shutdown hits
+    const N: u64 = 32;
+    let (tx, rx) = mpsc::channel();
+    for id in 0..N {
+        let shard = if id % 2 == 0 { "s0" } else { "s1" };
+        registry
+            .route(Some(shard))
+            .unwrap()
+            .batcher
+            .submit(InferRequest {
+                id,
+                pixels: vec![0.5; IN_DIM],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+    registry.shutdown();
+
+    // post-shutdown submits bounce immediately on every shard
+    for shard in ["s0", "s1"] {
+        let t0 = Instant::now();
+        let rep = registry.infer_blocking(Some(shard), 999, vec![0.5; IN_DIM]).unwrap();
+        assert_eq!(rep.error.as_deref(), Some(ERR_SHUTTING_DOWN), "shard {shard}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "shard {shard}: post-shutdown submit did not bounce immediately"
+        );
+    }
+
+    // nothing stranded, nothing duplicated: every queued request gets one
+    // reply — a real one if its flush was already in motion, otherwise
+    // the drain's shutting_down
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..N {
+        let rep = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("a queued request was stranded by the drain");
+        assert!(by_id.insert(rep.id, rep.error.clone()).is_none(), "duplicate reply");
+    }
+    assert_eq!(by_id.len() as u64, N);
+    for (id, err) in &by_id {
+        assert!(
+            err.is_none() || err.as_deref() == Some(ERR_SHUTTING_DOWN),
+            "id {id}: unexpected drain-path error {err:?}"
+        );
+    }
+    for shard in ["s0", "s1"] {
+        assert!(
+            registry
+                .shard(shard)
+                .unwrap()
+                .batcher
+                .stats
+                .rejected_shutdown
+                .load(Ordering::SeqCst)
+                >= 1,
+            "shard {shard}: drain rejected nothing despite a 160 ms backlog"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP router: per-shard stats sections are monotone and sum to the rollup
+// ---------------------------------------------------------------------------
+
+fn req_line(id: u64, model: Option<&str>, pixels: &[f32]) -> String {
+    let px: Vec<String> = pixels.iter().map(|v| format!("{v}")).collect();
+    match model {
+        Some(m) => format!("{{\"id\": {id}, \"model\": \"{m}\", \"pixels\": [{}]}}\n", px.join(",")),
+        None => format!("{{\"id\": {id}, \"pixels\": [{}]}}\n", px.join(",")),
+    }
+}
+
+/// Write one line, read one line, parse it.
+fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    conn.write_all(line.as_bytes()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    json::parse(&resp).unwrap_or_else(|e| panic!("{e}: {resp}"))
+}
+
+#[test]
+fn tcp_router_per_shard_stats_sum_to_rollup() {
+    let entries = vec![
+        ModelEntry::from_packed("alpha", &arch("alpha"), net(0, KernelKind::Auto)),
+        ModelEntry::from_packed("beta", &arch("beta"), net(1, KernelKind::Auto)),
+    ];
+    let server = serve_models(
+        entries,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: BatcherConfig { workers: 1, ..BatcherConfig::default() },
+        },
+    )
+    .unwrap();
+    let oracles = [oracle(0), oracle(1)];
+    let mut conn = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut rng = Pcg32::seeded(0x5747);
+
+    // round 1: 6 alpha + 4 beta + 3 model-less (route to alpha, the first
+    // registered entry) + 2 unknown, all on one connection so the counts
+    // are deterministic by the time the stats queries run
+    let mut send = |id: u64,
+                    model: Option<&str>,
+                    oracle_idx: Option<usize>,
+                    conn: &mut TcpStream,
+                    reader: &mut BufReader<TcpStream>,
+                    rng: &mut Pcg32| {
+        let pixels: Vec<f32> = (0..IN_DIM).map(|_| rng.normal()).collect();
+        let j = roundtrip(conn, reader, &req_line(id, model, &pixels));
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(id as f64));
+        match oracle_idx {
+            Some(m) => {
+                let want = oracles[m].infer(&Tensor::new(&[1, IN_DIM], pixels)).unwrap();
+                let got: Vec<f32> = j
+                    .get("logits")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_f64().unwrap() as f32)
+                    .collect();
+                assert_eq!(got.as_slice(), want.data(), "id {id} routed to the wrong model");
+            }
+            None => {
+                assert_eq!(
+                    j.get("error").and_then(Json::as_str),
+                    Some(ERR_UNKNOWN_MODEL),
+                    "id {id}"
+                );
+            }
+        }
+    };
+    let mut id = 0u64;
+    for _ in 0..6 {
+        send(id, Some("alpha"), Some(0), &mut conn, &mut reader, &mut rng);
+        id += 1;
+    }
+    for _ in 0..4 {
+        send(id, Some("beta"), Some(1), &mut conn, &mut reader, &mut rng);
+        id += 1;
+    }
+    for _ in 0..3 {
+        send(id, None, Some(0), &mut conn, &mut reader, &mut rng);
+        id += 1;
+    }
+    for _ in 0..2 {
+        send(id, Some("gamma"), None, &mut conn, &mut reader, &mut rng);
+        id += 1;
+    }
+
+    let num = |j: &Json, k: &str| j.get(k).and_then(Json::as_f64).unwrap();
+    // per-shard sections
+    let alpha = roundtrip(&mut conn, &mut reader, "{\"stats\": true, \"model\": \"alpha\"}\n");
+    assert_eq!(alpha.get("model").and_then(Json::as_str), Some("alpha"));
+    assert_eq!(num(&alpha, "requests"), 9.0, "6 named + 3 default-routed");
+    assert_eq!(num(&alpha, "workers"), 1.0);
+    let beta = roundtrip(&mut conn, &mut reader, "{\"stats\": true, \"model\": \"beta\"}\n");
+    assert_eq!(num(&beta, "requests"), 4.0);
+    assert_eq!(num(&beta, "workers"), 1.0);
+    // rollup = sum of the sections
+    let roll = roundtrip(&mut conn, &mut reader, "{\"stats\": true}\n");
+    assert_eq!(num(&roll, "requests"), 13.0);
+    assert_eq!(num(&roll, "workers"), 2.0);
+    assert_eq!(num(&roll, "unknown_model"), 2.0);
+    assert_eq!(
+        roll.get("worker_flushes").and_then(Json::as_arr).unwrap().len(),
+        2,
+        "one worker slot per shard"
+    );
+    let models: Vec<&str> = roll
+        .get("models")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(models, vec!["alpha", "beta"]);
+    let shards = roll.get("shards").and_then(Json::as_obj).unwrap();
+    assert_eq!(num(&shards["alpha"], "requests"), 9.0);
+    assert_eq!(num(&shards["beta"], "requests"), 4.0);
+    assert_eq!(
+        num(&roll, "batches"),
+        num(&shards["alpha"], "batches") + num(&shards["beta"], "batches")
+    );
+
+    // round 2: more traffic, counters only move forward and still sum
+    for _ in 0..2 {
+        send(id, Some("beta"), Some(1), &mut conn, &mut reader, &mut rng);
+        id += 1;
+    }
+    let beta2 = roundtrip(&mut conn, &mut reader, "{\"stats\": true, \"model\": \"beta\"}\n");
+    assert_eq!(num(&beta2, "requests"), 6.0, "per-shard counter must be monotone");
+    assert!(num(&beta2, "batches") >= num(&beta, "batches"));
+    let roll2 = roundtrip(&mut conn, &mut reader, "{\"stats\": true}\n");
+    assert_eq!(num(&roll2, "requests"), 15.0);
+    assert_eq!(num(&roll2, "unknown_model"), 2.0, "stats queries never count as misroutes");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// satellite: unknown-model negative path (structured reply, open socket)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_model_request_gets_structured_error_not_a_closed_connection() {
+    let server = serve(
+        &arch("solo"),
+        net(0, KernelKind::Auto),
+        ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut conn = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut rng = Pcg32::seeded(3);
+    let pixels: Vec<f32> = (0..IN_DIM).map(|_| rng.normal()).collect();
+
+    let j = roundtrip(&mut conn, &mut reader, &req_line(7, Some("nope"), &pixels));
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(7.0));
+    assert_eq!(j.get("error").and_then(Json::as_str), Some(ERR_UNKNOWN_MODEL));
+    assert_eq!(j.get("model").and_then(Json::as_str), Some("nope"));
+    // the detail names the models that do exist
+    assert!(
+        j.get("detail").and_then(Json::as_str).unwrap().contains("solo"),
+        "detail must list known models"
+    );
+
+    // the connection survived: the very next line is served normally
+    let j = roundtrip(&mut conn, &mut reader, &req_line(8, None, &pixels));
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(8.0));
+    assert!(j.get("pred").is_some(), "connection was poisoned by the unknown model");
+
+    // the rollup counts the misroute; the registry API reports the same
+    // structured error without a socket
+    let roll = roundtrip(&mut conn, &mut reader, "{\"stats\": true}\n");
+    assert!(roll.get("unknown_model").and_then(Json::as_f64).unwrap() >= 1.0);
+    let rep = server.registry.infer_blocking(Some("nope"), 9, pixels).unwrap();
+    assert_eq!(rep.error.as_deref(), Some(ERR_UNKNOWN_MODEL));
+    assert_eq!(rep.pred, usize::MAX);
+    assert!(rep.logits.is_empty());
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// satellite: single-model regression — no "model" field, PR 3 bit-for-bit
+// ---------------------------------------------------------------------------
+
+/// Deterministic dyadic-value generator — the same fixture family as
+/// `rust/tests/golden_fixtures.rs` (odd multiples of 1/8, never zero), so
+/// the serve-path goldens here are the identical checked-in values: any
+/// routing-layer regression that perturbs payloads or ordering breaks
+/// exact equality.
+fn pat(i: u32, salt: u32) -> f32 {
+    let mut h = i.wrapping_add(1).wrapping_mul(0x9E37_79B1) ^ salt.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    ((h & 15) as f32 - 7.5) / 4.0
+}
+
+fn pat_tensor(shape: &[usize], salt: u32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n as u32).map(|i| pat(i, salt)).collect())
+}
+
+/// MLP goldens from `golden_fixtures.rs` (8-16-12-4 trunk, 2 input rows).
+const MLP_LOGITS: [f32; 8] = [0.875, -2.375, 1.125, -1.875, -1.125, -0.375, -0.875, -3.875];
+
+#[test]
+fn single_model_config_with_no_model_field_routes_exactly_as_before() {
+    let golden_arch = ModelArch {
+        name: "golden-mlp".into(),
+        arch: "mlp".into(),
+        mode: "bdnn".into(),
+        in_shape: vec![8],
+        classes: 4,
+        hidden: vec![16, 12],
+        maps: vec![],
+        fc: vec![],
+        bn: "none".into(),
+        batch: 2,
+        eval_batch: 2,
+        k_steps: 1,
+        bn_eps: 1e-4,
+    };
+    let mut p = Params::new();
+    p.insert("L00_W".into(), pat_tensor(&[8, 16], 0xB0));
+    p.insert("L00_b".into(), pat_tensor(&[16], 0xC0));
+    p.insert("L01_W".into(), pat_tensor(&[16, 12], 0xB1));
+    p.insert("L01_b".into(), pat_tensor(&[12], 0xC1));
+    p.insert("L02_W".into(), pat_tensor(&[12, 4], 0xB2));
+    p.insert("L02_b".into(), pat_tensor(&[4], 0xC2));
+    let x = pat_tensor(&[2, 8], 0xA0);
+    let golden_net = Arc::new(PackedNet::prepare(&golden_arch, &p).unwrap());
+
+    // workers=1 + max_batch=1: flush order is seal order is submission
+    // order — the PR 3 contract pinned by golden_fixtures.rs, now driven
+    // through the registry's default-shard route
+    let server = serve(
+        &golden_arch,
+        golden_net,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                ..BatcherConfig::default()
+            },
+        },
+    )
+    .unwrap();
+    assert_eq!(server.registry.len(), 1, "single-model serve must be a one-entry registry");
+
+    let mut conn = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let row = |r: usize| x.data()[r * 8..(r + 1) * 8].to_vec();
+    let golden = |r: usize| &MLP_LOGITS[r * 4..(r + 1) * 4];
+    const REQS: usize = 8;
+    // pipeline all requests on one connection, then read the replies: a
+    // connection's requests are served in order, so reply i must carry
+    // request i's golden row exactly
+    for i in 0..REQS {
+        conn.write_all(req_line(i as u64, None, &row(i % 2)).as_bytes()).unwrap();
+    }
+    for i in 0..REQS {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(i as f64), "reply order: {line}");
+        let got: Vec<f32> = j
+            .get("logits")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(got.as_slice(), golden(i % 2), "request {i}: golden logits diverged");
+    }
+    // the single worker did every flush, in order
+    assert_eq!(server.batcher.stats.worker_flushes(), vec![REQS as u64]);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// per-model determinism under every forced kernel rung
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_model_logits_bit_exact_under_every_forced_kernel_rung() {
+    let oracles: Vec<PackedNet> = (0..MODELS).map(oracle).collect();
+    for kernel in KernelKind::ALL {
+        let entries: Vec<ModelEntry> = (0..MODELS).map(|m| entry(m, kernel)).collect();
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+            workers: 1,
+            ..BatcherConfig::default()
+        };
+        let registry = Arc::new(Registry::spawn(entries, cfg).unwrap());
+        let barrier = Arc::new(Barrier::new(MODELS));
+        let mut handles = Vec::new();
+        for m in 0..MODELS {
+            let (r2, bar) = (registry.clone(), barrier.clone());
+            handles.push(std::thread::spawn(move || {
+                bar.wait();
+                let model = model_name(m);
+                let mut results = Vec::new();
+                for q in 0..8u64 {
+                    let mut rng = Pcg32::seeded((kernel as u64) << 16 | (m as u64) << 8 | q);
+                    let pixels: Vec<f32> = (0..IN_DIM).map(|_| rng.normal()).collect();
+                    let rep =
+                        r2.infer_blocking(Some(&model), q, pixels.clone()).unwrap();
+                    results.push((pixels, rep));
+                }
+                (m, results)
+            }));
+        }
+        for h in handles {
+            let (m, results) = h.join().unwrap();
+            for (q, (pixels, rep)) in results.into_iter().enumerate() {
+                assert!(rep.error.is_none(), "kernel {kernel}, model {m}, req {q}: {:?}", rep.error);
+                let want = oracles[m].infer(&Tensor::new(&[1, IN_DIM], pixels)).unwrap();
+                assert_eq!(
+                    rep.logits.as_slice(),
+                    want.data(),
+                    "kernel {kernel}, model {m}, req {q}: cross-model bleed or rung divergence"
+                );
+            }
+        }
+        registry.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve_registry: exotic registries over the real socket
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_front_end_survives_a_poisoned_shard() {
+    let entries = vec![
+        ModelEntry::from_packed("good", &arch("good"), net(0, KernelKind::Auto)),
+        ModelEntry::from_engine("bad", IN_DIM, vec![IN_DIM], Arc::new(PanickingEngine)),
+    ];
+    let cfg = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        ..BatcherConfig::default()
+    };
+    let registry = Arc::new(Registry::spawn(entries, cfg).unwrap());
+    let server = serve_registry(registry, "127.0.0.1:0").unwrap();
+    let mut conn = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut rng = Pcg32::seeded(11);
+    let pixels: Vec<f32> = (0..IN_DIM).map(|_| rng.normal()).collect();
+    // a panicking flush becomes an error line, and the same connection
+    // then serves the healthy shard
+    let j = roundtrip(&mut conn, &mut reader, &req_line(1, Some("bad"), &pixels));
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap().contains("panicked"),
+        "poisoned shard reply"
+    );
+    let j = roundtrip(&mut conn, &mut reader, &req_line(2, Some("good"), &pixels));
+    assert!(j.get("pred").is_some(), "healthy shard must survive its poisoned sibling");
+    server.shutdown();
+}
