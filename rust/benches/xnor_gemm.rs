@@ -4,7 +4,8 @@
 //! Supports the paper's complexity argument on a real ISA: one u64 word op
 //! carries 64 binary MACs; the tiled/threaded rungs recover the ILP and
 //! core-level parallelism the scalar triple loop leaves idle; the simd
-//! rung widens each popcount step to 256 (AVX2) or 128 (NEON) MACs. The
+//! rung widens each popcount step to 512 (AVX-512), 256 (AVX2) or 128
+//! (NEON) MACs. The
 //! speedups are *measured* here, not asserted; the equivalence suite
 //! (`rust/tests/gemm_equivalence.rs`) proves all four rungs bit-identical.
 //! This bench's per-shape `speedup_table` output is the source of the
@@ -13,7 +14,7 @@
 //! (The *energy* claim is analytical — `cargo bench --bench energy_model`.)
 
 use bdnn::benchkit::{gemm_banner, Bench};
-use bdnn::bitnet::{gemm, BitMatrix};
+use bdnn::bitnet::{gemm, BitMatrix, SimdBackend};
 use bdnn::config::{GemmConfig, KernelKind};
 use bdnn::tensor::{matmul, Tensor};
 use bdnn::util::Pcg32;
@@ -80,6 +81,26 @@ fn main() {
                 black_box(matmul(black_box(&ta), black_box(&tb)));
             });
         }
+        // backend head-to-head on the headline shape: same threaded SIMD
+        // GEMM forced onto each vector backend the CPU supports, so the
+        // avx2-vs-avx512 step (256 -> 512 MACs/popcount) is measured
+        // directly rather than inferred from whichever rung auto picked
+        if label.starts_with("ladder") {
+            for be in [SimdBackend::Avx2, SimdBackend::Avx512] {
+                if !be.is_available() {
+                    println!("  (backend {} unavailable on this CPU — skipped)", be.name());
+                    continue;
+                }
+                bench.run(&format!("xnor simd({}) {label}", be.name()), Some(macs), || {
+                    black_box(gemm::xnor_gemm_with_backend(
+                        black_box(&ap),
+                        black_box(&bt),
+                        &simd,
+                        be,
+                    ));
+                });
+            }
+        }
         println!("\n  ladder speedups at {label}:");
         print!("{}", bench.speedup_table(&scalar_name, label));
         println!();
@@ -89,7 +110,8 @@ fn main() {
          loop; packing, masking and the i32 epilogue dilute it. The tiled\n\
          rung adds 4x2 register blocking (ILP + word reuse); the threaded\n\
          rung shards output row-blocks across cores; the simd rung widens\n\
-         each popcount step to a whole vector (AVX2 vpshufb / NEON vcnt).\n\
+         each popcount step to a whole vector (AVX-512 vpopcntq / AVX2\n\
+         vpshufb / NEON vcnt).\n\
          See docs/KERNELS.md, the module docs in rust/src/bitnet/gemm.rs,\n\
          and the Performance section of README.md."
     );

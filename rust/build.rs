@@ -1,0 +1,38 @@
+//! Toolchain probe for the AVX-512 popcount rung.
+//!
+//! The `vpopcntdq` microkernel in `src/bitnet/popcount.rs` uses
+//! `core::arch` AVX-512 intrinsics that were stabilized in Rust 1.89,
+//! while this crate's MSRV is 1.75 (`rust-version` in Cargo.toml). Emit
+//! the `bdnn_avx512` cfg when the compiling rustc is new enough; on older
+//! toolchains the intrinsic path is compiled out entirely and the runtime
+//! probe simply never selects the `Avx512` backend (the enum variant and
+//! its name exist unconditionally, so configs/stats/doc surfaces are
+//! identical either way).
+
+use std::process::Command;
+
+/// `(major, minor)` of the rustc driving this build, from `$RUSTC --version`
+/// output shaped like `rustc 1.89.0 (29483883e 2025-08-04)`.
+fn rustc_version() -> Option<(u32, u32)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-', '+']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Declare the custom cfg so `cargo check`'s unexpected-cfg lint stays
+    // quiet on toolchains that know check-cfg; older cargos treat the
+    // single-colon directive as inert build-script metadata.
+    println!("cargo:rustc-check-cfg=cfg(bdnn_avx512)");
+    if let Some(v) = rustc_version() {
+        if v >= (1, 89) {
+            println!("cargo:rustc-cfg=bdnn_avx512");
+        }
+    }
+}

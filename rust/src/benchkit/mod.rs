@@ -37,24 +37,28 @@ pub fn serve_banner(cfg: &GemmConfig, workers: usize) -> String {
 }
 
 /// Banner for a multi-model registry: the gemm banner plus one line per
-/// shard with its resolved worker-pool size, so serve logs record how the
-/// core budget was divided across shards
+/// shard with its resolved worker-pool size and the GEMM thread count the
+/// planner will actually spawn for that shard's max-batch flush (which can
+/// sit below the configured ceiling under the small-problem cutoff), so
+/// serve logs record how the core budget was divided across shards
 /// (`serve::divide_workers`).
 ///
 /// ```
 /// use bdnn::{benchkit, config::GemmConfig};
 /// let b = benchkit::registry_banner(
 ///     &GemmConfig::auto(),
-///     &[("mnist".to_string(), 2), ("cifar".to_string(), 1)],
+///     &[("mnist".to_string(), 2, 1), ("cifar".to_string(), 1, 4)],
 /// );
 /// assert!(b.starts_with("engine: kernel="));
-/// assert!(b.contains("shard 'mnist': pool_workers=2"));
-/// assert!(b.contains("shard 'cifar': pool_workers=1"));
+/// assert!(b.contains("shard 'mnist': pool_workers=2 gemm_threads=1"));
+/// assert!(b.contains("shard 'cifar': pool_workers=1 gemm_threads=4"));
 /// ```
-pub fn registry_banner(cfg: &GemmConfig, shards: &[(String, usize)]) -> String {
+pub fn registry_banner(cfg: &GemmConfig, shards: &[(String, usize, usize)]) -> String {
     let mut out = gemm_banner(cfg);
-    for (name, workers) in shards {
-        out.push_str(&format!("\n  shard '{name}': pool_workers={workers}"));
+    for (name, workers, planned) in shards {
+        out.push_str(&format!(
+            "\n  shard '{name}': pool_workers={workers} gemm_threads={planned}"
+        ));
     }
     out
 }

@@ -4,15 +4,15 @@
 //! The ladder (`docs/KERNELS.md` has the full decision tree):
 //!
 //! ```text
-//! scalar ──▶ tiled ──▶ threaded ──▶ simd(avx2 | neon | portable)
+//! scalar ──▶ tiled ──▶ threaded ──▶ simd(avx512 | avx2 | neon | portable)
 //! ```
 //!
 //! [`KernelKind::Auto`] probes CPU features once per process
-//! ([`popcount::detect`]: `is_x86_feature_detected!("avx2")` on x86_64,
+//! ([`popcount::detect`]: `avx512vpopcntdq` then `avx2` on x86_64,
 //! architectural NEON on aarch64, portable-unrolled everywhere else) and
-//! picks the highest rung that pays: the SIMD rung with an AVX2/NEON
-//! backend, or the threaded rung when only the portable fallback is
-//! available. Named kinds force a rung exactly — that is how
+//! picks the highest rung that pays: the SIMD rung with an
+//! AVX-512/AVX2/NEON backend, or the threaded rung when only the portable
+//! fallback is available. Named kinds force a rung exactly — that is how
 //! the equivalence suite pins each rung against the scalar oracle and how
 //! `--gemm-kernel`/`[gemm] kernel` let an operator ablate the ladder on
 //! their own hardware.
@@ -42,23 +42,34 @@ impl KernelDispatch {
     /// Resolve a config's [`KernelKind`] into a concrete rung.
     ///
     /// `Auto` takes the SIMD rung when the probe finds a real vector unit
-    /// (AVX2/NEON) and otherwise stays on the threaded rung: the portable
-    /// microkernel trades away the tiled kernel's 4×2 register-tile word
-    /// reuse, so it is only a win when it stands in for actual SIMD.
-    /// Forcing `kernel = "simd"` still runs it (that is how the
-    /// equivalence suite covers the portable backend everywhere). The
-    /// probe's fallback ordering (AVX2 > NEON > portable) and this
-    /// auto rule are pinned by `rust/tests/kernel_dispatch.rs`.
+    /// (AVX-512/AVX2/NEON) and otherwise stays on the threaded rung: the
+    /// portable microkernel trades away the tiled kernel's 4×2
+    /// register-tile word reuse, so it is only a win when it stands in
+    /// for actual SIMD. Forcing `kernel = "simd"` still runs it (that is
+    /// how the equivalence suite covers the portable backend everywhere).
+    /// The probe's fallback ordering (AVX-512 > AVX2 > NEON > portable)
+    /// and this auto rule are pinned by `rust/tests/kernel_dispatch.rs`.
     pub fn resolve(cfg: &GemmConfig) -> Self {
+        Self::resolve_with(cfg, popcount::detect())
+    }
+
+    /// [`Self::resolve`] with the CPU probe's answer injected. This is the
+    /// test seam for backend ordering: on a machine where [`popcount::detect`]
+    /// returns `Portable`, plain `resolve` can never be observed choosing
+    /// between AVX-512 and AVX2, so the suites pass a fake probe result
+    /// here instead (`resolve_with(auto, Avx512)` must pick
+    /// `Simd(Avx512)`, etc.). Production callers use [`Self::resolve`];
+    /// the two are the same rule by construction.
+    pub fn resolve_with(cfg: &GemmConfig, probed: SimdBackend) -> Self {
         match cfg.kernel {
-            KernelKind::Auto => match popcount::detect() {
+            KernelKind::Auto => match probed {
                 SimdBackend::Portable => KernelDispatch::Threaded,
                 be => KernelDispatch::Simd(be),
             },
             KernelKind::Scalar => KernelDispatch::Scalar,
             KernelKind::Tiled => KernelDispatch::Tiled,
             KernelKind::Threaded => KernelDispatch::Threaded,
-            KernelKind::Simd => KernelDispatch::Simd(popcount::detect()),
+            KernelKind::Simd => KernelDispatch::Simd(probed),
         }
     }
 
@@ -78,16 +89,32 @@ impl KernelDispatch {
         matches!(self, KernelDispatch::Threaded | KernelDispatch::Simd(_))
     }
 
-    /// Worker threads this rung will actually use under `cfg`: the
-    /// resolved thread count for the sharded rungs, and always 1 for
-    /// scalar/tiled (which ignore the `threads` knob) — so banners and
-    /// the stats endpoint never advertise parallelism a forced
-    /// single-threaded rung won't deliver. (The threaded rungs may still
-    /// use fewer workers at run time: the count is clamped to the row
-    /// count and a small-problem cutoff.)
+    /// The *configured* worker-thread ceiling under `cfg`: the resolved
+    /// thread count for the sharded rungs, and always 1 for scalar/tiled
+    /// (which ignore the `threads` knob). This is a ceiling, not a
+    /// promise — the GEMM planner clamps to the row count and a
+    /// small-problem cutoff at run time, so for a concrete problem shape
+    /// use [`Self::planned_threads`] instead; banners and the serve stats
+    /// endpoint report both as `threads_configured` / `threads_planned`.
     pub fn effective_threads(&self, cfg: &GemmConfig) -> usize {
         if self.is_threaded() {
             cfg.resolved_threads()
+        } else {
+            1
+        }
+    }
+
+    /// Worker threads the GEMM planner will *actually spawn* for an
+    /// `m × n` problem whose packed rows are `wpr` words wide — i.e.
+    /// [`Self::effective_threads`] after the row-count clamp and the
+    /// small-problem cutoff (see `gemm::planned_threads`). Always ≥ 1;
+    /// equals `effective_threads` for problems big enough to shard. The
+    /// serve path evaluates this at the shard's configured `max_batch` so
+    /// the stats endpoint shows the parallelism the serve shape really
+    /// gets rather than the configured ceiling.
+    pub fn planned_threads(&self, cfg: &GemmConfig, m: usize, n: usize, wpr: usize) -> usize {
+        if self.is_threaded() {
+            super::gemm::planned_threads(cfg, m, n, wpr)
         } else {
             1
         }
@@ -141,6 +168,54 @@ mod tests {
         let forced = KernelDispatch::resolve(&base.with_kernel(KernelKind::Simd));
         assert_eq!(forced, KernelDispatch::Simd(popcount::detect()));
         assert!(forced.describe().starts_with("simd("));
+    }
+
+    #[test]
+    fn injected_probe_pins_backend_ordering_without_hardware() {
+        // The seam the hardware-independent ordering tests hang off: auto
+        // must take whatever the probe ranks best, AVX-512 above AVX2.
+        let auto = GemmConfig::default();
+        for be in [SimdBackend::Avx512, SimdBackend::Avx2, SimdBackend::Neon] {
+            assert_eq!(KernelDispatch::resolve_with(&auto, be), KernelDispatch::Simd(be));
+        }
+        // a portable-only machine stays on the threaded rung under auto…
+        assert_eq!(
+            KernelDispatch::resolve_with(&auto, SimdBackend::Portable),
+            KernelDispatch::Threaded
+        );
+        // …but forcing "simd" still runs the portable backend
+        let forced = auto.with_kernel(KernelKind::Simd);
+        assert_eq!(
+            KernelDispatch::resolve_with(&forced, SimdBackend::Portable),
+            KernelDispatch::Simd(SimdBackend::Portable)
+        );
+        assert_eq!(
+            KernelDispatch::resolve_with(&forced, SimdBackend::Avx512).describe(),
+            "simd(avx512)"
+        );
+        // resolve() is resolve_with() over the real probe
+        assert_eq!(
+            KernelDispatch::resolve(&auto),
+            KernelDispatch::resolve_with(&auto, popcount::detect())
+        );
+    }
+
+    #[test]
+    fn planned_threads_applies_the_small_problem_cutoff() {
+        // auto thread count: a tiny problem collapses to 1 worker even
+        // though the configured ceiling is the machine's core count —
+        // exactly the gap the stats endpoint used to hide
+        let auto = GemmConfig::default(); // threads = 0
+        let d = KernelDispatch::resolve(&auto.with_kernel(KernelKind::Threaded));
+        assert_eq!(d.planned_threads(&auto, 4, 16, 1), 1);
+        // big problem: planned == the configured ceiling
+        assert_eq!(d.planned_threads(&auto, 4096, 4096, 64), d.effective_threads(&auto));
+        // explicit thread counts skip the cutoff but clamp to the rows
+        let eight = GemmConfig::with_threads(8);
+        assert_eq!(d.planned_threads(&eight, 2, 4096, 4096), 2, "row clamp");
+        assert_eq!(d.planned_threads(&eight, 4096, 4096, 64), 8);
+        // single-threaded rungs plan exactly 1 regardless of shape
+        assert_eq!(KernelDispatch::Scalar.planned_threads(&eight, 4096, 4096, 64), 1);
     }
 
     #[test]

@@ -32,12 +32,13 @@
 //!    where spawn overhead would dominate.
 //! 4. **simd** — the threaded schedule with the inner popcount loop
 //!    vectorized by a [`SimdBackend`] microkernel
-//!    ([`crate::bitnet::popcount`]): AVX2 Muła `vpshufb` (256 binary MACs
-//!    per step), NEON `vcnt` (128), or the portable 4-way-unrolled
-//!    `count_ones` fallback. Which backend runs is decided once per
-//!    process by [`KernelDispatch`] (`is_x86_feature_detected!` probe),
-//!    overridable via `[gemm] kernel = "..."` in TOML and `--gemm-kernel`
-//!    on the CLI.
+//!    ([`crate::bitnet::popcount`]): AVX-512 `vpopcntq` (512 binary MACs
+//!    per step), AVX2 Muła `vpshufb` (256), NEON `vcnt` (128), or the
+//!    portable 4-way-unrolled `count_ones` fallback. Which backend runs
+//!    is decided once per process by [`KernelDispatch`]
+//!    (`is_x86_feature_detected!` probe, ordering AVX-512 > AVX2 > NEON >
+//!    portable), overridable via `[gemm] kernel = "..."` in TOML and
+//!    `--gemm-kernel` on the CLI.
 //!
 //! The masked variant ([`xnor_gemm_masked_with`]) gets the same treatment;
 //! it additionally honours per-row validity masks so zero-padded conv
@@ -162,6 +163,17 @@ fn plan_threads(cfg: &GemmConfig, m: usize, n: usize, wpr: usize) -> usize {
     }
 }
 
+/// Worker threads the sharded rungs will spawn for an `m × n` problem with
+/// `wpr` packed words per row — [`GemmConfig::resolved_threads`] after the
+/// row-count clamp and (under auto threading) the small-problem cutoff.
+/// Always ≥ 1. This is the planning rule `run_sharded` itself uses, made
+/// public so `KernelDispatch::planned_threads` — and through it the serve
+/// stats endpoint — can report the parallelism a concrete problem shape
+/// really gets rather than the configured ceiling.
+pub fn planned_threads(cfg: &GemmConfig, m: usize, n: usize, wpr: usize) -> usize {
+    plan_threads(cfg, m, n, wpr).max(1)
+}
+
 /// Shared threading scaffold for both GEMM variants: allocates the output,
 /// plans the thread count, and either runs `kernel` over all rows or shards
 /// whole-row output chunks across a scoped thread pool. `kernel(row0,
@@ -235,6 +247,52 @@ pub fn xnor_gemm_masked_with(
         |row0, chunk| gemm_rows_masked(a, valid, bt, row0, chunk, tile),
         |row0, chunk, be| gemm_rows_masked_simd(a, valid, bt, row0, chunk, tile, be),
     )
+}
+
+/// SIMD rung with an explicitly chosen microkernel backend — the
+/// per-backend seam for the equivalence suites and the avx2-vs-avx512
+/// bench section, which must pin *every* backend the machine has, not
+/// just the probe's best (on an AVX-512 box plain dispatch would shadow
+/// the AVX2 kernel entirely). Bit-identical to [`xnor_gemm_scalar`].
+///
+/// Panics if `be` is not runnable here ([`SimdBackend::is_available`]) —
+/// the hot-path microkernel calls skip the per-call feature probe, so an
+/// unavailable backend would be undefined behavior, not a wrong answer.
+pub fn xnor_gemm_with_backend(
+    a: &BitMatrix,
+    bt: &BitMatrix,
+    cfg: &GemmConfig,
+    be: SimdBackend,
+) -> Vec<i32> {
+    assert!(be.is_available(), "SIMD backend '{}' not available on this CPU", be.name());
+    assert_eq!(a.cols(), bt.cols(), "contraction mismatch: {} vs {}", a.cols(), bt.cols());
+    let (m, n) = (a.rows(), bt.rows());
+    assert!(a.cols() > 0 || m == 0 || n == 0, "xnor_gemm needs k >= 1");
+    let tile = cfg.tile;
+    run_sharded(m, n, a.words_per_row(), cfg, move |row0, chunk| {
+        gemm_rows_simd(a, bt, row0, chunk, tile, be)
+    })
+}
+
+/// Masked counterpart of [`xnor_gemm_with_backend`]; bit-identical to
+/// [`xnor_gemm_masked_scalar`]. Same availability panic.
+pub fn xnor_gemm_masked_with_backend(
+    a: &BitMatrix,
+    valid: &BitMatrix,
+    bt: &BitMatrix,
+    cfg: &GemmConfig,
+    be: SimdBackend,
+) -> Vec<i32> {
+    assert!(be.is_available(), "SIMD backend '{}' not available on this CPU", be.name());
+    assert_eq!(a.cols(), bt.cols());
+    assert_eq!(a.rows(), valid.rows());
+    assert_eq!(a.cols(), valid.cols());
+    let (m, n) = (a.rows(), bt.rows());
+    assert!(a.cols() > 0 || m == 0 || n == 0, "xnor_gemm needs k >= 1");
+    let tile = cfg.tile;
+    run_sharded(m, n, a.words_per_row(), cfg, move |row0, chunk| {
+        gemm_rows_masked_simd(a, valid, bt, row0, chunk, tile, be)
+    })
 }
 
 /// The one rung-selection point shared by the plain and masked entry
@@ -482,7 +540,7 @@ fn gemm_rows_masked(
 
 /// SIMD-rung row kernel: same (i, j) cache blocking as [`gemm_rows`], but
 /// the k loop is one whole-row [`SimdBackend::xnor_popcount`] call — the
-/// vector microkernel carries 128–256 binary MACs per step and its own
+/// vector microkernel carries 128–512 binary MACs per step and its own
 /// ILP, so the 4×2 register tile is unnecessary here; blocking still keeps
 /// the `bt` panel resident while `a`'s rows stream through.
 fn gemm_rows_simd(
@@ -645,6 +703,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_through_the_gemm() {
+        // xnor_gemm_with_backend bypasses the probe's "best wins" rule, so
+        // this covers avx2 (and portable) even on an AVX-512 machine.
+        let mut r = Pcg32::seeded(45);
+        for &(m, k, n) in &[(1, 1, 1), (9, 64, 7), (13, 128, 5), (11, 1000, 9)] {
+            let a = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
+            let bt = BitMatrix::from_pm1_transposed(k, n, &rand_mat(&mut r, k, n));
+            let valid = BitMatrix::from_pm1(m, k, &rand_mat(&mut r, m, k));
+            let scalar = xnor_gemm_scalar(&a, &bt);
+            let scalar_masked = xnor_gemm_masked_scalar(&a, &valid, &bt);
+            for be in SimdBackend::ALL.into_iter().filter(|be| be.is_available()) {
+                for c in [cfg(3, 1, KernelKind::Simd), cfg(64, 2, KernelKind::Simd)] {
+                    assert_eq!(
+                        xnor_gemm_with_backend(&a, &bt, &c, be),
+                        scalar,
+                        "({m},{k},{n}) {} {c:?}",
+                        be.name()
+                    );
+                    assert_eq!(
+                        xnor_gemm_masked_with_backend(&a, &valid, &bt, &c, be),
+                        scalar_masked,
+                        "({m},{k},{n}) {} {c:?} masked",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planned_threads_is_clamped_and_cut_off() {
+        // explicit counts clamp to rows; auto applies the size cutoff
+        let eight = GemmConfig::with_threads(8);
+        assert_eq!(planned_threads(&eight, 3, 64, 2), 3);
+        assert_eq!(planned_threads(&eight, 100, 64, 2), 8);
+        let auto = GemmConfig::default();
+        assert_eq!(planned_threads(&auto, 4, 16, 1), 1, "below cutoff");
+        assert_eq!(
+            planned_threads(&auto, 4096, 4096, 64),
+            auto.resolved_threads().min(4096)
+        );
+        // degenerate shapes still report >= 1 (nothing will be spawned)
+        assert_eq!(planned_threads(&eight, 0, 64, 2), 1);
     }
 
     #[test]

@@ -15,8 +15,8 @@
 //! Submodules:
 //!  * [`gemm`]     — packed XNOR GEMM ladder (+ masked variant for
 //!    zero-padded rows); see `docs/KERNELS.md` for the rung-by-rung tour
-//!  * [`popcount`] — SIMD XNOR-popcount microkernels (AVX2 / NEON /
-//!    portable) behind the ladder's top rung
+//!  * [`popcount`] — SIMD XNOR-popcount microkernels (AVX-512 / AVX2 /
+//!    NEON / portable) behind the ladder's top rung
 //!  * [`dispatch`] — runtime feature probe + kernel selection
 //!    ([`dispatch::KernelDispatch`])
 //!  * [`conv`]     — binary conv via packed im2col with border-validity masks
@@ -35,7 +35,7 @@ pub mod popcount;
 pub use dispatch::KernelDispatch;
 pub use gemm::{
     xnor_gemm, xnor_gemm_masked, xnor_gemm_masked_scalar, xnor_gemm_masked_with,
-    xnor_gemm_scalar, xnor_gemm_with,
+    xnor_gemm_masked_with_backend, xnor_gemm_scalar, xnor_gemm_with, xnor_gemm_with_backend,
 };
 pub use popcount::SimdBackend;
 

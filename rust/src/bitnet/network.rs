@@ -302,6 +302,53 @@ impl PackedNet {
         super::dispatch::KernelDispatch::resolve(&self.gemm).describe()
     }
 
+    /// Worker threads the GEMM planner will actually spawn for a batch of
+    /// `batch` inputs: the maximum of `KernelDispatch::planned_threads`
+    /// over every packed-GEMM layer's problem shape (conv layers count
+    /// their im2col patch rows, `batch · h · w`). This is what the serve
+    /// stats endpoint reports as `gemm_threads` — unlike the configured
+    /// ceiling ([`GemmConfig::resolved_threads`]), it reflects the
+    /// row-count clamp and the small-problem cutoff, so a tiny model
+    /// served at a small `max_batch` honestly reports 1.
+    pub fn planned_gemm_threads(&self, batch: usize) -> usize {
+        let d = super::dispatch::KernelDispatch::resolve(&self.gemm);
+        let (mut h, mut w) = if self.arch.is_cnn() {
+            (self.arch.in_shape[0], self.arch.in_shape[1])
+        } else {
+            (1, 1)
+        };
+        let mut planned = 1usize;
+        for layer in &self.layers {
+            match layer {
+                // float-input layers don't hit the packed GEMM; they only
+                // advance the spatial dims the later conv shapes depend on
+                PackedLayer::ConvFloatIn { pool, .. } => {
+                    if *pool {
+                        h /= 2;
+                        w /= 2;
+                    }
+                }
+                PackedLayer::ConvBinary { kh, kw, cin, cout, pool, .. } => {
+                    // stride-1 SAME conv: one patch row per output pixel
+                    let m = batch * h * w;
+                    let wpr = (kh * kw * cin).div_ceil(64);
+                    planned = planned.max(d.planned_threads(&self.gemm, m, *cout, wpr));
+                    if *pool {
+                        h /= 2;
+                        w /= 2;
+                    }
+                }
+                PackedLayer::DenseFloatIn { .. } => {}
+                PackedLayer::DenseBinary { in_dim, out_dim, .. }
+                | PackedLayer::DenseOut { in_dim, out_dim, .. } => {
+                    let wpr = in_dim.div_ceil(64);
+                    planned = planned.max(d.planned_threads(&self.gemm, batch, *out_dim, wpr));
+                }
+            }
+        }
+        planned
+    }
+
     /// Packed storage in bytes of all hidden binary weights (the >=16x
     /// memory-reduction claim; see `bdnn exp memory`).
     pub fn packed_weight_bytes(&self) -> usize {
@@ -601,6 +648,22 @@ mod tests {
             .unwrap()
             .with_gemm_config(GemmConfig::auto().with_kernel(crate::config::KernelKind::Scalar));
         assert_eq!(forced.kernel_description(), "scalar");
+    }
+
+    #[test]
+    fn planned_gemm_threads_reflects_serve_shape() {
+        let arch = mlp_arch();
+        let params = rand_params(&arch, 7);
+        // auto threads: every GEMM in the tiny MLP at batch 4 is below the
+        // small-problem cutoff, so exactly 1 worker is actually planned
+        // (the configured ceiling is the core count)
+        let net = PackedNet::prepare(&arch, &params).unwrap();
+        assert_eq!(net.planned_gemm_threads(4), 1);
+        // explicit thread counts clamp to the GEMM row count (the batch,
+        // for a dense net), and never exceed the configured ceiling
+        let net = net.with_gemm_config(GemmConfig::with_threads(64));
+        assert_eq!(net.planned_gemm_threads(2), 2);
+        assert!(net.planned_gemm_threads(128) <= net.gemm_config().resolved_threads());
     }
 
     #[test]

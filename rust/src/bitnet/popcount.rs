@@ -8,8 +8,15 @@
 //! ```
 //!
 //! so any backend is bit-identical to `u64::count_ones` by construction —
-//! the dispatch layer can pick freely on speed alone. Three backends:
+//! the dispatch layer can pick freely on speed alone. Four backends:
 //!
+//! * **AVX-512** (`x86_64`, runtime-probed for `avx512vpopcntdq`): one
+//!   `vpopcntq` instruction counts 512 bits (512 binary MACs) per step —
+//!   it replaces the 5-instruction AVX2 byte-shuffle sequence below with a
+//!   single hardware popcount over 8 words at a time. The intrinsics need
+//!   rustc ≥ 1.89, so the kernel is additionally compiled out (and the
+//!   probe never selects it) on older toolchains via the `bdnn_avx512`
+//!   cfg emitted by `rust/build.rs`.
 //! * **AVX2** (`x86_64`, runtime-probed via `is_x86_feature_detected!`):
 //!   Muła's `vpshufb` nibble-LUT popcount — 256 bits (256 binary MACs) per
 //!   step. Each 4-bit nibble indexes a 16-entry bit-count table via
@@ -31,6 +38,9 @@
 /// A SIMD (or SIMD-shaped) implementation of the XNOR-popcount row dot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdBackend {
+    /// AVX-512 `vpopcntq` hardware popcount (x86_64, runtime-probed for
+    /// `avx512vpopcntdq`; needs rustc ≥ 1.89 to be compiled in).
+    Avx512,
     /// AVX2 `vpshufb` nibble-LUT popcount (x86_64, runtime-probed).
     Avx2,
     /// NEON `vcnt` + widening pairwise adds (aarch64).
@@ -40,19 +50,64 @@ pub enum SimdBackend {
 }
 
 impl SimdBackend {
+    /// Every backend, in probe priority order (best first).
+    pub const ALL: [SimdBackend; 4] =
+        [SimdBackend::Avx512, SimdBackend::Avx2, SimdBackend::Neon, SimdBackend::Portable];
+
     /// Lowercase name used in dispatch descriptions and the stats endpoint.
     pub fn name(self) -> &'static str {
         match self {
+            SimdBackend::Avx512 => "avx512",
             SimdBackend::Avx2 => "avx2",
             SimdBackend::Neon => "neon",
             SimdBackend::Portable => "portable",
         }
     }
+
+    /// Whether this machine (and the toolchain this binary was built with)
+    /// can run the backend's native kernel. `Portable` is always `true`.
+    /// An unavailable backend still *works* through the safe entry points
+    /// below — they fall back to the portable kernel — but this is what
+    /// the equivalence tests and bench seams gate on to know the real
+    /// vector path is the one being exercised.
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdBackend::Avx512 => avx512_available(),
+            SimdBackend::Avx2 => avx2_available(),
+            SimdBackend::Neon => cfg!(target_arch = "aarch64"),
+            SimdBackend::Portable => true,
+        }
+    }
+}
+
+/// Runtime probe for the AVX-512 rung. `vpopcntdq` alone drives the inner
+/// loop, but the kernel is compiled with `avx512f` enabled too (loads,
+/// xor, reduce), so both bits must be present.
+#[cfg(all(target_arch = "x86_64", bdnn_avx512))]
+fn avx512_available() -> bool {
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq")
+}
+
+/// On non-x86_64 targets, or toolchains too old to compile the AVX-512
+/// intrinsics (see `rust/build.rs`), the rung is never available.
+#[cfg(not(all(target_arch = "x86_64", bdnn_avx512)))]
+fn avx512_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
 }
 
 /// Probe the CPU once and return the best available backend. Ordering is
-/// AVX2 > NEON > portable; the result is cached for the process lifetime
-/// (the probe is a CPUID on x86_64).
+/// AVX-512 > AVX2 > NEON > portable; the result is cached for the process
+/// lifetime (the probe is a CPUID on x86_64).
 pub fn detect() -> SimdBackend {
     static DETECTED: std::sync::OnceLock<SimdBackend> = std::sync::OnceLock::new();
     *DETECTED.get_or_init(probe)
@@ -61,13 +116,22 @@ pub fn detect() -> SimdBackend {
 /// The uncached probe behind [`detect`] (tests call this directly to pin
 /// the fallback ordering without OnceLock interference).
 pub fn probe() -> SimdBackend {
-    #[cfg(target_arch = "x86_64")]
-    if is_x86_feature_detected!("avx2") {
-        return SimdBackend::Avx2;
-    }
     // NEON (ASIMD) is architecturally mandatory for AArch64; everything
-    // else takes the portable rung.
-    if cfg!(target_arch = "aarch64") {
+    // without a probed vector unit takes the portable rung.
+    probe_from(avx512_available(), avx2_available(), cfg!(target_arch = "aarch64"))
+}
+
+/// The pure fallback-ordering rule behind [`probe`]: map a set of detected
+/// features to a backend with priority AVX-512 > AVX2 > NEON > portable.
+/// Tests inject fake feature sets here (and through
+/// [`KernelDispatch::resolve_with`](super::dispatch::KernelDispatch::resolve_with))
+/// to pin the ordering without the hardware.
+pub fn probe_from(avx512: bool, avx2: bool, neon: bool) -> SimdBackend {
+    if avx512 {
+        SimdBackend::Avx512
+    } else if avx2 {
+        SimdBackend::Avx2
+    } else if neon {
         SimdBackend::Neon
     } else {
         SimdBackend::Portable
@@ -78,10 +142,10 @@ impl SimdBackend {
     /// `Σ popcount(!(a[w] ^ b[w]))` with the last word masked by `tail`.
     /// `a.len() == b.len() >= 1` (checked); `tail` selects the valid bits
     /// of the final word (`u64::MAX` when the bit-width is a multiple of
-    /// 64). Safe for any variant on any CPU: an `Avx2` value on a machine
-    /// without AVX2 (only constructible by hand — the probe never does
-    /// this) falls back to the portable kernel instead of hitting
-    /// undefined behavior.
+    /// 64). Safe for any variant on any CPU: an `Avx512`/`Avx2` value on
+    /// a machine without that extension (only constructible by hand — the
+    /// probe never does this) falls back to the portable kernel instead
+    /// of hitting undefined behavior.
     #[inline]
     pub fn xnor_popcount(self, a: &[u64], b: &[u64], tail: u64) -> u32 {
         // real asserts, not debug: the vector kernels do raw loads, so
@@ -89,6 +153,10 @@ impl SimdBackend {
         assert_eq!(a.len(), b.len());
         assert!(!a.is_empty());
         match self {
+            #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
+            SimdBackend::Avx512 if avx512_available() => unsafe {
+                xnor_popcount_avx512::<false>(a, a, b, tail)
+            },
             #[cfg(target_arch = "x86_64")]
             SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
                 xnor_popcount_avx2::<false>(a, a, b, tail)
@@ -109,6 +177,10 @@ impl SimdBackend {
         assert_eq!(a.len(), v.len());
         assert!(!a.is_empty());
         match self {
+            #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
+            SimdBackend::Avx512 if avx512_available() => unsafe {
+                xnor_popcount_avx512::<true>(a, v, b, tail)
+            },
             #[cfg(target_arch = "x86_64")]
             SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
                 xnor_popcount_avx2::<true>(a, v, b, tail)
@@ -133,6 +205,8 @@ impl SimdBackend {
         debug_assert_eq!(a.len(), b.len());
         debug_assert!(!a.is_empty());
         match self {
+            #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
+            SimdBackend::Avx512 => xnor_popcount_avx512::<false>(a, a, b, tail),
             #[cfg(target_arch = "x86_64")]
             SimdBackend::Avx2 => xnor_popcount_avx2::<false>(a, a, b, tail),
             #[cfg(target_arch = "aarch64")]
@@ -155,6 +229,8 @@ impl SimdBackend {
         debug_assert_eq!(a.len(), v.len());
         debug_assert!(!a.is_empty());
         match self {
+            #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
+            SimdBackend::Avx512 => xnor_popcount_avx512::<true>(a, v, b, tail),
             #[cfg(target_arch = "x86_64")]
             SimdBackend::Avx2 => xnor_popcount_avx2::<true>(a, v, b, tail),
             #[cfg(target_arch = "aarch64")]
@@ -218,6 +294,57 @@ fn xnor_popcount_portable_impl<const MASKED: bool>(
         w += 1;
     }
     c0 + c1 + c2 + c3 + (word::<MASKED>(a[lw], v[lw], b[lw]) & tail).count_ones()
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512: vpopcntq hardware popcount (avx512vpopcntdq)
+// ---------------------------------------------------------------------------
+
+/// Safety: caller must ensure `avx512f` **and** `avx512vpopcntdq` are
+/// available (the safe wrappers gate on [`avx512_available`]) and
+/// `a.len() == b.len() == v.len() >= 1`.
+///
+/// Compiled only when `rust/build.rs` found rustc ≥ 1.89 (the
+/// stabilization release of the AVX-512 intrinsics); see the module docs.
+#[cfg(all(target_arch = "x86_64", bdnn_avx512))]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+unsafe fn xnor_popcount_avx512<const MASKED: bool>(
+    a: &[u64],
+    v: &[u64],
+    b: &[u64],
+    tail: u64,
+) -> u32 {
+    use core::arch::x86_64::*;
+    let lw = a.len() - 1;
+    let ones = _mm512_set1_epi64(-1);
+    let mut acc = _mm512_setzero_si512(); // 8 × u64 running popcounts
+    let mut w = 0;
+    while w + 8 <= lw {
+        let va = _mm512_loadu_epi64(a.as_ptr().add(w) as *const i64);
+        let vb = _mm512_loadu_epi64(b.as_ptr().add(w) as *const i64);
+        let mut xnor = _mm512_xor_si512(_mm512_xor_si512(va, vb), ones);
+        if MASKED {
+            xnor = _mm512_and_si512(xnor, _mm512_loadu_epi64(v.as_ptr().add(w) as *const i64));
+        }
+        // one vpopcntq counts all 8 lanes; each lane step adds ≤ 64, so
+        // the u64 accumulators cannot overflow at any realistic k
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(xnor));
+        w += 8;
+    }
+    let mut total = _mm512_reduce_add_epi64(acc) as u32;
+    while w < lw {
+        let mut word = !(a[w] ^ b[w]);
+        if MASKED {
+            word &= v[w];
+        }
+        total += word.count_ones();
+        w += 1;
+    }
+    let mut last = (!(a[lw] ^ b[lw])) & tail;
+    if MASKED {
+        last &= v[lw];
+    }
+    total + last.count_ones()
 }
 
 // ---------------------------------------------------------------------------
@@ -354,17 +481,18 @@ mod tests {
     }
 
     fn available_backends() -> Vec<SimdBackend> {
-        let mut v = vec![SimdBackend::Portable, detect(), probe()];
-        v.dedup();
-        v
+        // Portable is always available, so this is never empty; on an
+        // AVX-512 machine it exercises avx512 AND avx2 (the probe alone
+        // would shadow the second-best rung).
+        SimdBackend::ALL.iter().copied().filter(|be| be.is_available()).collect()
     }
 
     #[test]
     fn every_available_backend_matches_scalar() {
         let mut r = Pcg32::seeded(7);
-        // word counts straddle the 4-word AVX2 / 2-word NEON strides,
-        // including the 1-word degenerate case (tail only)
-        for words in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 33] {
+        // word counts straddle the 8-word AVX-512 / 4-word AVX2 / 2-word
+        // NEON strides, including the 1-word degenerate case (tail only)
+        for words in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 17, 25, 33] {
             for tail in [u64::MAX, 1, (1u64 << 17) - 1] {
                 let a = rand_words(&mut r, words);
                 let b = rand_words(&mut r, words);
@@ -384,7 +512,7 @@ mod tests {
     #[test]
     fn every_available_backend_matches_scalar_masked() {
         let mut r = Pcg32::seeded(8);
-        for words in [1usize, 2, 4, 5, 8, 11, 17] {
+        for words in [1usize, 2, 4, 5, 8, 9, 11, 17, 25] {
             for tail in [u64::MAX, (1u64 << 40) - 1] {
                 let a = rand_words(&mut r, words);
                 let b = rand_words(&mut r, words);
@@ -416,7 +544,9 @@ mod tests {
         let be = probe();
         #[cfg(target_arch = "x86_64")]
         {
-            if is_x86_feature_detected!("avx2") {
+            if SimdBackend::Avx512.is_available() {
+                assert_eq!(be, SimdBackend::Avx512);
+            } else if is_x86_feature_detected!("avx2") {
                 assert_eq!(be, SimdBackend::Avx2);
             } else {
                 assert_eq!(be, SimdBackend::Portable);
@@ -427,5 +557,53 @@ mod tests {
         #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
         assert_eq!(be, SimdBackend::Portable);
         assert_eq!(detect(), be, "cached probe must agree with a fresh one");
+    }
+
+    #[test]
+    fn probe_from_pins_fallback_ordering() {
+        use SimdBackend::*;
+        // AVX-512 > AVX2 > NEON > portable, regardless of what else the
+        // (injected) machine reports — pinned here without the hardware.
+        assert_eq!(probe_from(true, true, true), Avx512);
+        assert_eq!(probe_from(true, false, false), Avx512);
+        assert_eq!(probe_from(false, true, true), Avx2);
+        assert_eq!(probe_from(false, true, false), Avx2);
+        assert_eq!(probe_from(false, false, true), Neon);
+        assert_eq!(probe_from(false, false, false), Portable);
+        // the real probe is exactly this rule over the real detections
+        assert_eq!(
+            probe(),
+            probe_from(
+                SimdBackend::Avx512.is_available(),
+                SimdBackend::Avx2.is_available(),
+                SimdBackend::Neon.is_available(),
+            )
+        );
+    }
+
+    #[test]
+    fn word_boundary_tail_is_all_ones() {
+        // k % 64 == 0 ⇒ the caller's tail mask is u64::MAX and every bit
+        // of the last word must count (regression for the word-boundary
+        // audit: a `(1 << 0) - 1 = 0` mask would zero the word instead).
+        let mut r = Pcg32::seeded(9);
+        for words in [1usize, 2] {
+            // k = 64, 128
+            let a = rand_words(&mut r, words);
+            let b = rand_words(&mut r, words);
+            let v = rand_words(&mut r, words);
+            let expect = scalar_ref(&a, &b, u64::MAX);
+            let expect_masked = scalar_ref_masked(&a, &v, &b, u64::MAX);
+            for be in available_backends() {
+                assert_eq!(be.xnor_popcount(&a, &a, u64::MAX), 64 * words as u32, "{}", be.name());
+                assert_eq!(be.xnor_popcount(&a, &b, u64::MAX), expect, "{}", be.name());
+                assert_eq!(
+                    be.xnor_popcount_masked(&a, &v, &b, u64::MAX),
+                    expect_masked,
+                    "{}",
+                    be.name()
+                );
+            }
+        }
     }
 }

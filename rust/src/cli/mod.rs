@@ -96,6 +96,40 @@ impl Args {
     }
 }
 
+/// Validate repeatable `--model NAME=PATH` values into `(name, path)`
+/// pairs, preserving CLI order. Each malformed spec is a structured error
+/// instead of a panic or a silent last-wins:
+///
+/// - missing `=` separator (`--model mnist`)
+/// - empty name (`--model =runs/a.bdnn`)
+/// - empty path (`--model mnist=`)
+/// - duplicate name across the CLI flags (`--model a=p --model a=q`)
+///
+/// Only intra-CLI duplicates are rejected here; a CLI name may still
+/// intentionally replace a same-named TOML `[models]` entry (the caller
+/// applies that override after validation).
+pub fn parse_model_specs(values: &[&str]) -> Result<Vec<(String, String)>, String> {
+    let mut specs: Vec<(String, String)> = Vec::with_capacity(values.len());
+    for raw in values {
+        let (name, path) = raw
+            .split_once('=')
+            .ok_or_else(|| format!("--model expects NAME=PATH, got '{raw}' (missing '=')"))?;
+        if name.is_empty() {
+            return Err(format!("--model expects NAME=PATH, got '{raw}' (empty name)"));
+        }
+        if path.is_empty() {
+            return Err(format!("--model expects NAME=PATH, got '{raw}' (empty path)"));
+        }
+        if let Some((_, first)) = specs.iter().find(|(n, _)| n == name) {
+            return Err(format!(
+                "--model '{name}' given twice ('{first}' and '{path}'); each model needs a unique name"
+            ));
+        }
+        specs.push((name.to_string(), path.to_string()));
+    }
+    Ok(specs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +187,34 @@ mod tests {
         let a = parse("x --verbose --n 3");
         assert!(a.flag("verbose"));
         assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn model_specs_parse_in_order() {
+        let specs = parse_model_specs(&["mnist=runs/a.bdnn", "cifar=runs/b.bdnn"]).unwrap();
+        assert_eq!(
+            specs,
+            vec![
+                ("mnist".to_string(), "runs/a.bdnn".to_string()),
+                ("cifar".to_string(), "runs/b.bdnn".to_string()),
+            ]
+        );
+        assert!(parse_model_specs(&[]).unwrap().is_empty());
+        // paths may themselves contain '=' — only the first splits
+        let odd = parse_model_specs(&["m=dir/a=b.bdnn"]).unwrap();
+        assert_eq!(odd[0].1, "dir/a=b.bdnn");
+    }
+
+    #[test]
+    fn model_specs_reject_malformed_flags() {
+        let missing = parse_model_specs(&["mnist"]).unwrap_err();
+        assert!(missing.contains("missing '='"), "{missing}");
+        let no_name = parse_model_specs(&["=runs/a.bdnn"]).unwrap_err();
+        assert!(no_name.contains("empty name"), "{no_name}");
+        let no_path = parse_model_specs(&["mnist="]).unwrap_err();
+        assert!(no_path.contains("empty path"), "{no_path}");
+        let dup = parse_model_specs(&["a=p", "b=q", "a=r"]).unwrap_err();
+        assert!(dup.contains("given twice"), "{dup}");
+        assert!(dup.contains('p') && dup.contains('r'), "{dup}");
     }
 }

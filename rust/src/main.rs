@@ -47,8 +47,8 @@ USAGE:
                section, gemm from [gemm]; 0 workers/threads = auto — the
                core budget is divided across shards so the pools together
                never oversubscribe (every shard keeps >= 1 worker);
-               kernel "auto" probes CPU features: simd when AVX2/NEON is
-               present, threaded otherwise)
+               kernel "auto" probes CPU features: simd when AVX-512/
+               AVX2/NEON is present, threaded otherwise)
   bdnn exp    table1|table2|table3|energy|fig1|fig2|fig3|fig4|memory
               [--quick|--full] [--checkpoint P] [--datasets mnist,cifar10]
   bdnn info   [--artifacts DIR]
@@ -282,12 +282,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             specs.push((Some(name), ckpt));
         }
     }
-    for m in args.strs("model") {
-        let (name, ckpt) = m
-            .split_once('=')
-            .ok_or_else(|| cfg_err(format!("--model expects name=path, got '{m}'")))?;
-        specs.retain(|(n, _)| n.as_deref() != Some(name)); // CLI wins
-        specs.push((Some(name.to_string()), ckpt.to_string()));
+    for (name, ckpt) in
+        bdnn::cli::parse_model_specs(&args.strs("model")).map_err(cfg_err)?
+    {
+        specs.retain(|(n, _)| n.as_deref() != Some(name.as_str())); // CLI wins over TOML
+        specs.push((Some(name), ckpt));
     }
     if let Some(ckpt) = args.str_opt("checkpoint") {
         specs.insert(0, (None, ckpt.to_string()));
@@ -322,10 +321,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let server =
         serve_models(entries, ServeConfig { addr, batcher: BatcherConfig::from(settings) })?;
-    let shards: Vec<(String, usize)> = server
+    let shards: Vec<(String, usize, usize)> = server
         .registry
         .iter()
-        .map(|s| (s.name.clone(), s.batcher.workers()))
+        .map(|s| (s.name.clone(), s.batcher.workers(), s.gemm_threads_planned))
         .collect();
     println!("{}", bdnn::benchkit::registry_banner(&gemm, &shards));
     println!("listening on {} (ctrl-c to stop)", server.local_addr);

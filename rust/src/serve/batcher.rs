@@ -48,6 +48,18 @@ pub trait InferEngine: Send + Sync {
     fn infer_parallelism(&self) -> usize {
         1
     }
+
+    /// Threads one `infer_batch` call will occupy for a batch of `batch`
+    /// inputs — [`Self::infer_parallelism`] with the concrete problem
+    /// shape applied (row clamp, small-problem cutoff). The stats
+    /// endpoint reports this at the shard's `max_batch` as
+    /// `gemm_threads`, next to the `infer_parallelism` ceiling as
+    /// `gemm_threads_configured`, so operators see the parallelism the
+    /// serve shape really gets.
+    fn planned_parallelism(&self, batch: usize) -> usize {
+        let _ = batch;
+        self.infer_parallelism()
+    }
 }
 
 impl InferEngine for PackedNet {
@@ -58,6 +70,10 @@ impl InferEngine for PackedNet {
     fn infer_parallelism(&self) -> usize {
         let g = self.gemm_config();
         crate::bitnet::dispatch::KernelDispatch::resolve(&g).effective_threads(&g)
+    }
+
+    fn planned_parallelism(&self, batch: usize) -> usize {
+        self.planned_gemm_threads(batch)
     }
 }
 

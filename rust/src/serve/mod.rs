@@ -51,7 +51,9 @@
 //!             "flush_timeout", "workers", "queued_batches", "in_flight",
 //!             "overlap", "worker_flushes", "submit_timeouts",
 //!             "rejected_shutdown", "infer_errors", "kernel",
-//!             "gemm_threads", "gemm_tile") plus "models": [names],
+//!             "gemm_threads" (count the planner spawns at max_batch),
+//!             "gemm_threads_configured" (the configured ceiling) and
+//!             "gemm_tile") plus "models": [names],
 //!             "unknown_model": n and "shards": {name: per-shard section}
 //!   stats:    {"stats": true, "model": "m"} -> shard "m"'s section only
 //!             (its own counters + "model" + its resolved kernel facts)

@@ -89,7 +89,10 @@ pub struct ModelEntry {
     pub in_shape: Vec<usize>,
     /// Resolved kernel rung description (e.g. `"simd(avx2)"`).
     pub kernel: String,
-    /// Effective per-flush GEMM threads of the resolved rung.
+    /// Configured per-flush GEMM thread ceiling of the resolved rung
+    /// (`KernelDispatch::effective_threads`). The count the planner
+    /// actually spawns for the serve shape is computed at registration
+    /// ([`Registry::spawn`]) from the engine's `planned_parallelism`.
     pub gemm_threads: usize,
     pub gemm_tile: usize,
 }
@@ -138,7 +141,15 @@ pub struct ModelShard {
     pub batcher: Arc<Batcher>,
     pub in_dim: usize,
     pub kernel: String,
+    /// Configured per-flush GEMM thread ceiling (stats endpoint:
+    /// `gemm_threads_configured`).
     pub gemm_threads: usize,
+    /// Threads the GEMM planner actually spawns for a full `max_batch`
+    /// flush of this shard — the ceiling after the row-count clamp and
+    /// small-problem cutoff (stats endpoint: `gemm_threads`). A tiny
+    /// model served at a small batch honestly reports 1 here while the
+    /// ceiling above still shows the configured core count.
+    pub gemm_threads_planned: usize,
     pub gemm_tile: usize,
 }
 
@@ -176,6 +187,9 @@ impl Registry {
         let default = entries[0].name.clone();
         let mut shards = BTreeMap::new();
         for (entry, workers) in entries.into_iter().zip(budget) {
+            // planned parallelism for this shard's serve shape: a full
+            // coalesced flush is `max_batch` rows through the engine
+            let gemm_threads_planned = entry.engine.planned_parallelism(cfg.max_batch.max(1));
             let batcher = Arc::new(Batcher::spawn_named(
                 entry.engine,
                 entry.in_dim,
@@ -189,6 +203,7 @@ impl Registry {
                 in_dim: entry.in_dim,
                 kernel: entry.kernel,
                 gemm_threads: entry.gemm_threads,
+                gemm_threads_planned,
                 gemm_tile: entry.gemm_tile,
             });
             if shards.insert(entry.name.clone(), shard).is_some() {
@@ -364,6 +379,41 @@ mod tests {
         assert_eq!(r.unknown_models.load(Ordering::Relaxed), 1);
         assert_eq!(r.names(), vec!["first", "other"]);
         assert_eq!(r.len(), 2);
+        r.shutdown();
+    }
+
+    /// Engine whose configured GEMM ceiling exceeds what its problem
+    /// shape can use — models the small-problem cutoff gap.
+    struct CutoffEngine;
+
+    impl InferEngine for CutoffEngine {
+        fn infer_batch(&self, x: &Tensor) -> BdnnResult<Tensor> {
+            let rows = x.shape()[0];
+            Ok(Tensor::new(&[rows, 2], vec![0.0; rows * 2]))
+        }
+
+        fn infer_parallelism(&self) -> usize {
+            8 // configured ceiling
+        }
+
+        fn planned_parallelism(&self, batch: usize) -> usize {
+            batch.min(2) // the planner's clamp for this tiny model
+        }
+    }
+
+    #[test]
+    fn shards_carry_configured_and_planned_thread_counts() {
+        let e = ModelEntry::from_engine("tiny", 4, vec![4], Arc::new(CutoffEngine));
+        let cfg = BatcherConfig { workers: 1, ..BatcherConfig::default() };
+        let r = Registry::spawn(vec![e], cfg).unwrap();
+        let s = r.default_shard();
+        assert_eq!(s.gemm_threads, 8, "configured ceiling (infer_parallelism)");
+        assert_eq!(s.gemm_threads_planned, 2, "planned at max_batch, clamped");
+        // engines without a planner override plan their ceiling
+        let e = entry("flat", 1.0, 3);
+        let r = Registry::spawn(vec![e], BatcherConfig { workers: 1, ..BatcherConfig::default() })
+            .unwrap();
+        assert_eq!(r.default_shard().gemm_threads_planned, 3);
         r.shutdown();
     }
 

@@ -149,7 +149,14 @@ fn shard_stats(shard: &ModelShard) -> BTreeMap<String, Json> {
     );
     obj.insert("infer_errors".to_string(), Json::Num(s.infer_errors.load(Relaxed) as f64));
     obj.insert("kernel".to_string(), Json::Str(shard.kernel.clone()));
-    obj.insert("gemm_threads".to_string(), Json::Num(shard.gemm_threads as f64));
+    // `gemm_threads` is the count the planner actually spawns for a full
+    // max_batch flush of this shard (row clamp + small-problem cutoff);
+    // the configured ceiling rides along so operators can see the gap
+    obj.insert("gemm_threads".to_string(), Json::Num(shard.gemm_threads_planned as f64));
+    obj.insert(
+        "gemm_threads_configured".to_string(),
+        Json::Num(shard.gemm_threads as f64),
+    );
     obj.insert("gemm_tile".to_string(), Json::Num(shard.gemm_tile as f64));
     obj
 }
@@ -205,9 +212,11 @@ fn rollup_stats(registry: &Registry) -> String {
     obj.insert("rejected_shutdown".to_string(), Json::Num(rejected_shutdown as f64));
     obj.insert("infer_errors".to_string(), Json::Num(infer_errors as f64));
     // kernel facts: the default shard's, like the single-model endpoint
+    // (planned count first, configured ceiling alongside — see shard_stats)
     let d = registry.default_shard();
     obj.insert("kernel".to_string(), Json::Str(d.kernel.clone()));
-    obj.insert("gemm_threads".to_string(), Json::Num(d.gemm_threads as f64));
+    obj.insert("gemm_threads".to_string(), Json::Num(d.gemm_threads_planned as f64));
+    obj.insert("gemm_threads_configured".to_string(), Json::Num(d.gemm_threads as f64));
     obj.insert("gemm_tile".to_string(), Json::Num(d.gemm_tile as f64));
     obj.insert(
         "models".to_string(),
@@ -440,7 +449,13 @@ mod tests {
         assert_eq!(j.get("requests").and_then(Json::as_f64), Some(1.0));
         assert_eq!(j.get("batches").and_then(Json::as_f64), Some(1.0));
         assert_eq!(j.get("kernel").and_then(Json::as_str), Some(expected_kernel.as_str()));
-        assert!(j.get("gemm_threads").and_then(Json::as_f64).unwrap() >= 1.0);
+        // the tiny net's GEMMs sit below the small-problem cutoff even at
+        // a full max_batch flush, so the *planned* count is exactly 1 —
+        // the configured ceiling (auto = core count) rides alongside
+        let planned = j.get("gemm_threads").and_then(Json::as_f64).unwrap();
+        let configured = j.get("gemm_threads_configured").and_then(Json::as_f64).unwrap();
+        assert_eq!(planned, 1.0, "tiny model under the cutoff must plan 1 thread");
+        assert!(configured >= planned, "ceiling {configured} < planned {planned}");
         assert!(j.get("gemm_tile").and_then(Json::as_f64).unwrap() >= 1.0);
         // pool state fields
         let workers = j.get("workers").and_then(Json::as_f64).unwrap();

@@ -2,7 +2,7 @@
 //! (argument parsing contract + command plumbing) via the library entry
 //! points where possible, and spot-check the installed binary when built.
 
-use bdnn::cli::Args;
+use bdnn::cli::{parse_model_specs, Args};
 
 fn parse(s: &str) -> Args {
     Args::parse(s.split_whitespace().map(String::from)).unwrap()
@@ -35,6 +35,35 @@ fn exp_ids_cover_every_paper_artifact() {
     for id in ids {
         let a = parse(&format!("exp {id} --quick"));
         assert_eq!(a.positional, vec![id.to_string()]);
+    }
+}
+
+#[test]
+fn serve_model_flags_validate_through_the_parser() {
+    // well-formed repeatable --model flags flow from argv through strs()
+    // into validated (name, path) pairs, in CLI order
+    let a = parse("serve --model mnist=runs/a.bdnn --model cifar=runs/b.bdnn");
+    let specs = parse_model_specs(&a.strs("model")).unwrap();
+    assert_eq!(
+        specs,
+        vec![
+            ("mnist".to_string(), "runs/a.bdnn".to_string()),
+            ("cifar".to_string(), "runs/b.bdnn".to_string()),
+        ]
+    );
+
+    // each malformed shape is a structured error naming the bad spec —
+    // no panic, no silent last-wins
+    for (argv, needle) in [
+        ("serve --model mnist", "missing '='"),
+        ("serve --model =runs/a.bdnn", "empty name"),
+        ("serve --model mnist=", "empty path"),
+        ("serve --model a=p --model a=q", "given twice"),
+    ] {
+        let a = parse(argv);
+        let err = parse_model_specs(&a.strs("model")).unwrap_err();
+        assert!(err.contains(needle), "{argv}: {err}");
+        assert!(err.contains("--model"), "{argv}: error should name the flag: {err}");
     }
 }
 

@@ -10,7 +10,7 @@
 //! shape), and the masked variant checked against both a zero-masked float
 //! oracle and the packed conv path with zero-padded borders.
 
-use bdnn::bitnet::{conv, gemm, BitMatrix};
+use bdnn::bitnet::{conv, gemm, BitMatrix, SimdBackend};
 use bdnn::config::{GemmConfig, KernelKind};
 use bdnn::proptest::{check, ensure, Gen};
 use bdnn::tensor::{conv2d_nhwc, matmul, Tensor};
@@ -158,6 +158,101 @@ fn forced_tail_mask_edges_every_kernel_and_thread() {
                         "k={k} kernel={kernel} threads={threads} tile={tile}"
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_tail_mask_edges_masked_variant_every_kernel_and_thread() {
+    // the masked (conv-border) twin of the sweep above: the same exact k
+    // values, but with a deterministic ~half-valid mask so the masked
+    // popcount kernels' tail handling is pinned at word boundaries too
+    // (k = 64, 128: the tail mask must be all-ones, not zero)
+    for &k in &[1usize, 63, 64, 65, 128] {
+        let (m, n) = (11, 7);
+        let a: Vec<f32> =
+            (0..m * k).map(|i| if (i * 2654435761usize) & 2 == 2 { 1.0 } else { -1.0 }).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| if (i * 2246822519usize) & 4 == 4 { 1.0 } else { -1.0 }).collect();
+        let mask_src: Vec<f32> =
+            (0..m * k).map(|i| if (i * 40503usize) & 8 == 8 { 1.0 } else { -1.0 }).collect();
+        let valid = BitMatrix::from_pm1(m, k, &mask_src);
+
+        // float oracle with invalid lanes as exact zeros
+        let mut az = Tensor::new(&[m, k], a.clone()).sign_pm1();
+        for (v, &keep) in az.data_mut().iter_mut().zip(&mask_src) {
+            if keep < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let tb = Tensor::new(&[k, n], b.clone()).sign_pm1();
+        let oracle: Vec<i32> = matmul(&az, &tb).data().iter().map(|&v| v as i32).collect();
+
+        let ap = BitMatrix::from_pm1(m, k, &a);
+        let bt = BitMatrix::from_pm1_transposed(k, n, &b);
+        assert_eq!(gemm::xnor_gemm_masked_scalar(&ap, &valid, &bt), oracle, "scalar k={k}");
+        for kernel in KernelKind::ALL {
+            for threads in 1..=4 {
+                for tile in [1usize, 4, 64] {
+                    let cfg = GemmConfig { tile, threads, kernel };
+                    assert_eq!(
+                        gemm::xnor_gemm_masked_with(&ap, &valid, &bt, &cfg),
+                        oracle,
+                        "masked k={k} kernel={kernel} threads={threads} tile={tile}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_available_backend_matches_the_oracle_on_tail_edges() {
+    // forced-backend sweep: each SIMD backend this CPU supports (portable
+    // always; AVX-512 only where `avx512vpopcntdq` exists) must agree with
+    // the sign-domain oracle on the same word-boundary k values, masked
+    // and unmasked
+    let backends: Vec<SimdBackend> =
+        SimdBackend::ALL.into_iter().filter(|be| be.is_available()).collect();
+    assert!(backends.contains(&SimdBackend::Portable));
+    for &k in &[1usize, 63, 64, 65, 128, 257] {
+        let (m, n) = (9, 11);
+        let a: Vec<f32> =
+            (0..m * k).map(|i| if (i * 2654435761usize) & 2 == 2 { 1.0 } else { -1.0 }).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|i| if (i * 2246822519usize) & 4 == 4 { 1.0 } else { -1.0 }).collect();
+        let mask_src: Vec<f32> =
+            (0..m * k).map(|i| if (i * 40503usize) & 8 == 8 { 1.0 } else { -1.0 }).collect();
+        let oracle = sign_matmul_oracle(m, k, n, &a, &b);
+        let mut az = Tensor::new(&[m, k], a.clone()).sign_pm1();
+        for (v, &keep) in az.data_mut().iter_mut().zip(&mask_src) {
+            if keep < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let tb = Tensor::new(&[k, n], b.clone()).sign_pm1();
+        let masked_oracle: Vec<i32> =
+            matmul(&az, &tb).data().iter().map(|&v| v as i32).collect();
+
+        let ap = BitMatrix::from_pm1(m, k, &a);
+        let valid = BitMatrix::from_pm1(m, k, &mask_src);
+        let bt = BitMatrix::from_pm1_transposed(k, n, &b);
+        for &be in &backends {
+            for threads in [1usize, 3] {
+                let cfg = GemmConfig { tile: 8, threads, kernel: KernelKind::Simd };
+                assert_eq!(
+                    gemm::xnor_gemm_with_backend(&ap, &bt, &cfg, be),
+                    oracle,
+                    "backend {} k={k} threads={threads}",
+                    be.name()
+                );
+                assert_eq!(
+                    gemm::xnor_gemm_masked_with_backend(&ap, &valid, &bt, &cfg, be),
+                    masked_oracle,
+                    "masked backend {} k={k} threads={threads}",
+                    be.name()
+                );
             }
         }
     }

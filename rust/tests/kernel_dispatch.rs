@@ -22,11 +22,16 @@ fn args(s: &str) -> Args {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn probe_fallback_ordering_is_avx2_then_neon_then_portable() {
+fn probe_fallback_ordering_is_avx512_then_avx2_then_neon_then_portable() {
     let be = popcount::probe();
     #[cfg(target_arch = "x86_64")]
     {
-        if is_x86_feature_detected!("avx2") {
+        // SimdBackend::is_available wraps the feature probe (and compiles
+        // to `false` for Avx512 on pre-1.89 toolchains), so the ladder is
+        // checked without repeating the detection macros here
+        if SimdBackend::Avx512.is_available() {
+            assert_eq!(be, SimdBackend::Avx512);
+        } else if is_x86_feature_detected!("avx2") {
             assert_eq!(be, SimdBackend::Avx2);
         } else {
             // no AVX2 on x86_64 → NEON is impossible, portable is the floor
@@ -44,6 +49,34 @@ fn probe_fallback_ordering_is_avx2_then_neon_then_portable() {
     match be {
         SimdBackend::Portable => assert_eq!(auto, KernelDispatch::Threaded),
         _ => assert_eq!(auto, KernelDispatch::Simd(be)),
+    }
+}
+
+#[test]
+fn injected_probe_results_pin_the_full_ordering_without_hardware() {
+    use SimdBackend::{Avx2, Avx512, Neon, Portable};
+    // probe_from is the pure ordering rule behind popcount::probe(): the
+    // highest present extension wins, regardless of what else is present
+    assert_eq!(popcount::probe_from(true, true, true), Avx512);
+    assert_eq!(popcount::probe_from(true, false, false), Avx512);
+    assert_eq!(popcount::probe_from(false, true, true), Avx2);
+    assert_eq!(popcount::probe_from(false, false, true), Neon);
+    assert_eq!(popcount::probe_from(false, false, false), Portable);
+    // and the dispatch layer consumes the probe verbatim: forced "simd"
+    // runs exactly the probed backend, "auto" takes the SIMD rung for any
+    // real vector unit and falls back to threaded for portable-only CPUs
+    for be in SimdBackend::ALL {
+        let forced = KernelDispatch::resolve_with(
+            &GemmConfig::auto().with_kernel(KernelKind::Simd),
+            be,
+        );
+        assert_eq!(forced, KernelDispatch::Simd(be));
+        assert_eq!(forced.describe(), format!("simd({})", be.name()));
+        let auto = KernelDispatch::resolve_with(&GemmConfig::auto(), be);
+        match be {
+            Portable => assert_eq!(auto, KernelDispatch::Threaded),
+            _ => assert_eq!(auto, KernelDispatch::Simd(be)),
+        }
     }
 }
 
