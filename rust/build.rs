@@ -30,6 +30,10 @@ fn main() {
     // quiet on toolchains that know check-cfg; older cargos treat the
     // single-colon directive as inert build-script metadata.
     println!("cargo:rustc-check-cfg=cfg(bdnn_avx512)");
+    // `cfg(loom)` is set externally (RUSTFLAGS="--cfg loom") to swap the
+    // `util::sync` facade over to the vendored loom-lite model checker;
+    // declare it so non-loom builds don't warn on the gated code.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
     if let Some(v) = rustc_version() {
         if v >= (1, 89) {
             println!("cargo:rustc-cfg=bdnn_avx512");

@@ -1,0 +1,66 @@
+//! loom-lite — a vendored, offline subset of the `loom` model checker.
+//!
+//! The real [`loom`](https://github.com/tokio-rs/loom) crate is not
+//! available in this sandbox (no crates.io access), so this crate
+//! reimplements the part of its contract that `bdnn::util::sync` needs:
+//! drop-in `Mutex` / `Condvar` / atomics / `thread::spawn` replacements
+//! whose every visible operation is a *scheduling point*, plus a
+//! [`model`] entry point that reruns a closure under every explored
+//! thread interleaving.
+//!
+//! # How it works
+//!
+//! Model threads are real OS threads, but they are **serialized**: a
+//! cooperative scheduler (the caller of [`model`]) activates exactly one
+//! thread at a time, and a thread runs until its next scheduling point
+//! (lock, condvar op, atomic op, spawn, join, yield), where it hands
+//! control back. Each point where more than one thread could run next is
+//! a recorded *choice*; the scheduler replays the recorded prefix and
+//! then explores depth-first, backtracking over the last non-exhausted
+//! choice until the whole (bounded) schedule tree is covered.
+//!
+//! # Bounds and limitations vs real loom
+//!
+//! - **Preemption bounding, not full exhaustion.** Unbounded DFS explodes
+//!   on the batcher models, so by default a schedule may preempt a
+//!   runnable thread at most `LOOM_MAX_PREEMPTIONS` (default 2) times;
+//!   context switches at blocking points are always free. This is the
+//!   CHESS-style iterative-context bound: empirically almost all
+//!   concurrency bugs — including the PR 3 hung-worker deadlock this
+//!   suite pins — need at most two preemptions to manifest.
+//!   [`Builder::preemption_bound`] overrides per model.
+//! - **Sequentially consistent atomics only.** The modeled atomics
+//!   ignore the `Ordering` argument; weak-memory reorderings are *not*
+//!   explored. Races that require `Relaxed`/`Acquire`-level weakness are
+//!   out of scope (that is what the TSan CI job is for).
+//! - `notify_one` wakes the lowest-id waiter deterministically instead
+//!   of exploring every waiter choice.
+//! - Deadlock (no runnable thread while some are unfinished) and
+//!   livelock (`LOOM_MAX_STEPS` exceeded) abort the run with a panic
+//!   that includes the offending schedule path.
+//!
+//! Model closures must be deterministic apart from scheduling: no wall
+//! clock branching, no OS randomness. The runtime panics with a
+//! "nondeterministic model" message if a replayed schedule diverges.
+//!
+//! ```
+//! use loom::sync::atomic::{AtomicUsize, Ordering};
+//! use loom::sync::Arc;
+//!
+//! loom::model(|| {
+//!     let n = Arc::new(AtomicUsize::new(0));
+//!     let n2 = Arc::clone(&n);
+//!     let t = loom::thread::spawn(move || {
+//!         n2.fetch_add(1, Ordering::SeqCst);
+//!     });
+//!     n.fetch_add(1, Ordering::SeqCst);
+//!     t.join().unwrap();
+//!     assert_eq!(n.load(Ordering::SeqCst), 2);
+//! });
+//! ```
+
+mod rt;
+pub mod sync;
+pub mod thread;
+
+pub use rt::{model, Builder};

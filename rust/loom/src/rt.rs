@@ -1,0 +1,639 @@
+//! The cooperative scheduler and depth-first schedule explorer.
+//!
+//! One OS thread per model thread, but execution is serialized: the
+//! scheduler (the thread that called [`model`]) owns a single
+//! `Mutex<ExecState>` + `Condvar` pair, and `ExecState::active` names the
+//! only thread allowed to make progress. Model threads hand control back
+//! at every scheduling point; the scheduler picks the successor, replaying
+//! a recorded choice path first and extending it depth-first after.
+//!
+//! Failure handling ("abandonment"): when a model thread panics, a
+//! deadlock is detected, or the step cap trips, the execution is marked
+//! abandoned and the scheduler keeps activating the remaining threads one
+//! at a time. A thread re-activated under abandonment panics with the
+//! private [`Abandon`] payload at its next scheduling point, unwinding
+//! back to its wrapper (running destructors along the way — still fully
+//! serialized, so the shared-state invariants the primitives rely on
+//! hold). Once every thread has finished, the scheduler joins the OS
+//! threads and re-raises the first recorded failure.
+
+use std::cell::RefCell;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool as StdAtomicBool, AtomicUsize as StdAtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Panic payload used to unwind a model thread out of an abandoned
+/// execution. Never surfaces to the user: the scheduler re-raises the
+/// original failure instead.
+struct Abandon;
+
+/// Process-global resource-id allocator. Ids are never reused, so a
+/// primitive created outside `model` (or surviving across executions)
+/// can never collide with a fresh one.
+static NEXT_RID: StdAtomicUsize = StdAtomicUsize::new(0);
+
+/// Join handles park on a per-thread resource carved out of the top of
+/// the id space, far above anything `NEXT_RID` can reach.
+fn join_rid(tid: usize) -> usize {
+    usize::MAX - tid
+}
+
+pub(crate) fn next_rid() -> usize {
+    let rid = NEXT_RID.fetch_add(1, Ordering::Relaxed);
+    assert!(rid < usize::MAX / 2, "loom-lite: resource id space exhausted");
+    rid
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    /// Eligible to be scheduled.
+    Runnable,
+    /// Called `yield_now`: only scheduled when nothing is `Runnable`
+    /// (bounds spin loops without losing their schedules entirely).
+    Yielded,
+    /// Parked on the resource id until some thread unblocks it.
+    Blocked(usize),
+    Finished,
+}
+
+struct ThreadSlot {
+    run: Run,
+    name: Option<String>,
+}
+
+/// One branch point in the schedule: which of `num` candidate threads ran.
+#[derive(Clone, Copy, Debug)]
+struct ChoicePoint {
+    chosen: usize,
+    num: usize,
+}
+
+struct ExecState {
+    /// The single thread currently allowed to run; `None` hands control
+    /// to the scheduler.
+    active: Option<usize>,
+    threads: Vec<ThreadSlot>,
+    last_ran: Option<usize>,
+    preemptions: usize,
+    /// Schedule choices: replayed up to `pos`, extended depth-first after.
+    path: Vec<ChoicePoint>,
+    pos: usize,
+    steps: usize,
+    abandoned: bool,
+    failure: Option<String>,
+    os_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+pub(crate) struct Execution {
+    state: Mutex<ExecState>,
+    cv: Condvar,
+    max_steps: usize,
+    max_preemptions: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> (Arc<Execution>, usize) {
+    CTX.with(|c| c.borrow().clone())
+        .expect("loom-lite primitives may only be used inside loom::model")
+}
+
+fn lock_state(exec: &Execution) -> std::sync::MutexGuard<'_, ExecState> {
+    exec.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn unblock(s: &mut ExecState, rid: usize, all: bool) {
+    for t in s.threads.iter_mut() {
+        if t.run == Run::Blocked(rid) {
+            t.run = Run::Runnable;
+            if !all {
+                return;
+            }
+        }
+    }
+}
+
+impl Execution {
+    /// Park the calling thread in state `run` and return once the
+    /// scheduler activates it again. The single scheduling primitive:
+    /// everything else (schedule_point, yield, block) is a state choice.
+    fn yield_control(self: &Arc<Self>, tid: usize, run: Run) {
+        // Unwinding out of an abandoned execution runs destructors that
+        // hit scheduling points (guard drops, channel sender drops). The
+        // thread still holds the activation, so skipping the yield keeps
+        // execution serialized and avoids a panic-during-unwind abort.
+        if std::thread::panicking() {
+            return;
+        }
+        let mut s = lock_state(self);
+        s.threads[tid].run = run;
+        s.active = None;
+        self.cv.notify_all();
+        while s.active != Some(tid) {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        if s.abandoned {
+            drop(s);
+            std::panic::panic_any(Abandon);
+        }
+    }
+}
+
+/// Hand control to the scheduler at a visible operation (atomic access,
+/// lock attempt, spawn). The calling thread stays runnable.
+pub(crate) fn schedule_point() {
+    let (exec, tid) = ctx();
+    exec.yield_control(tid, Run::Runnable);
+}
+
+pub(crate) fn yield_now() {
+    let (exec, tid) = ctx();
+    exec.yield_control(tid, Run::Yielded);
+}
+
+/// Try to take `locked`; on contention park on `rid`. Returns true once
+/// acquired (callers loop: a wakeup only means "try again", another
+/// thread may have snatched the lock in between).
+pub(crate) fn mutex_try_acquire_or_block(locked: &StdAtomicBool, rid: usize) -> bool {
+    let (exec, tid) = ctx();
+    if std::thread::panicking() {
+        // Unwinding out of abandonment: execution is serialized and the
+        // state no longer matters — pretend success so Drop chains finish.
+        return true;
+    }
+    {
+        let mut s = lock_state(&exec);
+        // The flag is only ever touched under the state lock, so this
+        // test-and-set is atomic with respect to the scheduling decision.
+        if !locked.load(Ordering::Relaxed) {
+            locked.store(true, Ordering::Relaxed);
+            return true;
+        }
+        s.threads[tid].run = Run::Blocked(rid);
+        s.active = None;
+        exec.cv.notify_all();
+        while s.active != Some(tid) {
+            s = exec.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        if s.abandoned {
+            drop(s);
+            std::panic::panic_any(Abandon);
+        }
+    }
+    false
+}
+
+/// Release `locked` and wake every thread parked on `rid`. Not a
+/// scheduling point (the unlocking thread keeps running, as with a real
+/// mutex unlock); never panics, so it is safe in Drop during unwind.
+pub(crate) fn mutex_release(locked: &StdAtomicBool, rid: usize) {
+    let (exec, _tid) = ctx();
+    let mut s = lock_state(&exec);
+    locked.store(false, Ordering::Relaxed);
+    unblock(&mut s, rid, true);
+}
+
+/// Condvar wait: atomically (w.r.t. scheduling) park on `cv_rid` and
+/// release the mutex, then return once woken. The caller reacquires.
+pub(crate) fn condvar_block(cv_rid: usize, locked: &StdAtomicBool, mutex_rid: usize) {
+    let (exec, tid) = ctx();
+    if std::thread::panicking() {
+        return;
+    }
+    let mut s = lock_state(&exec);
+    s.threads[tid].run = Run::Blocked(cv_rid);
+    locked.store(false, Ordering::Relaxed);
+    unblock(&mut s, mutex_rid, true);
+    s.active = None;
+    exec.cv.notify_all();
+    while s.active != Some(tid) {
+        s = exec.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+    }
+    if s.abandoned {
+        drop(s);
+        std::panic::panic_any(Abandon);
+    }
+}
+
+/// Wake one (lowest thread id — deterministic) or all waiters on `rid`.
+/// Not a scheduling point; never panics (safe during unwind).
+pub(crate) fn notify(rid: usize, all: bool) {
+    let (exec, _tid) = ctx();
+    let mut s = lock_state(&exec);
+    unblock(&mut s, rid, all);
+}
+
+/// Block until thread `target` finishes. The finished check and the
+/// decision to park happen under one state lock, so the wakeup from
+/// `thread_main` cannot be lost.
+pub(crate) fn join_thread(target: usize) {
+    let (exec, tid) = ctx();
+    loop {
+        if std::thread::panicking() {
+            return;
+        }
+        {
+            let mut s = lock_state(&exec);
+            if s.threads[target].run == Run::Finished {
+                return;
+            }
+            s.threads[tid].run = Run::Blocked(join_rid(target));
+            s.active = None;
+            exec.cv.notify_all();
+            while s.active != Some(tid) {
+                s = exec.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+            if s.abandoned {
+                drop(s);
+                std::panic::panic_any(Abandon);
+            }
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Body run by every model thread's OS thread: wait for first activation,
+/// run the closure under `catch_unwind`, then publish the result and wake
+/// joiners. `slot` outlives the thread via the `JoinHandle`.
+fn thread_main<T: Send + 'static>(
+    exec: Arc<Execution>,
+    tid: usize,
+    slot: Arc<Mutex<Option<std::thread::Result<T>>>>,
+    f: impl FnOnce() -> T + Send + 'static,
+) {
+    let abandoned_before_start = {
+        let mut s = lock_state(&exec);
+        while s.active != Some(tid) {
+            s = exec.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        // Under abandonment the scheduler activates never-started threads
+        // just to drain them; skip the closure entirely in that case.
+        s.abandoned
+    };
+
+    let out = if abandoned_before_start {
+        Err(Box::new(Abandon) as Box<dyn std::any::Any + Send>)
+    } else {
+        CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&exec), tid)));
+        let r = std::panic::catch_unwind(AssertUnwindSafe(f));
+        CTX.with(|c| *c.borrow_mut() = None);
+        r
+    };
+
+    let mut s = lock_state(&exec);
+    match out {
+        Ok(v) => {
+            *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(Ok(v));
+        }
+        Err(p) => {
+            if p.downcast_ref::<Abandon>().is_none() && s.failure.is_none() {
+                let name = s.threads[tid]
+                    .name
+                    .clone()
+                    .unwrap_or_else(|| format!("loom-{tid}"));
+                s.failure = Some(format!(
+                    "loom-lite: model thread '{}' panicked: {}",
+                    name,
+                    panic_message(p.as_ref())
+                ));
+                s.abandoned = true;
+            }
+            *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(Err(p));
+        }
+    }
+    s.threads[tid].run = Run::Finished;
+    unblock(&mut s, join_rid(tid), true);
+    s.active = None;
+    exec.cv.notify_all();
+}
+
+/// Register a new model thread and start its OS thread. The spawn itself
+/// is a scheduling point, so child-first and parent-first schedules are
+/// both explored.
+pub(crate) fn spawn_thread<T, F>(
+    name: Option<String>,
+    f: F,
+) -> (usize, Arc<Mutex<Option<std::thread::Result<T>>>>)
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (exec, _me) = ctx();
+    let slot: Arc<Mutex<Option<std::thread::Result<T>>>> = Arc::new(Mutex::new(None));
+    let tid = {
+        let mut s = lock_state(&exec);
+        let tid = s.threads.len();
+        s.threads.push(ThreadSlot {
+            run: Run::Runnable,
+            name: name.clone(),
+        });
+        tid
+    };
+    let exec2 = Arc::clone(&exec);
+    let slot2 = Arc::clone(&slot);
+    let os = std::thread::Builder::new()
+        .name(name.unwrap_or_else(|| format!("loom-{tid}")))
+        .spawn(move || thread_main(exec2, tid, slot2, f))
+        .expect("loom-lite: failed to spawn OS thread");
+    lock_state(&exec).os_handles.push(os);
+    schedule_point();
+    (tid, slot)
+}
+
+pub(crate) fn take_result<T>(
+    tid: usize,
+    slot: &Arc<Mutex<Option<std::thread::Result<T>>>>,
+) -> std::thread::Result<T> {
+    join_thread(tid);
+    slot.lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .take()
+        .expect("loom-lite: thread result taken twice")
+}
+
+/// Replay or extend the choice path. Forced moves (one candidate) are not
+/// recorded, keeping the path proportional to real branching.
+fn pick(s: &mut ExecState, cands: &[usize]) -> usize {
+    let n = cands.len();
+    if n == 1 {
+        return cands[0];
+    }
+    let i = if s.pos < s.path.len() {
+        let cp = s.path[s.pos];
+        assert_eq!(
+            cp.num, n,
+            "loom-lite: nondeterministic model (candidate count changed on replay at choice {})",
+            s.pos
+        );
+        cp.chosen
+    } else {
+        s.path.push(ChoicePoint { chosen: 0, num: n });
+        0
+    };
+    s.pos += 1;
+    cands[i]
+}
+
+fn deadlock_report(s: &ExecState) -> String {
+    let mut lines = vec!["loom-lite: DEADLOCK — no thread can make progress:".to_string()];
+    for (tid, t) in s.threads.iter().enumerate() {
+        let name = t.name.clone().unwrap_or_else(|| format!("loom-{tid}"));
+        let what = match t.run {
+            Run::Blocked(rid) if rid > usize::MAX / 2 => {
+                format!("blocked joining thread {}", join_rid(rid))
+            }
+            Run::Blocked(rid) => format!("blocked on resource {rid}"),
+            Run::Finished => "finished".to_string(),
+            Run::Runnable => "runnable".to_string(),
+            Run::Yielded => "yielded".to_string(),
+        };
+        lines.push(format!("  thread {tid} ('{name}'): {what}"));
+    }
+    lines.join("\n")
+}
+
+/// Drive one execution to completion (all threads finished), including
+/// the serialized abandonment drain, then join the OS threads.
+fn run_schedule(exec: &Arc<Execution>) {
+    let mut s = lock_state(exec);
+    loop {
+        while s.active.is_some() {
+            s = exec.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        if s.threads.iter().all(|t| t.run == Run::Finished) {
+            break;
+        }
+        let chosen = if s.abandoned {
+            // Drain mode: activate remaining threads one at a time (even
+            // blocked ones — they panic-exit at their next scheduling
+            // point). No choices are recorded; exploration is over.
+            (0..s.threads.len()).find(|&t| s.threads[t].run != Run::Finished)
+        } else {
+            s.steps += 1;
+            if s.steps > exec.max_steps {
+                s.failure = Some(format!(
+                    "loom-lite: livelock suspected — execution exceeded {} steps \
+                     (raise LOOM_MAX_STEPS if the model is legitimately this long)",
+                    exec.max_steps
+                ));
+                s.abandoned = true;
+                continue;
+            }
+            let runnable: Vec<usize> = (0..s.threads.len())
+                .filter(|&t| s.threads[t].run == Run::Runnable)
+                .collect();
+            let pool: Vec<usize> = if runnable.is_empty() {
+                (0..s.threads.len())
+                    .filter(|&t| s.threads[t].run == Run::Yielded)
+                    .collect()
+            } else {
+                runnable
+            };
+            if pool.is_empty() {
+                s.failure = Some(deadlock_report(&s));
+                s.abandoned = true;
+                continue;
+            }
+            // Candidate order: continuing the last-run thread is always
+            // choice 0, so the DFS explores the preemption-free schedule
+            // first and preemptions are exactly the non-zero choices.
+            let mut cands = pool;
+            let last_still_runnable = s
+                .last_ran
+                .map(|l| s.threads[l].run == Run::Runnable)
+                .unwrap_or(false);
+            if let Some(l) = s.last_ran {
+                if let Some(p) = cands.iter().position(|&c| c == l) {
+                    cands.remove(p);
+                    cands.insert(0, l);
+                }
+            }
+            let cands = if last_still_runnable
+                && s.preemptions >= exec.max_preemptions
+                && cands.first() == s.last_ran.as_ref()
+            {
+                vec![cands[0]]
+            } else {
+                cands
+            };
+            let chosen = pick(&mut s, &cands);
+            if last_still_runnable && Some(chosen) != s.last_ran {
+                s.preemptions += 1;
+            }
+            Some(chosen)
+        };
+        let Some(chosen) = chosen else { break };
+        if s.threads[chosen].run == Run::Yielded {
+            s.threads[chosen].run = Run::Runnable;
+        }
+        s.last_ran = Some(chosen);
+        s.active = Some(chosen);
+        exec.cv.notify_all();
+    }
+    let handles = std::mem::take(&mut s.os_handles);
+    drop(s);
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Advance `path` to the next unexplored schedule; false when the tree is
+/// exhausted.
+fn backtrack(path: &mut Vec<ChoicePoint>) -> bool {
+    while let Some(cp) = path.last_mut() {
+        if cp.chosen + 1 < cp.num {
+            cp.chosen += 1;
+            return true;
+        }
+        path.pop();
+    }
+    false
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Model-checking configuration, mirroring `loom::model::Builder`.
+///
+/// ```
+/// let mut b = loom::Builder::new();
+/// b.preemption_bound = Some(1);
+/// b.check(|| { /* model body */ });
+/// ```
+pub struct Builder {
+    /// Max preemptions per schedule; `None` reads `LOOM_MAX_PREEMPTIONS`
+    /// (default 2). Blocking context switches are always free.
+    pub preemption_bound: Option<usize>,
+    /// Scheduling points per execution before declaring livelock;
+    /// `None` reads `LOOM_MAX_STEPS` (default 100_000).
+    pub max_steps: Option<usize>,
+    /// Executions before giving up; `None` reads `LOOM_MAX_ITERATIONS`
+    /// (default 5_000_000).
+    pub max_iterations: Option<usize>,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Builder {
+            preemption_bound: None,
+            max_steps: None,
+            max_iterations: None,
+        }
+    }
+
+    /// Run `f` under every schedule within the configured bounds,
+    /// panicking on the first assertion failure, deadlock, or livelock.
+    pub fn check<F>(&self, f: F)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        // One model at a time per process: the scheduler assumes the only
+        // unparked threads are its own.
+        static MODEL_LOCK: Mutex<()> = Mutex::new(());
+        let _guard = MODEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+        let max_preemptions = self
+            .preemption_bound
+            .unwrap_or_else(|| env_usize("LOOM_MAX_PREEMPTIONS", 2));
+        let max_steps = self.max_steps.unwrap_or_else(|| env_usize("LOOM_MAX_STEPS", 100_000));
+        let max_iterations = self
+            .max_iterations
+            .unwrap_or_else(|| env_usize("LOOM_MAX_ITERATIONS", 5_000_000));
+        let log = std::env::var("LOOM_LOG").is_ok();
+
+        let f = Arc::new(f);
+        let mut path: Vec<ChoicePoint> = Vec::new();
+        let mut iterations = 0usize;
+        loop {
+            iterations += 1;
+            assert!(
+                iterations <= max_iterations,
+                "loom-lite: exceeded LOOM_MAX_ITERATIONS ({max_iterations}) without exhausting \
+                 the schedule tree; simplify the model or lower the preemption bound"
+            );
+            let exec = Arc::new(Execution {
+                state: Mutex::new(ExecState {
+                    active: None,
+                    threads: Vec::new(),
+                    last_ran: None,
+                    preemptions: 0,
+                    path,
+                    pos: 0,
+                    steps: 0,
+                    abandoned: false,
+                    failure: None,
+                    os_handles: Vec::new(),
+                }),
+                cv: Condvar::new(),
+                max_steps,
+                max_preemptions,
+            });
+            // Thread 0 runs the model closure itself.
+            {
+                let mut s = lock_state(&exec);
+                s.threads.push(ThreadSlot {
+                    run: Run::Runnable,
+                    name: Some("main".to_string()),
+                });
+            }
+            let body = Arc::clone(&f);
+            let slot: Arc<Mutex<Option<std::thread::Result<()>>>> = Arc::new(Mutex::new(None));
+            let exec2 = Arc::clone(&exec);
+            let slot2 = Arc::clone(&slot);
+            let os = std::thread::Builder::new()
+                .name("loom-main".to_string())
+                .spawn(move || thread_main(exec2, 0, slot2, move || body()))
+                .expect("loom-lite: failed to spawn model main thread");
+            lock_state(&exec).os_handles.push(os);
+
+            run_schedule(&exec);
+
+            let (failure, taken) = {
+                let mut s = lock_state(&exec);
+                (s.failure.take(), std::mem::take(&mut s.path))
+            };
+            if let Some(msg) = failure {
+                panic!("{msg}\n  (schedule {taken:?}, iteration {iterations})");
+            }
+            path = taken;
+            if !backtrack(&mut path) {
+                if log {
+                    eprintln!("loom-lite: explored {iterations} schedules");
+                }
+                return;
+            }
+            if log && iterations % 10_000 == 0 {
+                eprintln!("loom-lite: ... {iterations} schedules");
+            }
+        }
+    }
+}
+
+/// Explore `f` under the default bounds. See [`Builder`] for knobs.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::new().check(f);
+}

@@ -1,0 +1,261 @@
+//! Modeled synchronization primitives: `Mutex`, `Condvar`, and
+//! sequentially-consistent atomics, API-compatible with the `std::sync`
+//! surface the `bdnn::util::sync` facade re-exports.
+//!
+//! All real mutual exclusion comes from the scheduler (exactly one model
+//! thread runs at a time); these types only *record* lock/wait state so
+//! the scheduler can explore contention orders and detect deadlocks. The
+//! modeled mutex does not poison: `lock()` still returns `LockResult` for
+//! std signature compatibility, but it is always `Ok`.
+
+use crate::rt;
+use std::cell::UnsafeCell;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::AtomicBool as StdAtomicBool;
+use std::sync::{LockResult, OnceLock};
+
+pub use std::sync::Arc;
+
+/// Resource ids are handed out on first touch, so primitives may be
+/// constructed outside `loom::model` (e.g. in fixture builders) as long
+/// as they are only *operated on* inside it.
+#[derive(Default)]
+struct LazyRid(OnceLock<usize>);
+
+impl LazyRid {
+    fn get(&self) -> usize {
+        *self.0.get_or_init(rt::next_rid)
+    }
+}
+
+/// A model-checked mutex. Lock acquisition is a scheduling point;
+/// contended lockers park until the holder releases.
+#[derive(Default)]
+pub struct Mutex<T> {
+    /// Only touched under the scheduler's state lock — see
+    /// `rt::mutex_try_acquire_or_block`.
+    locked: StdAtomicBool,
+    rid: LazyRid,
+    cell: UnsafeCell<T>,
+}
+
+// SAFETY: the scheduler serializes model threads, and `cell` is only
+// reachable through a `MutexGuard`, whose existence implies the modeled
+// lock is held — so aliasing access from two threads cannot occur. The
+// bounds mirror std's (`Send`/`Sync` for `Mutex<T: Send>`).
+unsafe impl<T: Send> Send for Mutex<T> {}
+// SAFETY: as above — guarded access plus serialized execution.
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Mutex {
+            locked: StdAtomicBool::new(false),
+            rid: LazyRid::default(),
+            cell: UnsafeCell::new(value),
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        rt::schedule_point();
+        let rid = self.rid.get();
+        while !rt::mutex_try_acquire_or_block(&self.locked, rid) {}
+        Ok(MutexGuard { lock: self })
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.cell.into_inner())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: this guard holds the modeled lock and model threads are
+        // serialized, so no other reference to the cell is live.
+        unsafe { &*self.lock.cell.get() }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as in `deref` — exclusive by the modeled lock.
+        unsafe { &mut *self.lock.cell.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        rt::mutex_release(&self.lock.locked, self.lock.rid.get());
+    }
+}
+
+/// A model-checked condition variable. `notify_one` deterministically
+/// wakes the lowest-id waiter (a documented loom-lite simplification);
+/// waiters must re-check their predicate in a loop, as with std.
+#[derive(Default)]
+pub struct Condvar {
+    rid: LazyRid,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar::default()
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        // Suppress the guard's unlock-on-drop: `condvar_block` releases
+        // the mutex itself, atomically with parking on the condvar.
+        std::mem::forget(guard);
+        rt::condvar_block(self.rid.get(), &lock.locked, lock.rid.get());
+        while !rt::mutex_try_acquire_or_block(&lock.locked, lock.rid.get()) {}
+        Ok(MutexGuard { lock })
+    }
+
+    pub fn notify_one(&self) {
+        rt::notify(self.rid.get(), false);
+    }
+
+    pub fn notify_all(&self) {
+        rt::notify(self.rid.get(), true);
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+pub mod atomic {
+    //! Modeled atomics. Every access is a scheduling point; all orderings
+    //! are treated as sequentially consistent (weak-memory interleavings
+    //! are out of scope for loom-lite — see the crate docs).
+
+    use crate::rt;
+    use std::cell::UnsafeCell;
+
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! modeled_atomic {
+        ($name:ident, $ty:ty) => {
+            #[derive(Default)]
+            pub struct $name {
+                cell: UnsafeCell<$ty>,
+            }
+
+            // SAFETY: every access goes through a scheduling point and
+            // model threads are serialized, so the cell is never touched
+            // concurrently.
+            unsafe impl Send for $name {}
+            // SAFETY: as above — serialized execution.
+            unsafe impl Sync for $name {}
+
+            impl $name {
+                pub fn new(v: $ty) -> Self {
+                    Self {
+                        cell: UnsafeCell::new(v),
+                    }
+                }
+
+                fn get(&self) -> $ty {
+                    // SAFETY: called only with the activation token held
+                    // (serialized execution), so no concurrent access.
+                    unsafe { *self.cell.get() }
+                }
+
+                fn set(&self, v: $ty) {
+                    // SAFETY: as in `get` — exclusive by serialization.
+                    unsafe { *self.cell.get() = v }
+                }
+
+                pub fn load(&self, _order: Ordering) -> $ty {
+                    rt::schedule_point();
+                    self.get()
+                }
+
+                pub fn store(&self, v: $ty, _order: Ordering) {
+                    rt::schedule_point();
+                    self.set(v);
+                }
+
+                pub fn swap(&self, v: $ty, _order: Ordering) -> $ty {
+                    rt::schedule_point();
+                    let old = self.get();
+                    self.set(v);
+                    old
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $ty,
+                    new: $ty,
+                    _success: Ordering,
+                    _failure: Ordering,
+                ) -> Result<$ty, $ty> {
+                    rt::schedule_point();
+                    let old = self.get();
+                    if old == current {
+                        self.set(new);
+                        Ok(old)
+                    } else {
+                        Err(old)
+                    }
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    // Raw read (no scheduling point): Debug is used by
+                    // test harness output paths outside the model.
+                    f.write_fmt(format_args!("{:?}", self.get()))
+                }
+            }
+        };
+    }
+
+    modeled_atomic!(AtomicBool, bool);
+    modeled_atomic!(AtomicU64, u64);
+    modeled_atomic!(AtomicUsize, usize);
+
+    macro_rules! modeled_fetch_arith {
+        ($name:ident, $ty:ty) => {
+            impl $name {
+                pub fn fetch_add(&self, v: $ty, _order: Ordering) -> $ty {
+                    rt::schedule_point();
+                    let old = self.get();
+                    self.set(old.wrapping_add(v));
+                    old
+                }
+
+                pub fn fetch_sub(&self, v: $ty, _order: Ordering) -> $ty {
+                    rt::schedule_point();
+                    let old = self.get();
+                    self.set(old.wrapping_sub(v));
+                    old
+                }
+
+                pub fn fetch_max(&self, v: $ty, _order: Ordering) -> $ty {
+                    rt::schedule_point();
+                    let old = self.get();
+                    self.set(old.max(v));
+                    old
+                }
+            }
+        };
+    }
+
+    modeled_fetch_arith!(AtomicU64, u64);
+    modeled_fetch_arith!(AtomicUsize, usize);
+}

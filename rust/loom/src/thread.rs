@@ -1,0 +1,66 @@
+//! Modeled threads: `spawn` / `Builder` / `JoinHandle` / `yield_now`,
+//! mirroring the `std::thread` surface the facade re-exports. Spawned
+//! closures become scheduler-controlled model threads; `join` is a
+//! blocking scheduling point that propagates panics like std.
+
+use crate::rt;
+use std::sync::{Arc, Mutex};
+
+pub struct JoinHandle<T> {
+    tid: usize,
+    result: Arc<Mutex<Option<std::thread::Result<T>>>>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        rt::take_result(self.tid, &self.result)
+    }
+}
+
+impl<T> std::fmt::Debug for JoinHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JoinHandle").field("tid", &self.tid).finish()
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (tid, result) = rt::spawn_thread(None, f);
+    JoinHandle { tid, result }
+}
+
+/// Cooperatively deprioritize the calling thread: it is rescheduled only
+/// when no other thread is runnable. This is what bounds modeled spin
+/// loops (`thread::sleep` maps here under `cfg(loom)`).
+pub fn yield_now() {
+    rt::yield_now();
+}
+
+#[derive(Default)]
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Builder::default()
+    }
+
+    pub fn name(mut self, name: String) -> Self {
+        self.name = Some(name);
+        self
+    }
+
+    /// Never fails (the io::Result return mirrors std's signature).
+    pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (tid, result) = rt::spawn_thread(self.name, f);
+        Ok(JoinHandle { tid, result })
+    }
+}

@@ -153,14 +153,21 @@ impl SimdBackend {
         assert_eq!(a.len(), b.len());
         assert!(!a.is_empty());
         match self {
+            // SAFETY: the match guard just probed avx512f+avx512vpopcntdq
+            // on this CPU, and the asserts above pin a.len() == b.len() >= 1
+            // (the unmasked call passes `a` for the unread `v` operand).
             #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
             SimdBackend::Avx512 if avx512_available() => unsafe {
                 xnor_popcount_avx512::<false>(a, a, b, tail)
             },
+            // SAFETY: the match guard just probed AVX2 on this CPU, and the
+            // asserts above pin a.len() == b.len() >= 1.
             #[cfg(target_arch = "x86_64")]
             SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
                 xnor_popcount_avx2::<false>(a, a, b, tail)
             },
+            // SAFETY: NEON is architecturally guaranteed on aarch64; the
+            // asserts above pin a.len() == b.len() >= 1.
             #[cfg(target_arch = "aarch64")]
             SimdBackend::Neon => unsafe { xnor_popcount_neon::<false>(a, a, b, tail) },
             _ => xnor_popcount_portable_impl::<false>(a, a, b, tail),
@@ -177,14 +184,21 @@ impl SimdBackend {
         assert_eq!(a.len(), v.len());
         assert!(!a.is_empty());
         match self {
+            // SAFETY: the match guard just probed avx512f+avx512vpopcntdq
+            // on this CPU, and the asserts above pin
+            // a.len() == b.len() == v.len() >= 1.
             #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
             SimdBackend::Avx512 if avx512_available() => unsafe {
                 xnor_popcount_avx512::<true>(a, v, b, tail)
             },
+            // SAFETY: the match guard just probed AVX2 on this CPU, and the
+            // asserts above pin a.len() == b.len() == v.len() >= 1.
             #[cfg(target_arch = "x86_64")]
             SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
                 xnor_popcount_avx2::<true>(a, v, b, tail)
             },
+            // SAFETY: NEON is architecturally guaranteed on aarch64; the
+            // asserts above pin a.len() == b.len() == v.len() >= 1.
             #[cfg(target_arch = "aarch64")]
             SimdBackend::Neon => unsafe { xnor_popcount_neon::<true>(a, v, b, tail) },
             _ => xnor_popcount_portable_impl::<true>(a, v, b, tail),
@@ -215,8 +229,11 @@ impl SimdBackend {
         }
     }
 
-    /// Masked hot-path variant; same safety contract as
-    /// [`Self::xnor_popcount_unchecked`] plus `v.len() == a.len()`.
+    /// Masked hot-path variant of [`Self::xnor_popcount_masked`].
+    ///
+    /// # Safety
+    /// Same contract as [`Self::xnor_popcount_unchecked`], plus
+    /// `v.len() == a.len()`.
     #[inline]
     pub(crate) unsafe fn xnor_popcount_masked_unchecked(
         self,
@@ -300,12 +317,14 @@ fn xnor_popcount_portable_impl<const MASKED: bool>(
 // AVX-512: vpopcntq hardware popcount (avx512vpopcntdq)
 // ---------------------------------------------------------------------------
 
-/// Safety: caller must ensure `avx512f` **and** `avx512vpopcntdq` are
-/// available (the safe wrappers gate on [`avx512_available`]) and
-/// `a.len() == b.len() == v.len() >= 1`.
-///
 /// Compiled only when `rust/build.rs` found rustc ≥ 1.89 (the
 /// stabilization release of the AVX-512 intrinsics); see the module docs.
+///
+/// # Safety
+/// Caller must ensure `avx512f` **and** `avx512vpopcntdq` are available
+/// (the safe wrappers gate on [`avx512_available`]) and
+/// `a.len() == b.len() == v.len() >= 1` — the loads past the slice heads
+/// are raw and unchecked.
 #[cfg(all(target_arch = "x86_64", bdnn_avx512))]
 #[target_feature(enable = "avx512f,avx512vpopcntdq")]
 unsafe fn xnor_popcount_avx512<const MASKED: bool>(
@@ -351,8 +370,10 @@ unsafe fn xnor_popcount_avx512<const MASKED: bool>(
 // AVX2: Muła vpshufb nibble-LUT popcount
 // ---------------------------------------------------------------------------
 
-/// Safety: caller must ensure AVX2 is available (the safe wrappers gate on
-/// `is_x86_feature_detected!`) and `a.len() == b.len() == v.len() >= 1`.
+/// # Safety
+/// Caller must ensure AVX2 is available (the safe wrappers gate on
+/// `is_x86_feature_detected!`) and `a.len() == b.len() == v.len() >= 1` —
+/// the loads past the slice heads are raw and unchecked.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn xnor_popcount_avx2<const MASKED: bool>(
@@ -411,8 +432,10 @@ unsafe fn xnor_popcount_avx2<const MASKED: bool>(
 // NEON: vcnt per-byte popcount + widening pairwise adds
 // ---------------------------------------------------------------------------
 
-/// Safety: NEON is architecturally guaranteed on aarch64; caller ensures
-/// `a.len() == b.len() == v.len() >= 1`.
+/// # Safety
+/// NEON is architecturally guaranteed on aarch64 (so the target-feature
+/// precondition always holds); caller ensures
+/// `a.len() == b.len() == v.len() >= 1` — the loads are raw and unchecked.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn xnor_popcount_neon<const MASKED: bool>(

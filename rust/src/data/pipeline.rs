@@ -7,9 +7,9 @@
 //! testbed this mostly hides the gather/copy cost, not synthesis (which is
 //! done once up front).
 
-use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use crate::util::sync::mpsc::{sync_channel, Receiver};
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::Arc;
 
 use super::{BatchIter, Dataset};
 use crate::util::Pcg32;
@@ -42,7 +42,7 @@ impl Prefetcher {
         depth: usize,
     ) -> Self {
         let (tx, rx) = sync_channel(depth.max(1));
-        let handle = std::thread::spawn(move || {
+        let handle = thread::spawn(move || {
             let dim = ds.image_dim();
             for epoch in 0..epochs {
                 let mut rng = Pcg32::new(seed, epoch as u64 + 1);

@@ -18,9 +18,12 @@
 //!    finish, queued requests get a `"shutting_down"` error reply, and
 //!    every submitter still receives exactly one reply.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use crate::util::sync::thread;
+use crate::util::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::bitnet::network::PackedNet;
@@ -173,7 +176,7 @@ impl BatcherConfig {
         if self.workers != 0 {
             return self.workers;
         }
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let cores = thread::available_parallelism();
         (cores / engine_threads.max(1)).max(1)
     }
 }
@@ -259,8 +262,8 @@ pub struct Batcher {
     workers: usize,
     submit_timeout: Duration,
     drain_timeout: Duration,
-    coalescer: Option<std::thread::JoinHandle<()>>,
-    worker_handles: Vec<std::thread::JoinHandle<()>>,
+    coalescer: Option<thread::JoinHandle<()>>,
+    worker_handles: Vec<thread::JoinHandle<()>>,
     worker_done_rx: Mutex<Receiver<usize>>,
 }
 
@@ -307,7 +310,7 @@ impl Batcher {
             let stats = stats.clone();
             let done = done_tx.clone();
             let shape = in_shape.clone();
-            let handle = std::thread::Builder::new()
+            let handle = thread::Builder::new()
                 .name(format!("bdnn-{label}-w{w}"))
                 .spawn(move || {
                     run_pool_worker(w, engine, batch_rx, in_dim, shape, stats, done);
@@ -317,7 +320,7 @@ impl Batcher {
         }
         let c_stats = stats.clone();
         let c_stop = stop.clone();
-        let coalescer = std::thread::Builder::new()
+        let coalescer = thread::Builder::new()
             .name(format!("bdnn-{label}-coal"))
             .spawn(move || {
                 run_coalescer(rx, batch_tx, cfg, c_stats, c_stop);
@@ -384,7 +387,7 @@ impl Batcher {
                         return Ok(());
                     }
                     req = r;
-                    std::thread::sleep(Duration::from_micros(200));
+                    thread::sleep(Duration::from_micros(200));
                 }
             }
         }
@@ -392,7 +395,7 @@ impl Batcher {
 
     /// Convenience: submit and wait for the reply (real or error).
     pub fn infer_blocking(&self, id: u64, pixels: Vec<f32>) -> Result<InferReply> {
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let (reply_tx, reply_rx) = channel();
         self.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: reply_tx })
             .ok(); // a rejected submit already sent its error reply
         reply_rx
@@ -511,7 +514,7 @@ fn run_coalescer(
                         break;
                     }
                     batch = b;
-                    std::thread::sleep(Duration::from_micros(200));
+                    thread::sleep(Duration::from_micros(200));
                 }
                 Err(TrySendError::Disconnected(b)) => {
                     for r in b.requests {
@@ -698,7 +701,7 @@ mod tests {
         let mut handles = Vec::new();
         for i in 0..24u64 {
             let b2 = b.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(thread::spawn(move || {
                 let mut r = Pcg32::seeded(i);
                 b2.infer_blocking(i, (0..12).map(|_| r.normal()).collect()).unwrap()
             }));
@@ -762,7 +765,7 @@ mod tests {
         assert_eq!(b.stats.worker_flushes().len(), 3);
         drop(b);
         let auto = Batcher::spawn(net, dim, shape, BatcherConfig::default());
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let cores = thread::available_parallelism();
         assert!(auto.workers() >= 1 && auto.workers() <= cores);
     }
 

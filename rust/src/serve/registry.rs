@@ -17,8 +17,9 @@
 //! request routes to them.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{thread, Arc};
 
 use super::batcher::{Batcher, BatcherConfig, InferEngine, InferReply};
 use crate::bitnet::network::PackedNet;
@@ -177,7 +178,7 @@ impl Registry {
             return Err(BdnnError::Runtime("registry needs at least one model".into()));
         }
         let budget: Vec<usize> = if cfg.workers == 0 {
-            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let cores = thread::available_parallelism();
             let threads: Vec<usize> =
                 entries.iter().map(|e| e.engine.infer_parallelism()).collect();
             divide_workers(cores, &threads)
@@ -352,7 +353,7 @@ mod tests {
     fn auto_workers_divide_cores_across_shards() {
         let cfg = BatcherConfig::default(); // workers: 0 = auto
         let r = Registry::spawn(vec![entry("a", 1.0, 1), entry("b", 2.0, 1)], cfg).unwrap();
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let cores = thread::available_parallelism();
         let total: usize = r.iter().map(|s| s.batcher.workers()).sum();
         assert!(total <= cores.max(2), "pools oversubscribe: {total} workers, {cores} cores");
         for s in r.iter() {

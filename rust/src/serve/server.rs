@@ -24,9 +24,11 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::mpsc::channel;
+use crate::util::sync::{thread, Arc};
 
 use super::batcher::{Batcher, BatcherConfig, InferRequest};
 use super::registry::{ModelEntry, ModelShard, Registry, ERR_UNKNOWN_MODEL};
@@ -52,7 +54,7 @@ impl Default for ServeConfig {
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    accept_thread: Option<thread::JoinHandle<()>>,
     /// The default shard's batcher — the whole pool on a single-model
     /// server (kept as a field for PR 3 callers and tests).
     pub batcher: Arc<Batcher>,
@@ -100,7 +102,7 @@ pub fn serve_registry(registry: Arc<Registry>, addr: &str) -> Result<Server> {
     let stop = Arc::new(AtomicBool::new(false));
     let accept_stop = stop.clone();
     let accept_registry = registry.clone();
-    let accept_thread = std::thread::spawn(move || {
+    let accept_thread = thread::spawn(move || {
         for stream in listener.incoming() {
             if accept_stop.load(Ordering::SeqCst) {
                 return;
@@ -108,7 +110,7 @@ pub fn serve_registry(registry: Arc<Registry>, addr: &str) -> Result<Server> {
             match stream {
                 Ok(s) => {
                     let r = accept_registry.clone();
-                    std::thread::spawn(move || {
+                    thread::spawn(move || {
                         let _ = handle_connection(s, r);
                     });
                 }
@@ -124,7 +126,7 @@ pub fn serve_registry(registry: Arc<Registry>, addr: &str) -> Result<Server> {
 /// resolved kernel rung, plus the shard's model name (field reference:
 /// `docs/SERVING.md`).
 fn shard_stats(shard: &ModelShard) -> BTreeMap<String, Json> {
-    use std::sync::atomic::Ordering::Relaxed;
+    use Ordering::Relaxed;
     let batcher = &shard.batcher;
     let s = &batcher.stats;
     let mut obj = BTreeMap::new();
@@ -166,7 +168,7 @@ fn shard_stats(shard: &ModelShard) -> BTreeMap<String, Json> {
 /// identical, so old consumers keep working); `"shards"` nests each
 /// shard's own section and `"unknown_model"` counts misrouted requests.
 fn rollup_stats(registry: &Registry) -> String {
-    use std::sync::atomic::Ordering::Relaxed;
+    use Ordering::Relaxed;
     let mut obj = BTreeMap::new();
     let mut requests = 0u64;
     let mut batches = 0u64;
@@ -258,7 +260,7 @@ fn handle_connection(stream: TcpStream, registry: Arc<Registry>) -> Result<()> {
             Ok(j) => match parse_request(&j) {
                 Ok((id, model, pixels)) => match registry.route(model.as_deref()) {
                     Ok(shard) => {
-                        let (tx, rx) = std::sync::mpsc::channel();
+                        let (tx, rx) = channel();
                         shard.batcher.submit(InferRequest {
                             id,
                             pixels,
@@ -500,7 +502,7 @@ mod tests {
         let addr = server.local_addr;
         let mut handles = Vec::new();
         for i in 0..6u64 {
-            handles.push(std::thread::spawn(move || {
+            handles.push(thread::spawn(move || {
                 let mut conn = TcpStream::connect(addr).unwrap();
                 let mut r = Pcg32::seeded(i);
                 let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();

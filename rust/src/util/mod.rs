@@ -1,8 +1,10 @@
-//! Small shared substrates: PRNGs, timers, running statistics, SHA-256.
+//! Small shared substrates: PRNGs, timers, running statistics, SHA-256,
+//! and the model-checkable sync facade.
 
 pub mod rng;
 pub mod sha256;
 pub mod stats;
+pub mod sync;
 pub mod timer;
 
 pub use rng::{Pcg32, SplitMix64};

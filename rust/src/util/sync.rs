@@ -1,0 +1,355 @@
+//! Model-checkable synchronization facade.
+//!
+//! Every thread/sync primitive the serve layer (and the data-pipeline
+//! prefetcher) touches is imported from here instead of `std` directly.
+//! Normally the re-exports *are* the `std` types — zero cost, identical
+//! behavior. Under `RUSTFLAGS="--cfg loom"` they swap to the vendored
+//! `loom` model checker (`rust/loom/`), whose scheduler explores thread
+//! interleavings exhaustively (within a preemption bound); see
+//! `rust/tests/loom_batcher.rs` and `docs/ANALYSIS.md`.
+//!
+//! The `cargo xtask lint` facade rule enforces the discipline: inside
+//! `src/serve/` any direct `std::sync`/`std::thread` use is an error, and
+//! repo-wide the threading primitives (`spawn`, `Builder`, `mpsc`,
+//! `Mutex`, `Condvar`) may only appear here and in the sanctioned
+//! `bitnet/gemm.rs` `std::thread::scope` rung.
+//!
+//! # Modeling rules under `cfg(loom)`
+//!
+//! - `thread::sleep` becomes `yield_now`: the sleeping thread is
+//!   deprioritized (scheduled only when nothing else is runnable), which
+//!   bounds backoff spin loops without erasing their schedules.
+//! - `mpsc::Receiver::recv_timeout` with a **zero** duration acts like
+//!   `try_recv` (returns `Timeout` immediately when empty); with a
+//!   **nonzero** duration it blocks indefinitely, like `recv`. Timeouts
+//!   as wall-clock events would make models nondeterministic, so models
+//!   pick the path they want to explore via the config (e.g.
+//!   `submit_timeout: Duration::ZERO` deterministically exercises the
+//!   bounded-submit timeout path).
+//! - `thread::available_parallelism()` returns a fixed 2 so worker
+//!   budgets are deterministic.
+//! - Atomics are sequentially consistent regardless of the `Ordering`
+//!   argument (loom-lite does not model weak memory; TSan covers that
+//!   axis in CI).
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+pub mod atomic {
+    //! Atomics behind the facade: `std::sync::atomic` normally, modeled
+    //! sequentially-consistent atomics under `cfg(loom)`.
+
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+pub mod thread {
+    //! Threading behind the facade: `std::thread` normally, scheduler-
+    //! controlled model threads under `cfg(loom)`.
+
+    #[cfg(not(loom))]
+    pub use std::thread::{sleep, spawn, yield_now, Builder, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, Builder, JoinHandle};
+
+    /// Under loom, sleeping maps to cooperative deprioritization: the
+    /// model has no clock, and a backoff sleep's only schedule-visible
+    /// effect is "let everyone else run first".
+    #[cfg(loom)]
+    pub fn sleep(_d: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+
+    /// Logical core count with the `NonZeroUsize`/error plumbing already
+    /// resolved: callers get a plain `usize >= 1`.
+    #[cfg(not(loom))]
+    pub fn available_parallelism() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Fixed parallelism under loom so worker budgets (and therefore the
+    /// explored state space) are deterministic.
+    #[cfg(loom)]
+    pub fn available_parallelism() -> usize {
+        2
+    }
+}
+
+#[cfg(not(loom))]
+pub mod mpsc {
+    //! Channels behind the facade: `std::sync::mpsc` re-exported as-is.
+
+    pub use std::sync::mpsc::{
+        channel, sync_channel, Receiver, RecvError, RecvTimeoutError, SendError, Sender,
+        SyncSender, TryRecvError, TrySendError,
+    };
+}
+
+#[cfg(loom)]
+pub mod mpsc {
+    //! Loom-backed mpsc channels with the `std::sync::mpsc` API surface
+    //! the serve layer uses. Built on the modeled `Mutex`/`Condvar`, so
+    //! every send/recv is a scheduling point. See the module docs for the
+    //! `recv_timeout` modeling rule (zero = `try_recv`, nonzero = block).
+
+    use super::{Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
+    use std::fmt;
+    use std::time::Duration;
+
+    pub struct SendError<T>(pub T);
+
+    impl<T> fmt::Debug for SendError<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("SendError(..)")
+        }
+    }
+
+    pub enum TrySendError<T> {
+        Full(T),
+        Disconnected(T),
+    }
+
+    impl<T> fmt::Debug for TrySendError<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self {
+                TrySendError::Full(_) => f.write_str("Full(..)"),
+                TrySendError::Disconnected(_) => f.write_str("Disconnected(..)"),
+            }
+        }
+    }
+
+    #[derive(Debug, PartialEq, Eq)]
+    pub struct RecvError;
+
+    #[derive(Debug, PartialEq, Eq)]
+    pub enum TryRecvError {
+        Empty,
+        Disconnected,
+    }
+
+    #[derive(Debug, PartialEq, Eq)]
+    pub enum RecvTimeoutError {
+        Timeout,
+        Disconnected,
+    }
+
+    struct State<T> {
+        q: VecDeque<T>,
+        /// `None` for the unbounded `channel()` flavor.
+        cap: Option<usize>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Chan<T> {
+        state: Mutex<State<T>>,
+        recv_cv: Condvar,
+        send_cv: Condvar,
+    }
+
+    impl<T> Chan<T> {
+        fn new(cap: Option<usize>) -> Arc<Self> {
+            Arc::new(Chan {
+                state: Mutex::new(State {
+                    q: VecDeque::new(),
+                    cap,
+                    senders: 1,
+                    rx_alive: true,
+                }),
+                recv_cv: Condvar::new(),
+                send_cv: Condvar::new(),
+            })
+        }
+    }
+
+    pub struct Sender<T> {
+        ch: Arc<Chan<T>>,
+    }
+
+    pub struct SyncSender<T> {
+        ch: Arc<Chan<T>>,
+    }
+
+    pub struct Receiver<T> {
+        ch: Arc<Chan<T>>,
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let ch = Chan::new(None);
+        (Sender { ch: Arc::clone(&ch) }, Receiver { ch })
+    }
+
+    pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+        let ch = Chan::new(Some(cap));
+        (SyncSender { ch: Arc::clone(&ch) }, Receiver { ch })
+    }
+
+    fn clone_sender<T>(ch: &Arc<Chan<T>>) -> Arc<Chan<T>> {
+        ch.state.lock().unwrap().senders += 1;
+        Arc::clone(ch)
+    }
+
+    fn drop_sender<T>(ch: &Arc<Chan<T>>) {
+        let mut s = ch.state.lock().unwrap();
+        s.senders -= 1;
+        if s.senders == 0 {
+            // Receivers parked in recv() must observe the disconnect.
+            ch.recv_cv.notify_all();
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            Sender {
+                ch: clone_sender(&self.ch),
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.ch);
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            SyncSender {
+                ch: clone_sender(&self.ch),
+            }
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.ch);
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut s = self.ch.state.lock().unwrap();
+            s.rx_alive = false;
+            // Senders parked on a full queue must observe the hangup.
+            self.ch.send_cv.notify_all();
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut s = self.ch.state.lock().unwrap();
+            if !s.rx_alive {
+                return Err(SendError(t));
+            }
+            s.q.push_back(t);
+            self.ch.recv_cv.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            let mut s = self.ch.state.lock().unwrap();
+            if !s.rx_alive {
+                return Err(TrySendError::Disconnected(t));
+            }
+            if let Some(cap) = s.cap {
+                if s.q.len() >= cap {
+                    return Err(TrySendError::Full(t));
+                }
+            }
+            s.q.push_back(t);
+            self.ch.recv_cv.notify_one();
+            Ok(())
+        }
+
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut s = self.ch.state.lock().unwrap();
+            loop {
+                if !s.rx_alive {
+                    return Err(SendError(t));
+                }
+                let full = s.cap.map(|c| s.q.len() >= c).unwrap_or(false);
+                if !full {
+                    s.q.push_back(t);
+                    self.ch.recv_cv.notify_one();
+                    return Ok(());
+                }
+                s = self.ch.send_cv.wait(s).unwrap();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut s = self.ch.state.lock().unwrap();
+            loop {
+                if let Some(t) = s.q.pop_front() {
+                    // A slot freed: wake one parked bounded sender.
+                    self.ch.send_cv.notify_one();
+                    return Ok(t);
+                }
+                if s.senders == 0 {
+                    return Err(RecvError);
+                }
+                s = self.ch.recv_cv.wait(s).unwrap();
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut s = self.ch.state.lock().unwrap();
+            if let Some(t) = s.q.pop_front() {
+                self.ch.send_cv.notify_one();
+                return Ok(t);
+            }
+            if s.senders == 0 {
+                return Err(TryRecvError::Disconnected);
+            }
+            Err(TryRecvError::Empty)
+        }
+
+        /// Zero duration behaves like `try_recv` (immediate `Timeout` when
+        /// empty); nonzero blocks like `recv`. See the facade module docs.
+        pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+            if timeout.is_zero() {
+                match self.try_recv() {
+                    Ok(t) => Ok(t),
+                    Err(TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
+                    Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+                }
+            } else {
+                self.recv().map_err(|RecvError| RecvTimeoutError::Disconnected)
+            }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_parallelism_is_at_least_one() {
+        assert!(thread::available_parallelism() >= 1);
+    }
+
+    #[test]
+    fn facade_is_std_outside_loom() {
+        // The re-exports must be the real std types so the serve layer
+        // interoperates with std channels held by callers/tests.
+        let (tx, rx): (mpsc::Sender<u32>, _) = std::sync::mpsc::channel();
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv().unwrap(), 7);
+        let _arc: Arc<u8> = std::sync::Arc::new(3);
+    }
+}

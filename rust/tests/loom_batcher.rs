@@ -1,0 +1,289 @@
+//! Model-checked concurrency tests for the serve pool, run under the
+//! vendored loom-lite scheduler (`rust/loom/`):
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_batcher
+//! ```
+//!
+//! Under plain `cargo test` this file compiles to nothing (`cfg(loom)`),
+//! and under `--cfg loom` the `bdnn::util::sync` facade swaps every
+//! primitive the batcher/registry touch for its modeled twin, so the
+//! scheduler explores the interleavings exhaustively within a preemption
+//! bound (blocking context switches are always free; see
+//! `rust/loom/src/lib.rs` and `docs/ANALYSIS.md`).
+//!
+//! Determinism ground rules for these models (the scheduler asserts
+//! replay determinism, so wall-clock branches are config'd away):
+//!
+//! * `max_batch: 1` — the coalesce loop never consults the deadline;
+//! * `submit_timeout: Duration::ZERO` — a full queue answers
+//!   [`ERR_SUBMIT_TIMEOUT`] deterministically on the first `Full`;
+//! * `drain_timeout` stays large — under loom a nonzero `recv_timeout`
+//!   blocks like `recv`, so the drain waits for the worker-done messages
+//!   (which always arrive: workers exit when the batch channel closes).
+
+#![cfg(loom)]
+
+use bdnn::error::Result as BdnnResult;
+use bdnn::serve::{
+    Batcher, BatcherConfig, InferEngine, InferRequest, ModelEntry, Registry,
+    ERR_SHUTTING_DOWN, ERR_SUBMIT_TIMEOUT,
+};
+use bdnn::tensor::Tensor;
+use bdnn::util::sync::mpsc::{channel, Receiver};
+use bdnn::util::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Fixed-logits engine: row r gets logits [0, 1), so `pred == 1` always.
+struct ConstEngine {
+    classes: usize,
+}
+
+impl InferEngine for ConstEngine {
+    fn infer_batch(&self, x: &Tensor) -> BdnnResult<Tensor> {
+        let rows = x.shape()[0];
+        let mut data = vec![0.0; rows * self.classes];
+        for r in 0..rows {
+            data[r * self.classes + 1] = 1.0;
+        }
+        Ok(Tensor::new(&[rows, self.classes], data))
+    }
+}
+
+/// A gate the model opens explicitly: `infer_batch` blocks (on modeled
+/// primitives, so the scheduler sees the block) until `open` is called.
+/// This is the loom twin of the hung-engine fixture in
+/// `rust/tests/serve_pool_stress.rs`.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Self> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn wait_open(&self) {
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+struct HungEngine {
+    gate: Arc<Gate>,
+}
+
+impl InferEngine for HungEngine {
+    fn infer_batch(&self, x: &Tensor) -> BdnnResult<Tensor> {
+        self.gate.wait_open();
+        let rows = x.shape()[0];
+        let mut data = vec![0.0; rows * 2];
+        for r in 0..rows {
+            data[r * 2 + 1] = 1.0;
+        }
+        Ok(Tensor::new(&[rows, 2], data))
+    }
+}
+
+/// Deterministic model config: see the file docs for why these values.
+fn model_cfg(queue_depth: usize, workers: usize) -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_depth,
+        workers,
+        submit_timeout: Duration::ZERO,
+        drain_timeout: Duration::from_secs(60),
+    }
+}
+
+fn request(id: u64) -> (InferRequest, Receiver<bdnn::serve::InferReply>) {
+    let (tx, rx) = channel();
+    (InferRequest { id, pixels: vec![0.5], enqueued: Instant::now(), reply: tx }, rx)
+}
+
+/// Exactly-once check: the reply channel holds one message, then closes.
+fn take_single_reply(rx: &Receiver<bdnn::serve::InferReply>) -> bdnn::serve::InferReply {
+    let reply = rx.try_recv().expect("request got no reply");
+    assert!(rx.try_recv().is_err(), "request got a second reply");
+    reply
+}
+
+fn builder(preemption_bound: usize) -> loom::Builder {
+    let mut b = loom::Builder::new();
+    b.preemption_bound = Some(preemption_bound);
+    b
+}
+
+/// Seal → pickup → reply → drain, fully explored: a single request must
+/// come back as a real prediction in every schedule, and shutdown must
+/// complete (the scheduler turns a hang into a deadlock failure).
+#[test]
+fn loom_single_request_roundtrip() {
+    builder(2).check(|| {
+        let b = Batcher::spawn(
+            Arc::new(ConstEngine { classes: 3 }),
+            1,
+            vec![1],
+            model_cfg(1, 1),
+        );
+        let (req, rx) = request(7);
+        b.submit(req).unwrap();
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.id, 7);
+        assert_eq!(reply.error, None, "single request must get a real reply");
+        assert_eq!(reply.pred, 1);
+        assert_eq!(reply.logits.len(), 3);
+        drop(b);
+        assert!(rx.try_recv().is_err(), "no duplicate reply after drain");
+    });
+}
+
+/// Two concurrent submitters, two pool workers: every request is answered
+/// exactly once with a real prediction, across all explored interleavings
+/// of the shared batch-channel pickup (`Mutex<Receiver>` handoff).
+#[test]
+fn loom_concurrent_submitters_exactly_once() {
+    builder(1).check(|| {
+        let b = Arc::new(Batcher::spawn(
+            Arc::new(ConstEngine { classes: 2 }),
+            1,
+            vec![1],
+            model_cfg(2, 2),
+        ));
+        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
+        for id in 0..2u64 {
+            let (req, rx) = request(id);
+            rxs.push(rx);
+            let b2 = Arc::clone(&b);
+            handles.push(loom::thread::spawn(move || {
+                b2.submit(req).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // no shutdown has started, so both replies must be real
+        for (id, rx) in rxs.iter().enumerate() {
+            let reply = rx.recv().unwrap();
+            assert_eq!(reply.id, id as u64);
+            assert_eq!(reply.error, None, "request {id} errored: {:?}", reply.error);
+            assert_eq!(reply.pred, 1);
+        }
+        drop(b);
+        for rx in &rxs {
+            assert!(rx.try_recv().is_err(), "duplicate reply after drain");
+        }
+    });
+}
+
+/// `shutdown` racing a concurrent submit: whichever side wins, the
+/// request gets exactly one reply — a real prediction if it slipped in
+/// before the stop flag, [`ERR_SHUTTING_DOWN`] otherwise. Never silence,
+/// never two replies.
+#[test]
+fn loom_shutdown_races_submit() {
+    builder(2).check(|| {
+        let b = Arc::new(Batcher::spawn(
+            Arc::new(ConstEngine { classes: 2 }),
+            1,
+            vec![1],
+            model_cfg(1, 1),
+        ));
+        let (req, rx) = request(3);
+        let b2 = Arc::clone(&b);
+        let submitter = loom::thread::spawn(move || {
+            let _ = b2.submit(req);
+        });
+        b.shutdown();
+        submitter.join().unwrap();
+        drop(b);
+        let reply = take_single_reply(&rx);
+        assert_eq!(reply.id, 3);
+        match reply.error.as_deref() {
+            None => assert_eq!(reply.pred, 1),
+            Some(ERR_SHUTTING_DOWN) => assert_eq!(reply.pred, usize::MAX),
+            Some(other) => panic!("unexpected reply error during shutdown race: {other}"),
+        }
+    });
+}
+
+/// Regression model for the PR 3 hung-worker deadlock: with a worker
+/// wedged inside the engine and every buffer full, a bounded submit
+/// (`submit_timeout`) must answer [`ERR_SUBMIT_TIMEOUT`] instead of
+/// blocking the acceptor forever.
+///
+/// Capacity argument making the assertion schedule-independent: with
+/// `queue_depth = 1`, `max_batch = 1` and one worker held by the gate, at
+/// most 4 requests can be absorbed without a timeout reply (1 in the
+/// engine + 1 sealed in the batch channel + 1 in the coalescer's hand +
+/// 1 in the submit queue), so 5 sequential submits force at least one
+/// timeout in *every* schedule. Before the bounded submit existed, this
+/// model deadlocked (the scheduler reports it as a failure).
+#[test]
+fn loom_bounded_submit_survives_hung_worker() {
+    builder(1).check(|| {
+        let gate = Gate::new();
+        let b = Batcher::spawn(
+            Arc::new(HungEngine { gate: Arc::clone(&gate) }),
+            1,
+            vec![1],
+            model_cfg(1, 1),
+        );
+        let mut rxs = Vec::new();
+        for id in 0..5u64 {
+            let (req, rx) = request(id);
+            rxs.push(rx);
+            b.submit(req).unwrap(); // never blocks: timeout path is bounded
+        }
+        gate.open(); // un-wedge the worker so the drain can finish
+        drop(b);
+        let mut timeouts = 0u64;
+        for (id, rx) in rxs.iter().enumerate() {
+            let reply = take_single_reply(rx);
+            assert_eq!(reply.id, id as u64);
+            match reply.error.as_deref() {
+                None => assert_eq!(reply.pred, 1),
+                Some(ERR_SUBMIT_TIMEOUT) => timeouts += 1,
+                Some(ERR_SHUTTING_DOWN) => {} // stranded in a queue at drop
+                Some(other) => panic!("unexpected reply error: {other}"),
+            }
+        }
+        assert!(
+            (1..=4).contains(&timeouts),
+            "pigeonhole: 5 submits into 4 slots must time out 1-4 times, got {timeouts}"
+        );
+    });
+}
+
+/// Two-shard registry drain: per-shard isolation means a full
+/// submit → reply round trip on each shard, then `shutdown` + drop must
+/// complete with both pools joined (a cross-shard entanglement would
+/// surface as a deadlock here).
+#[test]
+fn loom_registry_two_shard_drain() {
+    builder(1).check(|| {
+        let entries = vec![
+            ModelEntry::from_engine("a", 1, vec![1], Arc::new(ConstEngine { classes: 2 })),
+            ModelEntry::from_engine("b", 1, vec![1], Arc::new(ConstEngine { classes: 2 })),
+        ];
+        let r = Registry::spawn(entries, model_cfg(1, 1)).unwrap();
+        let ra = r.infer_blocking(Some("a"), 1, vec![0.5]).unwrap();
+        assert_eq!((ra.id, ra.pred, ra.error), (1, 1, None));
+        let rb = r.infer_blocking(Some("b"), 2, vec![0.5]).unwrap();
+        assert_eq!((rb.id, rb.pred, rb.error), (2, 1, None));
+        r.shutdown();
+        let rejected = r.infer_blocking(None, 3, vec![0.5]).unwrap();
+        assert_eq!(rejected.error.as_deref(), Some(ERR_SHUTTING_DOWN));
+        drop(r); // both shards' drains must complete (else: deadlock report)
+    });
+}

@@ -1,0 +1,676 @@
+//! Repo automation tasks (`cargo xtask <task>`), following the cargo
+//! xtask convention: a tiny in-workspace binary instead of shell scripts,
+//! so the checks run identically on every machine and in CI.
+//!
+//! The only task so far is `lint` — the in-repo invariant linter
+//! (`docs/ANALYSIS.md` rung 3). It enforces three repo invariants that
+//! rustc/clippy cannot express:
+//!
+//! 1. **unsafe-needs-safety** — every `unsafe` keyword in Rust source
+//!    carries a `// SAFETY:` comment (or a `# Safety` doc heading for
+//!    `unsafe fn` declarations) within the preceding few lines.
+//! 2. **sync-facade** — the serve layer and the data-pipeline prefetcher
+//!    import threads/sync primitives only through `bdnn::util::sync`
+//!    (so the loom models in `rust/tests/loom_batcher.rs` actually cover
+//!    the code that ships), and repo-wide the spawnable/blockable
+//!    primitives (`std::thread::spawn`/`Builder`, `std::sync::mpsc`,
+//!    `std::sync::Mutex`/`Condvar`) appear only inside the facade itself.
+//!    `std::thread::scope` (the GEMM pool), `sleep`,
+//!    `available_parallelism`, `Arc`, atomics and `OnceLock` stay allowed
+//!    everywhere.
+//! 3. **doc-anchors** — every `path/file.ext:line` anchor in the
+//!    maintained docs (`docs/*.md`, `README.md`, `ROADMAP.md`) resolves
+//!    to an existing file with at least that many lines, so doc anchors
+//!    rot loudly instead of silently.
+//!
+//! Exit status: 0 when clean, 1 with one `file:line: [rule] message` per
+//! finding otherwise. The rules are pure functions over file contents —
+//! the unit tests below seed violations and assert they are caught.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = repo_root();
+            let violations = run_lint(&root);
+            for v in &violations {
+                println!("{}", v.render());
+            }
+            if violations.is_empty() {
+                println!("xtask lint: clean");
+                ExitCode::SUCCESS
+            } else {
+                println!("xtask lint: {} violation(s)", violations.len());
+                ExitCode::FAILURE
+            }
+        }
+        Some("--help") | Some("-h") | Some("help") | None => {
+            eprintln!("usage: cargo xtask <task>\n\ntasks:\n  lint   run the repo invariant linter");
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown task '{other}' (try `cargo xtask lint`)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// The workspace root: xtask lives at `<root>/rust/xtask`.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("xtask manifest dir has a workspace root two levels up")
+        .to_path_buf()
+}
+
+#[derive(Debug)]
+struct Violation {
+    /// Repo-relative path.
+    file: String,
+    /// 1-based line.
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl Violation {
+    fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn run_lint(root: &Path) -> Vec<Violation> {
+    let mut violations = Vec::new();
+
+    // Rust sources: R1 everywhere, R2 under rust/src only.
+    for rel in walk_files(&root.join("rust"), "rs") {
+        let rel = format!("rust/{rel}");
+        let src = match std::fs::read_to_string(root.join(&rel)) {
+            Ok(s) => s,
+            Err(e) => {
+                violations.push(Violation {
+                    file: rel.clone(),
+                    line: 1,
+                    rule: "io",
+                    msg: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        let stripped = strip_comments_and_strings(&src);
+        violations.extend(rule_unsafe_safety(&rel, &src, &stripped));
+        violations.extend(rule_sync_facade(&rel, &stripped));
+    }
+
+    // Maintained docs: R3.
+    let mut docs: Vec<String> =
+        walk_files(&root.join("docs"), "md").into_iter().map(|p| format!("docs/{p}")).collect();
+    docs.push("README.md".to_string());
+    docs.push("ROADMAP.md".to_string());
+    for rel in docs {
+        let content = match std::fs::read_to_string(root.join(&rel)) {
+            Ok(s) => s,
+            Err(_) => continue, // optional docs may not exist
+        };
+        violations.extend(rule_doc_anchors(&rel, &content, &|anchor: &str| {
+            let p = root.join(anchor);
+            std::fs::read_to_string(p).ok().map(|s| s.lines().count())
+        }));
+    }
+
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    violations
+}
+
+/// Recursively collect files with extension `ext` under `dir`, returned
+/// as sorted paths relative to `dir` (forward slashes). Skips `target`
+/// and hidden directories.
+fn walk_files(dir: &Path, ext: &str) -> Vec<String> {
+    fn inner(dir: &Path, prefix: &str, ext: &str, out: &mut Vec<String>) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let rel = if prefix.is_empty() { name.to_string() } else { format!("{prefix}/{name}") };
+            let path = entry.path();
+            if path.is_dir() {
+                if name != "target" && !name.starts_with('.') {
+                    inner(&path, &rel, ext, out);
+                }
+            } else if path.extension().is_some_and(|e| e == ext) {
+                out.push(rel);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    inner(dir, "", ext, &mut out);
+    out.sort();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lexing: blank out comments and string contents, preserving line structure
+// ---------------------------------------------------------------------------
+
+/// Replace comment bodies and string/char-literal contents with spaces so
+/// the rules below only ever match real code tokens. Line count and the
+/// column positions of surviving code are preserved. Handles `//` line
+/// comments, (nested) `/* */` block comments, `"…"` strings with escapes,
+/// `r"…"`/`r#"…"#` raw strings, and char literals (without swallowing
+/// lifetimes like `'a`).
+fn strip_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(b.len());
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // line comment
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (rust block comments nest)
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string: r"…" or r#"…"# (any number of #)
+        if c == 'r' && matches!(b.get(i + 1), Some(&'"') | Some(&'#')) {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&'"') {
+                out.push('r');
+                for _ in 0..hashes {
+                    out.push('#');
+                }
+                out.push('"');
+                j += 1;
+                // scan for closing quote followed by `hashes` #'s
+                'raw: while j < b.len() {
+                    if b[j] == '"' {
+                        let mut k = 0;
+                        while k < hashes && b.get(j + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            out.push('"');
+                            for _ in 0..hashes {
+                                out.push('#');
+                            }
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    out.push(blank(b[j]));
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // `r` not starting a raw string (e.g. an identifier): fall through
+        }
+        // ordinary string
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    // escape pair; `\<newline>` is a line continuation, so
+                    // the second char must keep its newline to preserve
+                    // line structure
+                    out.push(' ');
+                    if let Some(&e) = b.get(i + 1) {
+                        out.push(blank(e));
+                    }
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime: a char literal closes with `'` within
+        // a few chars ('x', '\n', '\u{10FFFF}'); a lifetime never closes.
+        if c == '\'' {
+            let mut j = i + 1;
+            if b.get(j) == Some(&'\\') {
+                j += 2; // escape head: \n, \u{…}, \'
+                while j < b.len() && b[j] != '\'' && b[j] != '\n' && j - i < 12 {
+                    j += 1;
+                }
+            } else if j < b.len() {
+                j += 1;
+            }
+            if b.get(j) == Some(&'\'') && j > i + 1 {
+                out.push('\'');
+                for _ in (i + 1)..j {
+                    out.push(' ');
+                }
+                out.push('\'');
+                i = j + 1;
+                continue;
+            }
+            // lifetime (or stray quote): keep as-is
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: unsafe-needs-safety
+// ---------------------------------------------------------------------------
+
+/// Lines of justification-comment lookback above an `unsafe` token.
+const SAFETY_LOOKBACK: usize = 16;
+
+/// Every code occurrence of the `unsafe` keyword must have a `SAFETY:`
+/// comment or a `# Safety` doc heading within the preceding
+/// [`SAFETY_LOOKBACK`] lines (attributes and cfg's in between are fine).
+fn rule_unsafe_safety(file: &str, src: &str, stripped: &str) -> Vec<Violation> {
+    let src_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (idx, line) in stripped.lines().enumerate() {
+        if !has_word(line, "unsafe") {
+            continue;
+        }
+        let lo = idx.saturating_sub(SAFETY_LOOKBACK);
+        let documented = src_lines[lo..=idx.min(src_lines.len() - 1)]
+            .iter()
+            .any(|l| l.contains("SAFETY:") || l.contains("# Safety"));
+        if !documented {
+            out.push(Violation {
+                file: file.to_string(),
+                line: idx + 1,
+                rule: "unsafe-needs-safety",
+                msg: "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc heading) \
+                      in the preceding lines"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Word-boundary substring match (identifier characters delimit words).
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let is_ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: sync-facade
+// ---------------------------------------------------------------------------
+
+/// Files where ANY direct `std::thread`/`std::sync` reference is an error
+/// — the model-checked core must be 100% behind the facade.
+fn facade_strict_scope(file: &str) -> bool {
+    file.starts_with("rust/src/serve/") || file == "rust/src/data/pipeline.rs"
+}
+
+/// Files the repo-wide primitive ban applies to (library code only;
+/// integration tests and benches drive the system from outside the
+/// model-checked boundary and may use std primitives directly).
+fn facade_repo_scope(file: &str) -> bool {
+    file.starts_with("rust/src/") && file != "rust/src/util/sync.rs"
+}
+
+/// Primitives that may only appear inside the facade: everything that
+/// spawns or blocks. (`scope`, `sleep`, `yield_now`,
+/// `available_parallelism`, `Arc`, atomics and `OnceLock` remain fine.)
+const BANNED_THREAD: &[&str] = &["spawn", "Builder"];
+const BANNED_SYNC: &[&str] = &["mpsc", "Mutex", "Condvar"];
+
+fn rule_sync_facade(file: &str, stripped: &str) -> Vec<Violation> {
+    let strict = facade_strict_scope(file);
+    if !strict && !facade_repo_scope(file) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, line) in stripped.lines().enumerate() {
+        for (root, banned) in [("std::thread", BANNED_THREAD), ("std::sync", BANNED_SYNC)] {
+            let Some(pos) = line.find(root) else { continue };
+            if strict {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: "sync-facade",
+                    msg: format!(
+                        "direct `{root}` use in the model-checked core; import it \
+                         through `crate::util::sync` so the loom models cover it"
+                    ),
+                });
+                break;
+            }
+            // Repo scope: only the spawn/block primitives are banned, in
+            // both path form (std::sync::Mutex) and grouped-import form
+            // (use std::sync::{Arc, Mutex}).
+            let rest = &line[pos + root.len()..];
+            let rest = rest.strip_prefix("::").unwrap_or(rest);
+            let group = rest.strip_prefix('{').map(|g| g.split('}').next().unwrap_or(g));
+            let hit = banned.iter().find(|b| match group {
+                Some(g) => g.split(',').any(|m| m.trim() == **b),
+                None => rest.starts_with(**b),
+            });
+            if let Some(b) = hit {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: "sync-facade",
+                    msg: format!(
+                        "`{root}::{b}` outside `rust/src/util/sync.rs`; thread/channel \
+                         primitives live behind the facade (gemm's `std::thread::scope` \
+                         pool is the sanctioned exception)"
+                    ),
+                });
+            } else if rest.starts_with('*') {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: "sync-facade",
+                    msg: format!("wildcard `{root}::*` import defeats the facade lint"),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: doc-anchors
+// ---------------------------------------------------------------------------
+
+/// Extensions a `path:line` anchor may point at.
+const ANCHOR_EXTS: &[&str] = &["rs", "py", "toml", "md", "yml", "yaml", "sh"];
+
+/// Every `dir/file.ext:NN` anchor in a maintained doc must resolve:
+/// the file exists (relative to the repo root) and has ≥ NN lines.
+/// `line_count` abstracts the filesystem so tests can inject fakes.
+fn rule_doc_anchors(
+    file: &str,
+    content: &str,
+    line_count: &dyn Fn(&str) -> Option<usize>,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (idx, line) in content.lines().enumerate() {
+        for (path, anchor_line) in find_anchors(line) {
+            match line_count(&path) {
+                None => out.push(Violation {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: "doc-anchors",
+                    msg: format!("anchor `{path}:{anchor_line}` points at a missing file"),
+                }),
+                Some(n) if anchor_line == 0 || anchor_line > n => out.push(Violation {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: "doc-anchors",
+                    msg: format!(
+                        "anchor `{path}:{anchor_line}` is out of range ({path} has {n} lines)"
+                    ),
+                }),
+                Some(_) => {}
+            }
+        }
+    }
+    out
+}
+
+/// Extract `(path, line)` anchors from one line of markdown. A path must
+/// contain a `/` (bare `file.rs:3` is too ambiguous to lint) and end in a
+/// known source extension.
+fn find_anchors(line: &str) -> Vec<(String, usize)> {
+    let is_path_char =
+        |c: char| c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '/' | '-');
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if !is_path_char(chars[i]) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < chars.len() && is_path_char(chars[i]) {
+            i += 1;
+        }
+        let token: String = chars[start..i].iter().collect();
+        // token:NN ?
+        if chars.get(i) != Some(&':') {
+            continue;
+        }
+        let mut j = i + 1;
+        let digits_start = j;
+        while j < chars.len() && chars[j].is_ascii_digit() {
+            j += 1;
+        }
+        if j == digits_start {
+            continue;
+        }
+        let ext_ok = token.rsplit('.').next().is_some_and(|e| ANCHOR_EXTS.contains(&e));
+        if token.contains('/') && token.contains('.') && ext_ok {
+            let n: usize = chars[digits_start..j].iter().collect::<String>().parse().unwrap_or(0);
+            out.push((token, n));
+            i = j;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Seeded-violation tests: the linter must catch what it claims to catch
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_rust(file: &str, src: &str) -> Vec<Violation> {
+        let stripped = strip_comments_and_strings(src);
+        let mut v = rule_unsafe_safety(file, src, &stripped);
+        v.extend(rule_sync_facade(file, &stripped));
+        v
+    }
+
+    #[test]
+    fn stripper_blanks_comments_and_strings_preserving_lines() {
+        let src = "let a = 1; // unsafe here\nlet s = \"std::sync::Mutex\";\n/* unsafe\nblock */ let b = 2;\n";
+        let out = strip_comments_and_strings(src);
+        assert_eq!(out.lines().count(), src.lines().count());
+        assert!(!out.contains("unsafe"));
+        assert!(!out.contains("std::sync"));
+        assert!(out.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_and_char_literals() {
+        let src = "let r = r#\"unsafe \"quoted\" inside\"#;\nlet c = '\"';\nlet q: &'static str = \"x\";\nfn f<'a>(x: &'a u32) {}\n";
+        let out = strip_comments_and_strings(src);
+        assert!(!out.contains("unsafe"));
+        assert!(out.contains("&'static str"), "lifetimes survive: {out}");
+        assert!(out.contains("<'a>"), "generic lifetimes survive: {out}");
+        // the char literal's quote must not open a string that swallows code
+        assert!(out.lines().nth(2).unwrap().contains("let q"));
+    }
+
+    #[test]
+    fn stripper_preserves_string_line_continuations() {
+        // `\` before a newline inside a string continues the literal onto
+        // the next line — the newline must survive blanking
+        let src = "let s = \"first\\\n    second\";\nlet x = 1;\n";
+        let out = strip_comments_and_strings(src);
+        assert_eq!(out.lines().count(), src.lines().count());
+        assert!(out.lines().nth(2).unwrap().contains("let x = 1;"));
+    }
+
+    #[test]
+    fn undocumented_unsafe_is_flagged() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let v = lint_rust("rust/src/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unsafe-needs-safety");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_and_doc_heading_both_satisfy() {
+        let commented = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller validated p\n    unsafe { *p }\n}\n";
+        assert!(lint_rust("rust/src/x.rs", commented).is_empty());
+        let doc = "/// Reads a byte.\n///\n/// # Safety\n/// `p` must be valid.\npub unsafe fn f(p: *const u8) -> u8 {\n    *p\n}\n";
+        assert!(lint_rust("rust/src/x.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_comments_and_strings_is_ignored() {
+        let src = "// this mentions unsafe but is prose\nlet s = \"unsafe\";\n";
+        assert!(lint_rust("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_too_far_above_does_not_count() {
+        let filler = "    let x = 0;\n".repeat(SAFETY_LOOKBACK + 1);
+        let src = format!("// SAFETY: too far away\nfn f(p: *const u8) {{\n{filler}    unsafe {{ let _ = *p; }}\n}}\n");
+        let v = lint_rust("rust/src/x.rs", &src);
+        assert_eq!(v.len(), 1, "{v:?}");
+    }
+
+    #[test]
+    fn serve_layer_rejects_any_direct_std_sync() {
+        let src = "use std::sync::Arc;\n";
+        let v = lint_rust("rust/src/serve/batcher.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "sync-facade");
+        // the same line is fine outside the strict scope (Arc is allowed)
+        assert!(lint_rust("rust/src/coordinator/trainer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pipeline_is_in_the_strict_scope() {
+        let src = "fn go() { std::thread::sleep(std::time::Duration::from_millis(1)); }\n";
+        assert_eq!(lint_rust("rust/src/data/pipeline.rs", src).len(), 1);
+        // sleep is allowed repo-wide outside the strict scope
+        assert!(lint_rust("rust/src/util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn repo_wide_primitive_ban_catches_path_and_grouped_imports() {
+        for src in [
+            "let h = std::thread::spawn(|| {});\n",
+            "use std::thread::Builder;\n",
+            "use std::sync::Mutex;\n",
+            "use std::sync::{Arc, Mutex};\n",
+            "use std::sync::mpsc::channel;\n",
+            "use std::sync::*;\n",
+        ] {
+            let v = lint_rust("rust/src/bitnet/gemm.rs", src);
+            assert_eq!(v.len(), 1, "missed: {src}");
+            assert_eq!(v[0].rule, "sync-facade");
+        }
+    }
+
+    #[test]
+    fn sanctioned_uses_pass_the_repo_ban() {
+        for src in [
+            "std::thread::scope(|s| { let _ = s; });\n", // the GEMM pool
+            "use std::sync::Arc;\n",
+            "use std::sync::atomic::{AtomicU64, Ordering};\n",
+            "static D: std::sync::OnceLock<u32> = std::sync::OnceLock::new();\n",
+            "std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);\n",
+        ] {
+            assert!(lint_rust("rust/src/bitnet/gemm.rs", src).is_empty(), "false positive: {src}");
+        }
+    }
+
+    #[test]
+    fn facade_itself_and_tests_are_exempt() {
+        let src = "pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};\n";
+        assert!(lint_rust("rust/src/util/sync.rs", src).is_empty());
+        assert!(lint_rust("rust/tests/serve_pool_stress.rs", src).is_empty());
+        assert!(lint_rust("rust/loom/src/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_anchor_missing_file_and_overflow_are_flagged() {
+        let counts = |p: &str| match p {
+            "rust/src/lib.rs" => Some(100),
+            _ => None,
+        };
+        let doc = "see rust/src/lib.rs:42 and rust/src/lib.rs:101\nand rust/src/gone.rs:7\n";
+        let v = rule_doc_anchors("docs/X.md", doc, &counts);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].msg.contains("out of range"), "{}", v[0].msg);
+        assert!(v[1].msg.contains("missing file"), "{}", v[1].msg);
+    }
+
+    #[test]
+    fn anchor_extraction_ignores_non_anchors() {
+        assert!(find_anchors("ratio 3:1 and 10:30 timestamps").is_empty());
+        assert!(find_anchors("`kernels/ref.py::ap2` (no line)").is_empty());
+        assert!(find_anchors("bare file.rs:12 has no slash").is_empty());
+        assert!(find_anchors("https://example.com:8080/x").is_empty());
+        assert_eq!(
+            find_anchors("the drain (rust/src/serve/batcher.rs:420) joins"),
+            vec![("rust/src/serve/batcher.rs".to_string(), 420)]
+        );
+        assert_eq!(
+            find_anchors("docs/KERNELS.md:12 and .github/workflows/ci.yml:3"),
+            vec![("docs/KERNELS.md".to_string(), 12), (".github/workflows/ci.yml".to_string(), 3)]
+        );
+    }
+
+    #[test]
+    fn zero_line_anchor_is_out_of_range() {
+        let counts = |_: &str| Some(10);
+        let v = rule_doc_anchors("docs/X.md", "bad rust/src/lib.rs:0 anchor\n", &counts);
+        assert_eq!(v.len(), 1);
+    }
+}
