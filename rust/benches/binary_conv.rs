@@ -13,10 +13,17 @@ fn rand_t(r: &mut Pcg32, shape: &[usize]) -> Tensor {
 }
 
 fn main() {
+    let smoke = bdnn::benchkit::smoke_mode();
     println!("== binary conv2d: float vs packed-XNOR vs dedup plan ==\n");
-    let mut bench = Bench::new(1.0);
+    let mut bench = Bench::new(if smoke { 0.05 } else { 1.0 });
+    if smoke {
+        bench.warmup_iters = 1;
+        bench.max_iters = 3;
+    }
     // (n, hw, cin, cout): stage shapes of the scaled CIFAR net
-    for (n, hw, cin, cout) in [(8usize, 32usize, 32usize, 32usize), (8, 16, 64, 64), (8, 8, 128, 128)] {
+    let shapes = [(8usize, 32usize, 32usize, 32usize), (8, 16, 64, 64), (8, 8, 128, 128)];
+    let shapes = if smoke { &shapes[..1] } else { &shapes[..] };
+    for &(n, hw, cin, cout) in shapes {
         let mut r = Pcg32::seeded(3);
         let x = rand_t(&mut r, &[n, hw, hw, cin]);
         let w = rand_t(&mut r, &[3, 3, cin, cout]);

@@ -13,7 +13,7 @@ fn main() {
     println!("{}", exp::table2("artifacts").unwrap());
     println!("{}", exp::energy("artifacts").unwrap());
 
-    let mut bench = Bench::new(0.5);
+    let mut bench = Bench::new(if bdnn::benchkit::smoke_mode() { 0.05 } else { 0.5 });
     for arch in [paper_mnist_arch(), paper_cifar_arch()] {
         bench.run(&format!("census+pricing {}", arch.name), None, || {
             let c = census_for_arch(black_box(&arch));

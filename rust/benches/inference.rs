@@ -5,17 +5,24 @@
 //! The kernel-ladder section runs on a synthetic random-weight MLP so it
 //! needs no artifacts; the trained-model section still requires
 //! `make artifacts` and is skipped otherwise.
+//!
+//! Every run — including the CI smoke pass (`cargo test --benches`, see
+//! `benchkit::smoke_mode`) — writes `BENCH_inference.json` next to the
+//! cwd: the machine-readable record `cargo xtask bench-report` diffs
+//! against a saved baseline.
 
-use bdnn::benchkit::{gemm_banner, serve_banner, Bench};
+use bdnn::benchkit::{gemm_banner, merge_stats, serve_banner, Bench, BenchRecord};
 use bdnn::bitnet::network::{forward_float, PackedNet, Params};
 use bdnn::config::{GemmConfig, KernelKind, ModelArch, RunConfig};
 use bdnn::coordinator::{load_datasets, MetricsWriter, Trainer};
 use bdnn::data::Dataset;
 use bdnn::serve::{Batcher, BatcherConfig, ModelEntry, Registry};
 use bdnn::tensor::Tensor;
-use bdnn::util::Pcg32;
+use bdnn::util::{Pcg32, RunningStats, Timer};
 use std::hint::black_box;
 use std::sync::Arc;
+
+const SHAPE: &str = "784-2048-2048-10";
 
 /// A paper-scale MLP (784-2048-2048-10) with random weights: the serving
 /// workload shape without needing a training run.
@@ -53,13 +60,20 @@ fn synthetic_mlp() -> (ModelArch, Params) {
 }
 
 fn main() {
+    let smoke = bdnn::benchkit::smoke_mode();
     let (arch, params) = synthetic_mlp();
     let auto = GemmConfig::auto();
     println!(
-        "== serving-path inference ladder (784-2048-2048-10 MLP) ==\n   {}\n",
+        "== serving-path inference ladder ({SHAPE} MLP{}) ==\n   {}\n",
+        if smoke { ", SMOKE pass" } else { "" },
         gemm_banner(&auto)
     );
-    let mut bench = Bench::new(1.0);
+    let mut record = BenchRecord::new("inference", SHAPE, &gemm_banner(&auto), auto.threads);
+    let mut bench = Bench::new(if smoke { 0.05 } else { 1.0 });
+    if smoke {
+        bench.warmup_iters = 1;
+        bench.max_iters = 3;
+    }
     // packing is batch-independent: prepare once per config, reuse across
     // the batch sweep
     let serial = PackedNet::prepare(&arch, &params)
@@ -71,7 +85,10 @@ fn main() {
     let simd = PackedNet::prepare(&arch, &params)
         .unwrap()
         .with_gemm_config(auto.with_kernel(KernelKind::Simd));
-    for batch in [1usize, 16, 64, 256] {
+    // the smoke pass keeps one small and one mid batch: enough to prove
+    // every config runs and the telemetry record is well-formed
+    let batches: &[usize] = if smoke { &[1, 16] } else { &[1, 16, 64, 256] };
+    for &batch in batches {
         let mut r = Pcg32::seeded(batch as u64);
         let x = Tensor::new(
             &[batch, 784],
@@ -107,6 +124,7 @@ fn main() {
     for workers in [1usize, 2] {
         let name = format!("pool workers={workers}  64 reqs");
         let mut overlap = 0u64;
+        let mut lat = RunningStats::new();
         bench.run(&name, Some(64.0), || {
             let engine = pool_engine.clone();
             let b = Arc::new(Batcher::spawn(
@@ -121,20 +139,32 @@ fn main() {
                     ..BatcherConfig::default()
                 },
             ));
+            // each submitter thread keeps its own RunningStats; the
+            // cross-thread merge below is the Chan-formula aggregation
+            // (benchkit::merge_stats), so the printed submit-to-reply
+            // latency is one stream, not a mean of means
             let handles: Vec<_> = (0..64u64)
                 .map(|id| {
                     let b2 = b.clone();
                     std::thread::spawn(move || {
+                        let mut s = RunningStats::new();
+                        let t = Timer::start();
                         b2.infer_blocking(id, vec![0.5; 784]).unwrap();
+                        s.push(t.secs());
+                        s
                     })
                 })
                 .collect();
-            for h in handles {
-                h.join().unwrap();
-            }
+            lat = merge_stats(handles.into_iter().map(|h| h.join().unwrap()));
             overlap = b.stats.overlap.load(std::sync::atomic::Ordering::SeqCst);
         });
         println!("   {}  (overlapped flushes last run: {overlap})", serve_banner(&serial_cfg, workers));
+        println!(
+            "   submit-to-reply latency last run: mean {:.3} ms, max {:.3} ms over {} reqs",
+            lat.mean() * 1e3,
+            lat.max() * 1e3,
+            lat.count()
+        );
     }
     if let Some(s) = bench.speedup("pool workers=1  64 reqs", "pool workers=2  64 reqs") {
         println!("   pool speedup 2w vs 1w: {s:.2}x\n");
@@ -187,6 +217,19 @@ fn main() {
         println!("   sharding ratio 1-shard vs 2-shard: {s:.2}x\n");
     }
 
+    // persist the telemetry record: every case measured so far, written
+    // unconditionally (smoke included) so CI can assert its shape and
+    // bench-report can diff runs
+    record.results = bench.results().to_vec();
+    match record.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench record: {e}"),
+    }
+
+    if smoke {
+        println!("smoke pass done — skipping the trained-model section");
+        return;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("no artifacts/ — skipping the trained-model section (run `make artifacts`)");
         return;
@@ -230,4 +273,11 @@ fn main() {
     bench.run(&format!("xla eval artifact batch={eval_batch}"), Some(eval_batch as f64), || {
         black_box(trainer.evaluate(black_box(&ds)).unwrap());
     });
+
+    // refresh the record so the trained-model cases land in it too
+    record.results = bench.results().to_vec();
+    match record.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench record: {e}"),
+    }
 }

@@ -53,8 +53,12 @@ fn main() {
         return;
     }
     println!("== train-chunk latency through PJRT (samples/s = throughput) ==\n");
-    let mut bench = Bench::new(3.0);
-    bench.max_iters = 30;
+    let smoke = bdnn::benchkit::smoke_mode();
+    let mut bench = Bench::new(if smoke { 0.1 } else { 3.0 });
+    bench.max_iters = if smoke { 3 } else { 30 };
+    if smoke {
+        bench.warmup_iters = 1;
+    }
     bench_artifact(&mut bench, "mnist_mlp_small", "mnist"); // Pallas kernels
     bench_artifact(&mut bench, "mnist_mlp", "mnist"); // Pallas, paper-scale
     bench_artifact(&mut bench, "mnist_mlp_fast", "mnist"); // jnp path

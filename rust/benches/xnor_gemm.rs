@@ -25,12 +25,18 @@ fn rand_vec(r: &mut Pcg32, n: usize) -> Vec<f32> {
 }
 
 fn main() {
+    let smoke = bdnn::benchkit::smoke_mode();
     let auto = GemmConfig::auto();
     println!(
-        "== XNOR-popcount GEMM ladder: scalar -> tiled -> threaded -> simd ==\n   {}\n",
+        "== XNOR-popcount GEMM ladder: scalar -> tiled -> threaded -> simd{} ==\n   {}\n",
+        if smoke { " (SMOKE pass)" } else { "" },
         gemm_banner(&auto)
     );
-    let mut bench = Bench::new(1.0);
+    let mut bench = Bench::new(if smoke { 0.05 } else { 1.0 });
+    if smoke {
+        bench.warmup_iters = 1;
+        bench.max_iters = 3;
+    }
     // (m, k, n): MLP hidden layers + CNN im2col shapes from the paper nets,
     // plus the acceptance shape (256, 4096, 4096) for the ladder headline.
     // bench_f32 is off for the big shapes (a 4.3 GFLOP scalar matmul per
@@ -42,7 +48,10 @@ fn main() {
         (256, 4608, 512, "conv-im2col 256x4608x512", false),
         (256, 4096, 4096, "ladder 256x4096x4096", false),
     ];
-    for (m, k, n, label, bench_f32) in shapes {
+    // the smoke pass keeps the MLP shapes only: the point is that every
+    // rung runs, not the headline numbers
+    let shapes = if smoke { &shapes[..2] } else { &shapes[..] };
+    for &(m, k, n, label, bench_f32) in shapes {
         let mut r = Pcg32::seeded(1);
         let a = rand_vec(&mut r, m * k);
         let b = rand_vec(&mut r, k * n);

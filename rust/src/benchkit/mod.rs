@@ -3,10 +3,19 @@
 //! Warms up, runs timed iterations until a wall-clock budget or iteration
 //! cap is reached, reports mean/std/min plus derived throughput. Used by all
 //! `rust/benches/*` targets (each is a `harness = false` binary).
+//!
+//! Two run modes, decided by [`smoke_mode`]: a full `cargo bench` pass
+//! uses the real budgets, while `cargo test --benches` (CI's bench-smoke
+//! job) shrinks them to a correctness-only sweep. Either way a bench can
+//! persist its numbers as machine-readable telemetry via [`BenchRecord`]
+//! (`BENCH_<name>.json`), the input format of `cargo xtask bench-report`.
 
 use crate::bitnet::dispatch;
+use crate::config::json::Json;
 use crate::config::GemmConfig;
 use crate::util::{RunningStats, Timer};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 /// Header banner for bench output: records which rung of the kernel
 /// ladder the dispatch layer resolved for `cfg`, so saved speedup tables
@@ -179,6 +188,126 @@ impl Bench {
     }
 }
 
+/// True when the bench binaries should run a fast smoke pass instead of
+/// the full budgets: either `BDNN_BENCH_SMOKE` is set, or the binary was
+/// launched without cargo's `--bench` flag (which is how
+/// `cargo test --benches` runs a `harness = false` target — CI's
+/// bench-smoke job, where only correctness and telemetry shape matter).
+pub fn smoke_mode() -> bool {
+    smoke_from(std::env::var_os("BDNN_BENCH_SMOKE").is_some(), std::env::args())
+}
+
+/// The [`smoke_mode`] decision as a pure function of its inputs.
+fn smoke_from(env_set: bool, args: impl IntoIterator<Item = String>) -> bool {
+    env_set || !args.into_iter().any(|a| a == "--bench")
+}
+
+/// Fold per-thread [`RunningStats`] into one aggregate via
+/// [`RunningStats::merge`] — the cross-thread reduction the pool-section
+/// benches use so multi-submitter latency numbers are a single stream.
+///
+/// ```
+/// use bdnn::benchkit::merge_stats;
+/// use bdnn::util::RunningStats;
+///
+/// let mut a = RunningStats::new();
+/// let mut b = RunningStats::new();
+/// a.push(1.0);
+/// a.push(3.0);
+/// b.push(5.0);
+/// let m = merge_stats([a, b]);
+/// assert_eq!(m.count(), 3);
+/// assert_eq!(m.mean(), 3.0);
+/// ```
+pub fn merge_stats(parts: impl IntoIterator<Item = RunningStats>) -> RunningStats {
+    let mut total = RunningStats::new();
+    for p in parts {
+        total.merge(&p);
+    }
+    total
+}
+
+/// Machine-readable telemetry for one bench binary run: the engine facts
+/// a regression diff needs to be attributable (shape, resolved kernel
+/// rung, thread count) plus every measured case. Serialized to
+/// `BENCH_<name>.json` — the interchange format `cargo xtask bench-report`
+/// diffs.
+///
+/// Wire shape (all numbers; `gops` is null for cases without a work
+/// estimate):
+///
+/// ```json
+/// {"bench": "inference", "shape": "784-2048-2048-10",
+///  "rung": "kernel=simd(avx2) ...", "threads": 4,
+///  "results": [{"name": "...", "iters": 12,
+///               "ns_per_iter": 81000.0, "gops": 1.91}]}
+/// ```
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Bench binary name — the `<name>` in `BENCH_<name>.json`.
+    pub bench: String,
+    /// Workload geometry, e.g. `"784-2048-2048-10"`.
+    pub shape: String,
+    /// Resolved kernel rung banner ([`gemm_banner`]), not just "auto".
+    pub rung: String,
+    /// GEMM thread count the measured configs ran with.
+    pub threads: usize,
+    /// Every measured case, in run order.
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchRecord {
+    pub fn new(bench: &str, shape: &str, rung: &str, threads: usize) -> Self {
+        BenchRecord {
+            bench: bench.to_string(),
+            shape: shape.to_string(),
+            rung: rung.to_string(),
+            threads,
+            results: Vec::new(),
+        }
+    }
+
+    /// The wire object (documented on the type).
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        top.insert("shape".to_string(), Json::Str(self.shape.clone()));
+        top.insert("rung".to_string(), Json::Str(self.rung.clone()));
+        top.insert("threads".to_string(), Json::Num(self.threads as f64));
+        let results = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(r.name.clone()));
+                o.insert("iters".to_string(), Json::Num(r.iters as f64));
+                o.insert("ns_per_iter".to_string(), Json::Num(r.mean_s * 1e9));
+                let gops = match r.throughput() {
+                    Some(t) => Json::Num(t / 1e9),
+                    None => Json::Null,
+                };
+                o.insert("gops".to_string(), gops);
+                Json::Obj(o)
+            })
+            .collect();
+        top.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(top)
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir`, returning the path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<bench>.json` into the current directory (`rust/`
+    /// when launched through cargo), returning the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(Path::new("."))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +337,78 @@ mod tests {
         assert!(t.contains("base x"), "{t}");
         assert!(t.contains("fast x"), "{t}");
         assert!(b.speedup_table("missing", "x").contains("no baseline"));
+    }
+
+    #[test]
+    fn smoke_decision_follows_env_then_args() {
+        let args = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        // cargo bench passes --bench: full run unless the env override
+        assert!(!smoke_from(false, args(&["bin", "--bench"])));
+        assert!(smoke_from(true, args(&["bin", "--bench"])));
+        // cargo test --benches passes no --bench: always smoke
+        assert!(smoke_from(false, args(&["bin"])));
+        assert!(smoke_from(false, args(&["bin", "--test-threads=1"])));
+    }
+
+    #[test]
+    fn bench_record_roundtrips_through_its_wire_shape() {
+        let mut rec = BenchRecord::new("unit", "8-16-4", "kernel=scalar", 2);
+        rec.results.push(BenchResult {
+            name: "case a".into(),
+            iters: 10,
+            mean_s: 2e-6,
+            std_s: 1e-7,
+            min_s: 1.5e-6,
+            work_per_iter: Some(4000.0),
+        });
+        rec.results.push(BenchResult {
+            name: "case b".into(),
+            iters: 5,
+            mean_s: 1e-3,
+            std_s: 0.0,
+            min_s: 1e-3,
+            work_per_iter: None,
+        });
+        let j = crate::config::json::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(j.get("shape").and_then(Json::as_str), Some("8-16-4"));
+        assert_eq!(j.get("rung").and_then(Json::as_str), Some("kernel=scalar"));
+        assert_eq!(j.get("threads").and_then(Json::as_f64), Some(2.0));
+        let rs = j.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").and_then(Json::as_str), Some("case a"));
+        assert_eq!(rs[0].get("ns_per_iter").and_then(Json::as_f64), Some(2000.0));
+        // gops = (4000 ops / 2e-6 s) / 1e9 = 2.0
+        assert_eq!(rs[0].get("gops").and_then(Json::as_f64), Some(2.0));
+        assert!(matches!(rs[1].get("gops"), Some(Json::Null)));
+
+        // the file writer emits the same bytes under the BENCH_ name
+        let dir = std::env::temp_dir().join(format!("bdnn-benchrec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = rec.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str(), Some("BENCH_unit.json"));
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, rec.to_json().to_string());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merged_stats_match_a_single_stream() {
+        let xs: Vec<f64> = (0..20).map(|i| (i as f64) * 0.3 - 2.0).collect();
+        let mut whole = RunningStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut parts = vec![RunningStats::new(), RunningStats::new(), RunningStats::new()];
+        for (i, &x) in xs.iter().enumerate() {
+            parts[i % 3].push(x);
+        }
+        let merged = merge_stats(parts);
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-12);
+        assert!((merged.var() - whole.var()).abs() < 1e-12);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
     }
 
     #[test]

@@ -244,7 +244,8 @@ impl GemmConfig {
 /// Serving knobs for `bdnn serve` (`serve::Batcher` worker pool + batch
 /// policy). Parsed from the TOML `[serve]` section and overridden by the
 /// `--serve-workers` / `--max-batch` / `--max-wait-ms` / `--queue-depth`
-/// CLI flags (CLI > TOML > default, same precedence as [`GemmConfig`]).
+/// / `--serve-telemetry` CLI flags (CLI > TOML > default, same precedence
+/// as [`GemmConfig`]).
 ///
 /// `workers == 0` means auto: the batcher clamps the pool to
 /// `available cores / GEMM threads per infer`, so pool × GEMM threads
@@ -269,11 +270,14 @@ pub struct ServeSettings {
     pub max_wait_ms: u64,
     /// Bounded submit queue depth (backpressure to acceptors).
     pub queue_depth: usize,
+    /// Record per-stage latency histograms (on by default; switch off
+    /// with `--serve-telemetry off` or `[serve] telemetry = false`).
+    pub telemetry: bool,
 }
 
 impl Default for ServeSettings {
     fn default() -> Self {
-        Self { workers: 0, max_batch: 64, max_wait_ms: 2, queue_depth: 1024 }
+        Self { workers: 0, max_batch: 64, max_wait_ms: 2, queue_depth: 1024, telemetry: true }
     }
 }
 
@@ -287,6 +291,17 @@ impl ServeSettings {
             args.u64_or("max-wait-ms", self.max_wait_ms).map_err(BdnnError::Config)?;
         self.queue_depth =
             args.usize_or("queue-depth", self.queue_depth).map_err(BdnnError::Config)?;
+        if let Some(v) = args.str_opt("serve-telemetry") {
+            self.telemetry = match v {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                other => {
+                    return Err(BdnnError::Config(format!(
+                        "bad --serve-telemetry '{other}' (on|off)"
+                    )))
+                }
+            };
+        }
         self.validate()?;
         Ok(())
     }
@@ -433,6 +448,9 @@ impl RunConfig {
         if let Some(v) = get("serve", "queue_depth") {
             cfg.serve.queue_depth = v.as_i64().ok_or_else(|| bad("serve.queue_depth"))? as usize;
         }
+        if let Some(v) = get("serve", "telemetry") {
+            cfg.serve.telemetry = v.as_bool().ok_or_else(|| bad("serve.telemetry"))?;
+        }
         if let Some(models) = doc.get("models") {
             for (name, v) in models {
                 let path =
@@ -522,12 +540,18 @@ seed = 7
     #[test]
     fn serve_section_parses_and_validates() {
         let cfg = RunConfig::from_toml_str(
-            "name = \"s\"\n[serve]\nworkers = 2\nmax_batch = 16\nmax_wait_ms = 5\nqueue_depth = 64\n",
+            "name = \"s\"\n[serve]\nworkers = 2\nmax_batch = 16\nmax_wait_ms = 5\nqueue_depth = 64\ntelemetry = false\n",
         )
         .unwrap();
         assert_eq!(
             cfg.serve,
-            ServeSettings { workers: 2, max_batch: 16, max_wait_ms: 5, queue_depth: 64 }
+            ServeSettings {
+                workers: 2,
+                max_batch: 16,
+                max_wait_ms: 5,
+                queue_depth: 64,
+                telemetry: false,
+            }
         );
         // defaults survive a config without a [serve] section
         assert_eq!(RunConfig::from_toml_str("name = \"s\"").unwrap().serve, ServeSettings::default());
@@ -561,9 +585,41 @@ seed = 7
         .unwrap();
         s.apply_cli(&args).unwrap();
         // CLI wins where given, TOML survives where not
-        assert_eq!(s, ServeSettings { workers: 4, max_batch: 8, max_wait_ms: 7, queue_depth: 1024 });
+        assert_eq!(
+            s,
+            ServeSettings {
+                workers: 4,
+                max_batch: 8,
+                max_wait_ms: 7,
+                queue_depth: 1024,
+                telemetry: true,
+            }
+        );
         let bad = crate::cli::Args::parse(["serve", "--max-batch", "0"].map(String::from)).unwrap();
         assert!(s.apply_cli(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_telemetry_flag_parses_and_rejects_garbage() {
+        let mut s = ServeSettings::default();
+        assert!(s.telemetry); // on unless asked otherwise
+        let off =
+            crate::cli::Args::parse(["serve", "--serve-telemetry", "off"].map(String::from))
+                .unwrap();
+        s.apply_cli(&off).unwrap();
+        assert!(!s.telemetry);
+        let on = crate::cli::Args::parse(["serve", "--serve-telemetry", "on"].map(String::from))
+            .unwrap();
+        s.apply_cli(&on).unwrap();
+        assert!(s.telemetry);
+        let bad =
+            crate::cli::Args::parse(["serve", "--serve-telemetry", "maybe"].map(String::from))
+                .unwrap();
+        assert!(s.apply_cli(&bad).is_err());
+        // TOML spelling
+        let cfg = RunConfig::from_toml_str("name = \"t\"\n[serve]\ntelemetry = true\n").unwrap();
+        assert!(cfg.serve.telemetry);
+        assert!(RunConfig::from_toml_str("[serve]\ntelemetry = 3\n").is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@ USAGE:
               [--gemm-kernel auto|scalar|tiled|threaded|simd]
   bdnn serve  --checkpoint runs/x/final.bdnn [--addr 127.0.0.1:7979]
               [--model NAME=CKPT]... [--serve-workers N] [--max-batch 64]
-              [--max-wait-ms 2] [--queue-depth 1024]
+              [--max-wait-ms 2] [--queue-depth 1024] [--serve-telemetry on|off]
               [--config runs/x.toml] [--gemm-threads N] [--gemm-tile N]
               [--gemm-kernel auto|scalar|tiled|threaded|simd]
               (multi-model: each --model NAME=CKPT adds a registry shard

@@ -16,7 +16,14 @@
 //!    deadlock an acceptor thread;
 //!  * shutdown drains gracefully: in-flight and already-sealed batches
 //!    finish, queued requests get a `"shutting_down"` error reply, and
-//!    every submitter still receives exactly one reply.
+//!    every submitter still receives exactly one reply;
+//!  * every request is **stage-timed** through the `util::telemetry`
+//!    clock seam: stamped at submit, seal, pickup, and reply, with the
+//!    per-stage durations recorded into the lock-free histograms on
+//!    [`BatchStats::latency`] (quantiles served by the stats endpoint;
+//!    opt out with `telemetry: false` / `--serve-telemetry off`). Tests
+//!    inject a `ManualClock` via [`Batcher::spawn_with_clock`], making
+//!    every latency assertion exact.
 
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::util::sync::mpsc::{
@@ -24,6 +31,7 @@ use crate::util::sync::mpsc::{
 };
 use crate::util::sync::thread;
 use crate::util::sync::{Arc, Mutex};
+use crate::util::telemetry::{Clock, StageHistograms, StageTrace};
 use std::time::{Duration, Instant};
 
 use crate::bitnet::network::PackedNet;
@@ -80,13 +88,21 @@ impl InferEngine for PackedNet {
     }
 }
 
-/// One inference request travelling through the batcher.
+/// One inference request travelling through the batcher. Timing is the
+/// batcher's job, not the caller's: [`Batcher::submit`] stamps the
+/// request against its own [`Clock`] on entry.
 pub struct InferRequest {
     pub id: u64,
     pub pixels: Vec<f32>,
-    pub enqueued: Instant,
     /// oneshot reply channel
     pub reply: Sender<InferReply>,
+}
+
+/// An accepted request plus its submit timestamp (batcher-clock nanos) —
+/// what actually travels the internal channels.
+struct TimedRequest {
+    req: InferRequest,
+    t_submit: u64,
 }
 
 /// Reply for one request. Exactly one reply reaches every submitted
@@ -106,12 +122,12 @@ pub struct InferReply {
 }
 
 impl InferReply {
-    fn error_for(req: &InferRequest, msg: &str) -> Self {
+    fn error_with_queue(id: u64, queue_ns: u64, msg: &str) -> Self {
         Self {
-            id: req.id,
+            id,
             pred: usize::MAX,
             logits: vec![],
-            queue_us: req.enqueued.elapsed().as_micros() as u64,
+            queue_us: queue_ns / 1_000,
             infer_us: 0,
             error: Some(msg.to_string()),
         }
@@ -126,6 +142,7 @@ impl InferReply {
 /// assert_eq!(c.max_batch, 64);
 /// assert_eq!(c.max_wait.as_millis(), 2);
 /// assert_eq!(c.workers, 0); // auto: clamp to cores / GEMM threads
+/// assert!(c.telemetry); // stage histograms on by default
 /// assert!(c.resolved_workers(usize::MAX) >= 1);
 /// ```
 #[derive(Clone, Copy, Debug)]
@@ -147,6 +164,11 @@ pub struct BatcherConfig {
     /// Longest `Drop` waits for pool workers to finish their in-flight
     /// batches before detaching them.
     pub drain_timeout: Duration,
+    /// Record per-stage latency histograms ([`BatchStats::latency`]).
+    /// On by default — recording is two relaxed atomic adds per stage —
+    /// but can be switched off (`--serve-telemetry off`), which also
+    /// drops the `latency` section from the stats endpoint.
+    pub telemetry: bool,
 }
 
 impl Default for BatcherConfig {
@@ -158,6 +180,7 @@ impl Default for BatcherConfig {
             workers: 0,
             submit_timeout: Duration::from_secs(5),
             drain_timeout: Duration::from_secs(5),
+            telemetry: true,
         }
     }
 }
@@ -188,6 +211,7 @@ impl From<crate::config::ServeSettings> for BatcherConfig {
             max_wait: Duration::from_millis(s.max_wait_ms),
             queue_depth: s.queue_depth,
             workers: s.workers,
+            telemetry: s.telemetry,
             ..Self::default()
         }
     }
@@ -215,6 +239,12 @@ pub struct BatchStats {
     pub rejected_shutdown: AtomicU64,
     /// Batches whose engine call failed or panicked (error replies sent).
     pub infer_errors: AtomicU64,
+    /// Per-stage latency histograms (queue-wait, coalesce-wait, infer,
+    /// reply-write), recorded per valid request as its reply is scattered
+    /// — so, like `requests`, the counts exclude payload-error bounces
+    /// and drain/timeout error replies. Empty when the batcher runs with
+    /// `telemetry: false`.
+    pub latency: StageHistograms,
     /// Per-worker flush counts; index = worker, monotonic.
     per_worker: Vec<AtomicU64>,
 }
@@ -251,17 +281,21 @@ impl BatchStats {
 
 /// One sealed batch travelling from the coalescer to a pool worker.
 struct SealedBatch {
-    requests: Vec<InferRequest>,
+    requests: Vec<TimedRequest>,
+    /// Batcher-clock nanos at which the coalescer sealed the batch.
+    t_seal: u64,
 }
 
 /// The batcher: submit handle + coalescer thread + worker pool.
 pub struct Batcher {
-    tx: SyncSender<InferRequest>,
+    tx: SyncSender<TimedRequest>,
     pub stats: Arc<BatchStats>,
     stop: Arc<AtomicBool>,
     workers: usize,
     submit_timeout: Duration,
     drain_timeout: Duration,
+    clock: Clock,
+    telemetry: bool,
     coalescer: Option<thread::JoinHandle<()>>,
     worker_handles: Vec<thread::JoinHandle<()>>,
     worker_done_rx: Mutex<Receiver<usize>>,
@@ -293,8 +327,31 @@ impl Batcher {
         cfg: BatcherConfig,
         label: &str,
     ) -> Self {
+        Self::spawn_with_clock(engine, in_dim, in_shape, cfg, label, Clock::system())
+    }
+
+    /// [`Batcher::spawn_named`] with an injected [`Clock`] — the seam the
+    /// deterministic latency tests use: a `Clock::manual()` pair makes
+    /// every stage timestamp (and therefore every `queue_us`/`infer_us`
+    /// reply field and histogram sample) test-driven instead of
+    /// wall-clock. Production paths pass `Clock::system()`.
+    ///
+    /// Caveat for manual clocks: the coalescer's `max_wait` deadline is
+    /// measured on this clock, but the blocking waits are wall time, so
+    /// the timeout-flush path loses its determinism (it fires after a
+    /// wall-time `max_wait` unless the manual time is advanced first).
+    /// Deterministic tests therefore drive sealing through `max_batch`
+    /// (e.g. `max_batch: 1`) rather than the timeout.
+    pub fn spawn_with_clock(
+        engine: Arc<dyn InferEngine>,
+        in_dim: usize,
+        in_shape: Vec<usize>,
+        cfg: BatcherConfig,
+        label: &str,
+        clock: Clock,
+    ) -> Self {
         let workers = cfg.resolved_workers(engine.infer_parallelism());
-        let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_depth.max(1));
+        let (tx, rx) = sync_channel::<TimedRequest>(cfg.queue_depth.max(1));
         // pipeline depth: up to `workers` sealed batches queue ahead of
         // the `workers` in flight, then the coalescer backpressures
         let (batch_tx, batch_rx) = sync_channel::<SealedBatch>(workers);
@@ -310,20 +367,32 @@ impl Batcher {
             let stats = stats.clone();
             let done = done_tx.clone();
             let shape = in_shape.clone();
+            let w_clock = clock.clone();
             let handle = thread::Builder::new()
                 .name(format!("bdnn-{label}-w{w}"))
                 .spawn(move || {
-                    run_pool_worker(w, engine, batch_rx, in_dim, shape, stats, done);
+                    run_pool_worker(
+                        w,
+                        engine,
+                        batch_rx,
+                        in_dim,
+                        shape,
+                        stats,
+                        done,
+                        w_clock,
+                        cfg.telemetry,
+                    );
                 })
                 .expect("spawn pool worker thread");
             worker_handles.push(handle);
         }
         let c_stats = stats.clone();
         let c_stop = stop.clone();
+        let c_clock = clock.clone();
         let coalescer = thread::Builder::new()
             .name(format!("bdnn-{label}-coal"))
             .spawn(move || {
-                run_coalescer(rx, batch_tx, cfg, c_stats, c_stop);
+                run_coalescer(rx, batch_tx, cfg, c_stats, c_stop, c_clock);
             })
             .expect("spawn coalescer thread");
         Self {
@@ -333,6 +402,8 @@ impl Batcher {
             workers,
             submit_timeout: cfg.submit_timeout,
             drain_timeout: cfg.drain_timeout,
+            clock,
+            telemetry: cfg.telemetry,
             coalescer: Some(coalescer),
             worker_handles,
             worker_done_rx: Mutex::new(done_rx),
@@ -342,6 +413,12 @@ impl Batcher {
     /// Resolved pool size (after the auto clamp).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Whether this batcher records stage-latency histograms (the stats
+    /// endpoint omits the `latency` section when it doesn't).
+    pub fn telemetry_enabled(&self) -> bool {
+        self.telemetry
     }
 
     /// Begin a graceful drain: in-flight and already-sealed batches
@@ -359,34 +436,49 @@ impl Batcher {
     /// the request is answered immediately with [`ERR_SHUTTING_DOWN`].
     /// Every accepted request is guaranteed exactly one reply.
     pub fn submit(&self, req: InferRequest) -> Result<()> {
+        // the submit stamp every downstream stage measures against
+        let t_submit = self.clock.now_nanos();
         if self.stop.load(Ordering::SeqCst) {
             self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
-            let _ = req.reply.send(InferReply::error_for(&req, ERR_SHUTTING_DOWN));
+            let _ = req.reply.send(InferReply::error_with_queue(req.id, 0, ERR_SHUTTING_DOWN));
             return Ok(());
         }
+        // the bounded wait is a liveness guard, so it stays on wall time
+        // even under an injected manual clock
         let deadline = Instant::now() + self.submit_timeout;
-        let mut req = req;
+        let mut timed = TimedRequest { req, t_submit };
         loop {
-            match self.tx.try_send(req) {
+            match self.tx.try_send(timed) {
                 Ok(()) => return Ok(()),
-                Err(TrySendError::Disconnected(r)) => {
+                Err(TrySendError::Disconnected(t)) => {
                     // the coalescer is gone (drained); still reply
+                    let aged = self.clock.now_nanos().saturating_sub(t.t_submit);
                     self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply.send(InferReply::error_for(&r, ERR_SHUTTING_DOWN));
+                    let _ = t
+                        .req
+                        .reply
+                        .send(InferReply::error_with_queue(t.req.id, aged, ERR_SHUTTING_DOWN));
                     return Err(BdnnError::Runtime("batcher has shut down".into()));
                 }
-                Err(TrySendError::Full(r)) => {
+                Err(TrySendError::Full(t)) => {
+                    let aged = self.clock.now_nanos().saturating_sub(t.t_submit);
                     if self.stop.load(Ordering::SeqCst) {
                         self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
-                        let _ = r.reply.send(InferReply::error_for(&r, ERR_SHUTTING_DOWN));
+                        let _ = t
+                            .req
+                            .reply
+                            .send(InferReply::error_with_queue(t.req.id, aged, ERR_SHUTTING_DOWN));
                         return Ok(());
                     }
                     if Instant::now() >= deadline {
                         self.stats.submit_timeouts.fetch_add(1, Ordering::Relaxed);
-                        let _ = r.reply.send(InferReply::error_for(&r, ERR_SUBMIT_TIMEOUT));
+                        let _ = t
+                            .req
+                            .reply
+                            .send(InferReply::error_with_queue(t.req.id, aged, ERR_SUBMIT_TIMEOUT));
                         return Ok(());
                     }
-                    req = r;
+                    timed = t;
                     thread::sleep(Duration::from_micros(200));
                 }
             }
@@ -396,7 +488,7 @@ impl Batcher {
     /// Convenience: submit and wait for the reply (real or error).
     pub fn infer_blocking(&self, id: u64, pixels: Vec<f32>) -> Result<InferReply> {
         let (reply_tx, reply_rx) = channel();
-        self.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: reply_tx })
+        self.submit(InferRequest { id, pixels, reply: reply_tx })
             .ok(); // a rejected submit already sent its error reply
         reply_rx
             .recv()
@@ -439,21 +531,30 @@ impl Drop for Batcher {
     }
 }
 
-fn reply_shutting_down(req: InferRequest, stats: &BatchStats) {
+fn reply_shutting_down(t: TimedRequest, stats: &BatchStats, clock: &Clock) {
+    let aged = clock.now_nanos().saturating_sub(t.t_submit);
     stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
-    let _ = req.reply.send(InferReply::error_for(&req, ERR_SHUTTING_DOWN));
+    let _ = t.req.reply.send(InferReply::error_with_queue(t.req.id, aged, ERR_SHUTTING_DOWN));
 }
 
 /// Coalescer thread: form batches under the `max_batch`/`max_wait`
 /// contract and hand them to the pool. Exits only when the submit side
 /// disconnects (Batcher drop); after `stop` it drains every remaining
 /// request with an [`ERR_SHUTTING_DOWN`] reply so nothing is stranded.
+///
+/// The `max_wait` deadline is measured on the batcher's [`Clock`] from
+/// the first request's submit stamp, while the blocking waits themselves
+/// are wall time — identical under `Clock::system()`; under a manual
+/// clock the timeout flush keeps firing (liveness) but on wall time, so
+/// deterministic tests seal via `max_batch` instead (see
+/// [`Batcher::spawn_with_clock`]).
 fn run_coalescer(
-    rx: Receiver<InferRequest>,
+    rx: Receiver<TimedRequest>,
     batch_tx: SyncSender<SealedBatch>,
     cfg: BatcherConfig,
     stats: Arc<BatchStats>,
     stop: Arc<AtomicBool>,
+    clock: Clock,
 ) {
     loop {
         // wait for the first request of a batch
@@ -463,21 +564,21 @@ fn run_coalescer(
             Err(RecvTimeoutError::Disconnected) => return,
         };
         if stop.load(Ordering::SeqCst) {
-            reply_shutting_down(first, &stats);
+            reply_shutting_down(first, &stats, &clock);
             continue;
         }
-        let deadline = first.enqueued + cfg.max_wait;
+        let deadline_ns = first.t_submit.saturating_add(cfg.max_wait.as_nanos() as u64);
         let mut pending = vec![first];
         // coalesce until full or the oldest request times out
         let mut timed_out = false;
         let mut disconnected = false;
         while pending.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
+            let now_ns = clock.now_nanos();
+            if now_ns >= deadline_ns {
                 timed_out = true;
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(Duration::from_nanos(deadline_ns - now_ns)) {
                 Ok(r) => pending.push(r),
                 Err(RecvTimeoutError::Timeout) => {
                     timed_out = true;
@@ -499,7 +600,7 @@ fn run_coalescer(
         // hand the sealed batch to the pool (bounded wait: when the pool
         // is saturated this is the backpressure point; once stop is set,
         // an undispatchable batch is drained instead of waited on)
-        let mut batch = SealedBatch { requests: pending };
+        let mut batch = SealedBatch { requests: pending, t_seal: clock.now_nanos() };
         loop {
             match batch_tx.try_send(batch) {
                 Ok(()) => {
@@ -509,7 +610,7 @@ fn run_coalescer(
                 Err(TrySendError::Full(b)) => {
                     if stop.load(Ordering::SeqCst) {
                         for r in b.requests {
-                            reply_shutting_down(r, &stats);
+                            reply_shutting_down(r, &stats, &clock);
                         }
                         break;
                     }
@@ -518,7 +619,7 @@ fn run_coalescer(
                 }
                 Err(TrySendError::Disconnected(b)) => {
                     for r in b.requests {
-                        reply_shutting_down(r, &stats);
+                        reply_shutting_down(r, &stats, &clock);
                     }
                     break;
                 }
@@ -533,6 +634,7 @@ fn run_coalescer(
 /// One pool worker: pull sealed batches, run the engine, scatter replies.
 /// Survives engine errors and panics (error replies instead of lost
 /// requests), so one poisoned batch never kills the pool.
+#[allow(clippy::too_many_arguments)]
 fn run_pool_worker(
     widx: usize,
     engine: Arc<dyn InferEngine>,
@@ -541,6 +643,8 @@ fn run_pool_worker(
     in_shape: Vec<usize>,
     stats: Arc<BatchStats>,
     done: Sender<usize>,
+    clock: Clock,
+    telemetry: bool,
 ) {
     loop {
         // hold the lock only for the blocking recv: the next worker can
@@ -561,7 +665,7 @@ fn run_pool_worker(
         if already_in_flight > 0 {
             stats.overlap.fetch_add(1, Ordering::Relaxed);
         }
-        process_batch(&*engine, batch, in_dim, &in_shape, &stats);
+        process_batch(&*engine, batch, in_dim, &in_shape, &stats, &clock, telemetry);
         stats.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
     let _ = done.send(widx);
@@ -573,17 +677,22 @@ fn process_batch(
     in_dim: usize,
     in_shape: &[usize],
     stats: &BatchStats,
+    clock: &Clock,
+    telemetry: bool,
 ) {
+    // the worker picked the batch up "now"; everything between t_seal and
+    // this stamp was spent waiting in the pool channel
+    let t_pickup = clock.now_nanos();
     // assemble the batch (validated payloads only)
-    let valid: Vec<&InferRequest> =
-        batch.requests.iter().filter(|r| r.pixels.len() == in_dim).collect();
-    let infer_started = Instant::now();
+    let valid: Vec<&TimedRequest> =
+        batch.requests.iter().filter(|t| t.req.pixels.len() == in_dim).collect();
+    let t_infer_start = clock.now_nanos();
     let outcome: std::result::Result<Option<Tensor>, String> = if valid.is_empty() {
         Ok(None)
     } else {
         let mut data = Vec::with_capacity(valid.len() * in_dim);
-        for r in &valid {
-            data.extend_from_slice(&r.pixels);
+        for t in &valid {
+            data.extend_from_slice(&t.req.pixels);
         }
         let mut shape = vec![valid.len()];
         shape.extend(in_shape);
@@ -594,7 +703,8 @@ fn process_batch(
             Err(_) => Err("inference worker panicked".into()),
         }
     };
-    let infer_us = infer_started.elapsed().as_micros() as u64;
+    let infer_ns = clock.now_nanos().saturating_sub(t_infer_start);
+    let infer_us = infer_ns / 1_000;
     stats.requests.fetch_add(valid.len() as u64, Ordering::Relaxed);
     if outcome.is_err() {
         stats.infer_errors.fetch_add(1, Ordering::Relaxed);
@@ -604,12 +714,16 @@ fn process_batch(
     let logits = outcome.as_ref().ok().and_then(|o| o.as_ref());
     let classes = logits.map(|l| l.shape()[1]).unwrap_or(0);
     let mut row_i = 0usize;
-    for r in batch.requests.iter() {
+    for t in batch.requests.iter() {
+        let r = &t.req;
         if r.pixels.len() != in_dim {
-            let _ = r.reply.send(InferReply::error_for(r, ERR_PAYLOAD));
+            let aged = t_infer_start.saturating_sub(t.t_submit);
+            let _ = r.reply.send(InferReply::error_with_queue(r.id, aged, ERR_PAYLOAD));
             continue;
         }
-        let queue_us = (infer_started - r.enqueued).as_micros() as u64;
+        let queue_ns = t_infer_start.saturating_sub(t.t_submit);
+        let queue_us = queue_ns / 1_000;
+        let t_reply_start = clock.now_nanos();
         match (&outcome, logits) {
             (Ok(_), Some(l)) => {
                 let row = &l.data()[row_i * classes..(row_i + 1) * classes];
@@ -639,6 +753,14 @@ fn process_batch(
                 });
             }
             (Ok(_), None) => unreachable!("valid rows imply logits or an error"),
+        }
+        if telemetry {
+            stats.latency.record(&StageTrace {
+                queue_wait_ns: batch.t_seal.saturating_sub(t.t_submit),
+                coalesce_wait_ns: t_pickup.saturating_sub(batch.t_seal),
+                infer_ns,
+                reply_write_ns: clock.now_nanos().saturating_sub(t_reply_start),
+            });
         }
         row_i += 1;
     }
@@ -777,5 +899,53 @@ mod tests {
         let rep = b.infer_blocking(1, vec![0.5; 12]).unwrap();
         assert_eq!(rep.error.as_deref(), Some(ERR_SHUTTING_DOWN));
         assert!(b.stats.rejected_shutdown.load(Ordering::Relaxed) >= 1);
+    }
+
+    /// The stage trace is recorded just after a request's reply is sent,
+    /// so a caller that received the last reply may be a hair ahead of the
+    /// final record — wait for the counters (liveness bound only; the
+    /// assertions stay exact).
+    fn wait_latency_count(stats: &BatchStats, want: u64) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while stats.latency.infer.snapshot().count() < want {
+            assert!(Instant::now() < deadline, "latency histograms never reached {want}");
+            thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn telemetry_counts_valid_requests_only() {
+        let (net, dim, shape) = tiny_net();
+        let b = Batcher::spawn(net, dim, shape, BatcherConfig::default());
+        assert!(b.telemetry_enabled());
+        let mut r = Pcg32::seeded(5);
+        for i in 0..5u64 {
+            let rep = b.infer_blocking(i, (0..12).map(|_| r.normal()).collect()).unwrap();
+            assert!(rep.error.is_none());
+        }
+        // a payload error gets a reply but no stage trace (matches the
+        // `requests` counter semantics)
+        let bad = b.infer_blocking(99, vec![0.0; 3]).unwrap();
+        assert_eq!(bad.error.as_deref(), Some(ERR_PAYLOAD));
+        wait_latency_count(&b.stats, 5);
+        let snap = b.stats.latency.snapshot();
+        for (name, s) in snap.iter() {
+            assert_eq!(s.count(), 5, "stage {name}");
+        }
+        assert_eq!(snap.infer.count(), b.stats.requests.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn telemetry_off_records_nothing() {
+        let (net, dim, shape) = tiny_net();
+        let cfg = BatcherConfig { telemetry: false, ..Default::default() };
+        let b = Batcher::spawn(net, dim, shape, cfg);
+        assert!(!b.telemetry_enabled());
+        let mut r = Pcg32::seeded(6);
+        let rep = b.infer_blocking(1, (0..12).map(|_| r.normal()).collect()).unwrap();
+        assert!(rep.error.is_none());
+        for (name, s) in b.stats.latency.snapshot().iter() {
+            assert_eq!(s.count(), 0, "stage {name}");
+        }
     }
 }

@@ -57,6 +57,16 @@
 //!             "unknown_model": n and "shards": {name: per-shard section}
 //!   stats:    {"stats": true, "model": "m"} -> shard "m"'s section only
 //!             (its own counters + "model" + its resolved kernel facts)
+//!
+//! When telemetry is on (the default — opt out with `--serve-telemetry
+//! off`), every stats section also carries a "latency" object: per-stage
+//! ("queue_wait", "coalesce_wait", "infer", "reply_write")
+//! count/p50/p95/p99 in nanoseconds, from the lock-free log₂ histograms
+//! in `util::telemetry`; the rollup's counts equal the sum of the shard
+//! counts. `{"metrics": true}` returns the same numbers as a flat
+//! `name{labels} value` text exposition terminated by a `# EOF` line.
+//! Every timestamp flows through the [`Clock`] seam, so tests drive the
+//! whole pipeline on a [`ManualClock`] with zero wall-clock sleeps.
 
 pub mod batcher;
 pub mod registry;
@@ -68,3 +78,7 @@ pub use batcher::{
 };
 pub use registry::{divide_workers, ModelEntry, ModelShard, Registry, ERR_UNKNOWN_MODEL};
 pub use server::{serve, serve_models, serve_registry, ServeConfig, Server};
+
+// the telemetry seam the serve stack records through, re-exported so
+// serve-layer callers (tests, the CLI) reach it without the util path
+pub use crate::util::telemetry::{Clock, ManualClock};

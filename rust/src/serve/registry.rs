@@ -25,6 +25,7 @@ use super::batcher::{Batcher, BatcherConfig, InferEngine, InferReply};
 use crate::bitnet::network::PackedNet;
 use crate::config::ModelArch;
 use crate::error::{BdnnError, Result};
+use crate::util::telemetry::{Clock, StageSnapshots};
 
 /// Error string carried by replies to requests naming a model that is not
 /// in the registry (the structured reply replaces the closed connection
@@ -174,6 +175,17 @@ impl Registry {
     /// engine's per-flush parallelism; an explicit `cfg.workers` is
     /// honored per shard, exactly like the single-model batcher.
     pub fn spawn(entries: Vec<ModelEntry>, cfg: BatcherConfig) -> Result<Self> {
+        Self::spawn_with_clock(entries, cfg, Clock::system())
+    }
+
+    /// [`Registry::spawn`] with an injected [`Clock`] shared by every
+    /// shard's batcher — the seam the deterministic latency tests use
+    /// (see [`Batcher::spawn_with_clock`] for the manual-clock caveats).
+    pub fn spawn_with_clock(
+        entries: Vec<ModelEntry>,
+        cfg: BatcherConfig,
+        clock: Clock,
+    ) -> Result<Self> {
         if entries.is_empty() {
             return Err(BdnnError::Runtime("registry needs at least one model".into()));
         }
@@ -191,12 +203,13 @@ impl Registry {
             // planned parallelism for this shard's serve shape: a full
             // coalesced flush is `max_batch` rows through the engine
             let gemm_threads_planned = entry.engine.planned_parallelism(cfg.max_batch.max(1));
-            let batcher = Arc::new(Batcher::spawn_named(
+            let batcher = Arc::new(Batcher::spawn_with_clock(
                 entry.engine,
                 entry.in_dim,
                 entry.in_shape,
                 BatcherConfig { workers, ..cfg },
                 &entry.name,
+                clock.clone(),
             ));
             let shard = Arc::new(ModelShard {
                 name: entry.name.clone(),
@@ -261,6 +274,20 @@ impl Registry {
 
     pub fn is_empty(&self) -> bool {
         self.shards.is_empty()
+    }
+
+    /// Merge every shard's stage-latency histograms into one rollup
+    /// snapshot — the all-models `latency` block the stats endpoint
+    /// reports. By construction each stage's rollup count equals the sum
+    /// of the per-shard counts (bucket-wise addition), the invariant
+    /// `rust/tests/serve_multi_model.rs` pins over a live socket. Shards
+    /// running with telemetry off contribute empty histograms.
+    pub fn latency_rollup(&self) -> StageSnapshots {
+        let mut roll = StageSnapshots::default();
+        for s in self.shards.values() {
+            roll.merge(&s.batcher.stats.latency.snapshot());
+        }
+        roll
     }
 
     /// Begin a graceful drain on every shard (each batcher finishes its
@@ -443,6 +470,38 @@ mod tests {
         assert_eq!(missing.id, 4);
         assert!(missing.logits.is_empty());
         assert_eq!(r.unknown_models.load(Ordering::Relaxed), 1);
+        r.shutdown();
+    }
+
+    #[test]
+    fn latency_rollup_counts_equal_sum_of_shards() {
+        let r = Registry::spawn_with_clock(
+            vec![entry("a", 1.0, 1), entry("b", 2.0, 1)],
+            BatcherConfig { workers: 1, ..BatcherConfig::default() },
+            Clock::system(),
+        )
+        .unwrap();
+        for i in 0..3u64 {
+            r.infer_blocking(Some("a"), i, vec![0.0; 4]).unwrap();
+        }
+        for i in 0..2u64 {
+            r.infer_blocking(Some("b"), 10 + i, vec![0.0; 4]).unwrap();
+        }
+        // the stage trace lands just after each reply; wait for the counts
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let roll = r.latency_rollup();
+            let shard_sum: u64 =
+                r.iter().map(|s| s.batcher.stats.latency.infer.snapshot().count()).sum();
+            if roll.infer.count() == 5 && shard_sum == 5 {
+                for (stage, snap) in roll.iter() {
+                    assert_eq!(snap.count(), 5, "rollup stage {stage}");
+                }
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "rollup never reached 5 samples");
+            thread::yield_now();
+        }
         r.shutdown();
     }
 }

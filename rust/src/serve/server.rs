@@ -18,17 +18,22 @@
 //! * `{"stats": true}` — all-shards rollup: summed traffic counters at
 //!   the top level (the PR 3 single-model shape, so existing consumers
 //!   keep parsing), plus `"models"`, `"unknown_model"` and a `"shards"`
-//!   object with each shard's own section.
+//!   object with each shard's own section. When telemetry is on, each
+//!   section (and the rollup) carries a `"latency"` object: per-stage
+//!   `count`/`p50`/`p95`/`p99` in nanoseconds (bucket upper bounds — see
+//!   `util::telemetry`).
 //! * `{"stats": true, "model": "m"}` — shard `m`'s section alone.
+//! * `{"metrics": true}` — a flat text exposition for scrapers: one
+//!   `name{labels} value` line per metric, terminated by a `# EOF` line.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
 
 use crate::util::sync::atomic::{AtomicBool, Ordering};
 use crate::util::sync::mpsc::channel;
 use crate::util::sync::{thread, Arc};
+use crate::util::telemetry::StageSnapshots;
 
 use super::batcher::{Batcher, BatcherConfig, InferRequest};
 use super::registry::{ModelEntry, ModelShard, Registry, ERR_UNKNOWN_MODEL};
@@ -150,6 +155,9 @@ fn shard_stats(shard: &ModelShard) -> BTreeMap<String, Json> {
         Json::Num(s.rejected_shutdown.load(Relaxed) as f64),
     );
     obj.insert("infer_errors".to_string(), Json::Num(s.infer_errors.load(Relaxed) as f64));
+    if batcher.telemetry_enabled() {
+        obj.insert("latency".to_string(), latency_json(&s.latency.snapshot()));
+    }
     obj.insert("kernel".to_string(), Json::Str(shard.kernel.clone()));
     // `gemm_threads` is the count the planner actually spawns for a full
     // max_batch flush of this shard (row clamp + small-problem cutoff);
@@ -228,8 +236,69 @@ fn rollup_stats(registry: &Registry) -> String {
         "unknown_model".to_string(),
         Json::Num(registry.unknown_models.load(Relaxed) as f64),
     );
+    // latency rollup: bucket-wise sum over shards, so each stage's count
+    // equals the sum of the per-shard counts (omitted with telemetry off)
+    if registry.iter().any(|s| s.batcher.telemetry_enabled()) {
+        obj.insert("latency".to_string(), latency_json(&registry.latency_rollup()));
+    }
     obj.insert("shards".to_string(), Json::Obj(shards));
     Json::Obj(obj).to_string()
+}
+
+/// The `"latency"` stats block: `{stage: {count, p50, p95, p99}}` with
+/// quantiles in nanoseconds (histogram bucket upper bounds, so each is
+/// within 2× of a true recorded sample — `util::telemetry` module docs).
+fn latency_json(snaps: &StageSnapshots) -> Json {
+    let mut stages = BTreeMap::new();
+    for (stage, snap) in snaps.iter() {
+        let mut o = BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(snap.count() as f64));
+        o.insert("p50".to_string(), Json::Num(snap.quantile(0.5) as f64));
+        o.insert("p95".to_string(), Json::Num(snap.quantile(0.95) as f64));
+        o.insert("p99".to_string(), Json::Num(snap.quantile(0.99) as f64));
+        stages.insert(stage.to_string(), Json::Obj(o));
+    }
+    Json::Obj(stages)
+}
+
+/// The `{"metrics": true}` exposition: flat `name{labels} value` text
+/// lines (integer values, latency in nanoseconds), terminated by a
+/// `# EOF` line so line-oriented scrapers know where the answer ends.
+fn metrics_text(registry: &Registry) -> String {
+    use std::fmt::Write as _;
+    use Ordering::Relaxed;
+    let mut out = String::new();
+    let _ = writeln!(out, "bdnn_unknown_model_total {}", registry.unknown_models.load(Relaxed));
+    for shard in registry.iter() {
+        let s = &shard.batcher.stats;
+        let m = &shard.name;
+        let _ = writeln!(out, "bdnn_requests_total{{model=\"{m}\"}} {}", s.requests.load(Relaxed));
+        let _ = writeln!(out, "bdnn_batches_total{{model=\"{m}\"}} {}", s.batches.load(Relaxed));
+        let _ = writeln!(
+            out,
+            "bdnn_infer_errors_total{{model=\"{m}\"}} {}",
+            s.infer_errors.load(Relaxed)
+        );
+        let _ = writeln!(out, "bdnn_workers{{model=\"{m}\"}} {}", shard.batcher.workers());
+        if shard.batcher.telemetry_enabled() {
+            for (stage, snap) in s.latency.snapshot().iter() {
+                let _ = writeln!(
+                    out,
+                    "bdnn_latency_count{{model=\"{m}\",stage=\"{stage}\"}} {}",
+                    snap.count()
+                );
+                for (q, p) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                    let _ = writeln!(
+                        out,
+                        "bdnn_latency_ns{{model=\"{m}\",stage=\"{stage}\",quantile=\"{q}\"}} {}",
+                        snap.quantile(p)
+                    );
+                }
+            }
+        }
+    }
+    out.push_str("# EOF");
+    out
 }
 
 fn handle_connection(stream: TcpStream, registry: Arc<Registry>) -> Result<()> {
@@ -257,16 +326,12 @@ fn handle_connection(stream: TcpStream, registry: Arc<Registry>) -> Result<()> {
                 },
                 Some(None) => error_json(0, "'model' must be a string"),
             },
+            Ok(j) if is_metrics_request(&j) => metrics_text(&registry),
             Ok(j) => match parse_request(&j) {
                 Ok((id, model, pixels)) => match registry.route(model.as_deref()) {
                     Ok(shard) => {
                         let (tx, rx) = channel();
-                        shard.batcher.submit(InferRequest {
-                            id,
-                            pixels,
-                            enqueued: Instant::now(),
-                            reply: tx,
-                        })?;
+                        shard.batcher.submit(InferRequest { id, pixels, reply: tx })?;
                         match rx.recv() {
                             Ok(rep) => match rep.error {
                                 None => reply_json(&rep),
@@ -317,6 +382,15 @@ fn reply_json(rep: &super::batcher::InferReply) -> String {
 /// that decorate requests with extra flags never lose a reply.
 fn is_stats_request(j: &Json) -> bool {
     j.get("stats").and_then(Json::as_bool).unwrap_or(false)
+        && j.get("id").is_none()
+        && j.get("pixels").is_none()
+}
+
+/// `{"metrics": true}` objects ask for the flat text exposition. The same
+/// non-hijack rule as [`is_stats_request`]: an object that also carries
+/// inference fields goes down the inference path untouched.
+fn is_metrics_request(j: &Json) -> bool {
+    j.get("metrics").and_then(Json::as_bool).unwrap_or(false)
         && j.get("id").is_none()
         && j.get("pixels").is_none()
 }
@@ -487,6 +561,103 @@ mod tests {
         let j = json::parse(&line).unwrap();
         assert_eq!(j.get("id").and_then(Json::as_f64), Some(2.0));
         assert!(j.get("pred").is_some(), "decorated request must be inferred: {line}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn latency_block_and_metrics_exposition_over_socket() {
+        let (arch, net) = tiny();
+        let server = serve(
+            &arch,
+            net,
+            ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut r = Pcg32::seeded(31);
+        let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        conn.write_all(request_line(1, &pixels).as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // inference reply
+        // the stage trace lands just after the reply is sent; poll the
+        // stats endpoint until it shows (deadline-bounded, assertions exact)
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let j = loop {
+            conn.write_all(b"{\"stats\": true}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let j = json::parse(&line).unwrap();
+            let count = j
+                .get("latency")
+                .and_then(|l| l.get("infer"))
+                .and_then(|s| s.get("count"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            if count >= 1.0 {
+                break j;
+            }
+            assert!(std::time::Instant::now() < deadline, "latency never appeared: {line}");
+        };
+        let lat = j.get("latency").unwrap();
+        for stage in crate::util::telemetry::STAGES {
+            let s = lat.get(stage).unwrap_or_else(|| panic!("missing stage {stage}: {line}"));
+            assert_eq!(s.get("count").and_then(Json::as_f64), Some(1.0), "stage {stage}");
+            let p50 = s.get("p50").and_then(Json::as_f64).unwrap();
+            let p95 = s.get("p95").and_then(Json::as_f64).unwrap();
+            let p99 = s.get("p99").and_then(Json::as_f64).unwrap();
+            assert!(p50 <= p95 && p95 <= p99, "stage {stage}: {p50} {p95} {p99}");
+        }
+        // the per-shard section carries the same block
+        conn.write_all(b"{\"stats\": true, \"model\": \"t\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert!(j.get("latency").and_then(|l| l.get("reply_write")).is_some(), "{line}");
+        // the flat exposition: read lines until the # EOF terminator
+        conn.write_all(b"{\"metrics\": true}\n").unwrap();
+        let mut text = String::new();
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            text.push_str(&line);
+            if line.starts_with("# EOF") {
+                break;
+            }
+        }
+        assert!(text.contains("bdnn_requests_total{model=\"t\"} 1"), "{text}");
+        assert!(text.contains("bdnn_latency_ns{model=\"t\",stage=\"infer\",quantile=\"p50\"}"));
+        assert!(text.contains("bdnn_unknown_model_total 0"), "{text}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn telemetry_off_drops_latency_from_stats() {
+        let (arch, net) = tiny();
+        let server = serve(
+            &arch,
+            net,
+            ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                batcher: BatcherConfig { telemetry: false, ..BatcherConfig::default() },
+            },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut r = Pcg32::seeded(33);
+        let pixels: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        conn.write_all(request_line(1, &pixels).as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // inference reply
+        conn.write_all(b"{\"stats\": true}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = json::parse(&line).unwrap();
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(1.0), "{line}");
+        assert!(j.get("latency").is_none(), "telemetry off must omit latency: {line}");
         server.shutdown();
     }
 

@@ -1,14 +1,16 @@
 //! Small shared substrates: PRNGs, timers, running statistics, SHA-256,
-//! and the model-checkable sync facade.
+//! the model-checkable sync facade, and latency telemetry.
 
 pub mod rng;
 pub mod sha256;
 pub mod stats;
 pub mod sync;
+pub mod telemetry;
 pub mod timer;
 
 pub use rng::{Pcg32, SplitMix64};
 pub use stats::RunningStats;
+pub use telemetry::{Clock, LatencyHistogram, ManualClock, StageTrace};
 pub use timer::Timer;
 
 /// Nearest power-of-two proxy AP2(z) = sign(z) * 2^round(log2|z|)

@@ -52,6 +52,29 @@ impl RunningStats {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Fold another accumulator into this one (Chan et al.'s parallel
+    /// variance update), so per-thread stats can be merged into exactly
+    /// the stats a single sequential pass over all samples would give
+    /// (up to float rounding). Used by `benchkit::merge_stats` to
+    /// aggregate per-submitter-thread latency samples.
+    pub fn merge(&mut self, other: &RunningStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let d = other.mean - self.mean;
+        self.mean += d * nb / n;
+        self.m2 += other.m2 + d * d * na * nb / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 #[cfg(test)]
@@ -76,5 +99,46 @@ mod tests {
         let s = RunningStats::new();
         assert_eq!(s.count(), 0);
         assert_eq!(s.var(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_sequential_push() {
+        // split the same stream at every cut point: merged halves must
+        // equal the one-pass accumulator
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0, -3.5, 0.25, 11.0];
+        let mut whole = RunningStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        for cut in 0..=xs.len() {
+            let (mut a, mut b) = (RunningStats::new(), RunningStats::new());
+            for &x in &xs[..cut] {
+                a.push(x);
+            }
+            for &x in &xs[cut..] {
+                b.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count(), "cut {cut}");
+            assert!((a.mean() - whole.mean()).abs() < 1e-12, "cut {cut}: mean");
+            assert!((a.var() - whole.var()).abs() < 1e-9, "cut {cut}: var");
+            assert_eq!(a.min(), whole.min(), "cut {cut}");
+            assert_eq!(a.max(), whole.max(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_sides_is_identity() {
+        let mut a = RunningStats::new();
+        a.push(1.0);
+        a.push(3.0);
+        let before = (a.count(), a.mean(), a.var());
+        a.merge(&RunningStats::new());
+        assert_eq!((a.count(), a.mean(), a.var()), before);
+        let mut e = RunningStats::new();
+        e.merge(&a);
+        assert_eq!((e.count(), e.mean(), e.var()), before);
+        assert_eq!(e.min(), 1.0);
+        assert_eq!(e.max(), 3.0);
     }
 }

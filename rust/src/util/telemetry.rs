@@ -1,0 +1,504 @@
+//! Serve-path latency telemetry: a test-injectable clock seam, lock-free
+//! log₂-bucketed latency histograms, and per-request stage traces.
+//!
+//! # The clock seam
+//!
+//! Every serve-path timestamp flows through [`Clock`], the timing twin of
+//! the `util::sync` facade: normally it reads a monotonic `std::time::
+//! Instant` epoch (zero cost beyond the subtraction), but tests inject a
+//! [`ManualClock`] whose "now" only moves when the test says so. That
+//! turns every latency assertion into an exact equality — no wall-clock
+//! sleeps, no flaky tolerances (`rust/tests/serve_batcher.rs` drives the
+//! whole batcher pipeline on a manual clock).
+//!
+//! Unlike the sync facade this seam is runtime-injected rather than
+//! `cfg`-swapped, because integration tests need a *per-batcher* manual
+//! clock while the rest of the process keeps real time.
+//!
+//! # Bucket layout (wire-stable)
+//!
+//! A histogram has **65 fixed buckets** of nanosecond durations:
+//!
+//! * bucket `0` holds exactly the value `0`;
+//! * bucket `i` (1 ≤ i ≤ 64) holds the range `[2^(i-1), 2^i - 1]` — i.e.
+//!   a sample lands in the bucket indexed by its bit length.
+//!
+//! The layout is part of the stats wire contract: quantiles reported by
+//! the serve stats endpoint are **bucket upper bounds**, so for any
+//! recorded sample `s ≥ 1` the reported quantile `q` satisfies
+//! `s ≤ q < 2s` (and `q = 0` exactly when the sample was `0`). The
+//! property suite in `rust/tests/telemetry_histogram.rs` pins this error
+//! contract, quantile monotonicity, and merge/union equivalence.
+//!
+//! Counters are plain relaxed atomics — recording is wait-free and
+//! tolerable on the reply hot path. A [`HistogramSnapshot`] is *not* an
+//! atomic cut across buckets: concurrent records may straddle it, which
+//! is fine for monitoring (tests compare snapshots at quiescence).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Number of histogram buckets: one for zero + one per bit length of a
+/// nonzero `u64` nanosecond count.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Stage names, in pipeline order, as they appear on the stats wire.
+pub const STAGES: [&str; 4] = ["queue_wait", "coalesce_wait", "infer", "reply_write"];
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// Monotonic nanosecond clock: real time normally, test-driven time when
+/// constructed via [`Clock::manual`].
+///
+/// ```
+/// use std::time::Duration;
+/// use bdnn::util::telemetry::Clock;
+///
+/// let (clock, handle) = Clock::manual();
+/// assert_eq!(clock.now_nanos(), 0);
+/// handle.advance(Duration::from_millis(5));
+/// assert_eq!(clock.now_nanos(), 5_000_000);
+/// ```
+#[derive(Clone)]
+pub enum Clock {
+    /// Real time: nanoseconds since this clock value was created.
+    System { epoch: Instant },
+    /// Test time: reads the shared counter a [`ManualClock`] advances.
+    Manual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A real-time clock anchored at "now".
+    pub fn system() -> Self {
+        Clock::System { epoch: Instant::now() }
+    }
+
+    /// A manual clock starting at 0, plus the handle that advances it.
+    pub fn manual() -> (Self, ManualClock) {
+        let t = Arc::new(AtomicU64::new(0));
+        (Clock::Manual(Arc::clone(&t)), ManualClock { t })
+    }
+
+    /// Nanoseconds since the clock's epoch. Monotone for the system
+    /// flavor; for the manual flavor, whatever the handle last set.
+    pub fn now_nanos(&self) -> u64 {
+        match self {
+            Clock::System { epoch } => epoch.elapsed().as_nanos() as u64,
+            Clock::Manual(t) => t.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::system()
+    }
+}
+
+/// The test's side of a manual [`Clock`]: advancing it is the only way
+/// that clock's time moves.
+#[derive(Clone)]
+pub struct ManualClock {
+    t: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    /// Move time forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.t.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Jump time to an absolute nanosecond value.
+    pub fn set_nanos(&self, nanos: u64) {
+        self.t.store(nanos, Ordering::SeqCst);
+    }
+
+    /// Current manual time, as the paired clock would read it.
+    pub fn now_nanos(&self) -> u64 {
+        self.t.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// Bucket index for a nanosecond sample: 0 for 0, else the bit length
+/// (so bucket `i` covers `[2^(i-1), 2^i - 1]`).
+pub fn bucket_index(nanos: u64) -> usize {
+    (u64::BITS - nanos.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of a bucket — the value quantiles report.
+pub fn bucket_upper_bound(index: usize) -> u64 {
+    match index {
+        0 => 0,
+        64 => u64::MAX,
+        i => (1u64 << i) - 1,
+    }
+}
+
+/// Lock-free log₂-bucketed latency histogram (layout in the module docs).
+///
+/// ```
+/// use bdnn::util::telemetry::LatencyHistogram;
+///
+/// let h = LatencyHistogram::default();
+/// h.record_nanos(0);
+/// h.record_nanos(1_000);
+/// let s = h.snapshot();
+/// assert_eq!(s.count(), 2);
+/// assert_eq!(s.quantile(0.0), 0); // the zero sample
+/// let q = s.quantile(1.0); // the 1 µs sample, within the 2x contract
+/// assert!((1_000..2_000).contains(&q));
+/// ```
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("LatencyHistogram")
+            .field("count", &s.count())
+            .field("sum_nanos", &s.sum_nanos())
+            .finish()
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one sample. Wait-free: two relaxed `fetch_add`s.
+    pub fn record_nanos(&self, nanos: u64) {
+        self.buckets[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Add every count of `other` into `self` (bucket-wise, so the result
+    /// equals recording the union of both sample streams).
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n != 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Quantile straight off the live counters (see
+    /// [`HistogramSnapshot::quantile`] for the rank rule).
+    pub fn quantile(&self, p: f64) -> u64 {
+        self.snapshot().quantile(p)
+    }
+
+    /// Copy the counters out for consistent multi-quantile reads.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of a [`LatencyHistogram`]'s counters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    counts: [u64; HISTOGRAM_BUCKETS],
+    sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { counts: [0; HISTOGRAM_BUCKETS], sum: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Sum of all recorded nanosecond values (for exact means).
+    pub fn sum_nanos(&self) -> u64 {
+        self.sum
+    }
+
+    /// Mean recorded value in nanoseconds (0.0 when empty).
+    pub fn mean_nanos(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Per-bucket counts, indexed per the module-docs layout.
+    pub fn counts(&self) -> &[u64; HISTOGRAM_BUCKETS] {
+        &self.counts
+    }
+
+    /// The p-quantile as a bucket upper bound.
+    ///
+    /// Rank rule: `rank = ceil(p · count)` clamped to `[1, count]`; the
+    /// result is the upper bound of the bucket holding the rank-th
+    /// smallest sample. Returns 0 for an empty histogram. Monotone in
+    /// `p`, and within a factor of 2 of the true sample (module docs).
+    pub fn quantile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Bucket-wise add — the snapshot-level rollup used by the stats
+    /// endpoint to merge per-shard histograms.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (mine, theirs) in self.counts.iter_mut().zip(&other.counts) {
+            *mine += theirs;
+        }
+        self.sum += other.sum;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-request stage traces
+// ---------------------------------------------------------------------------
+
+/// One request's per-stage durations, in nanoseconds:
+///
+/// * `queue_wait_ns` — submit until the coalescer sealed its batch;
+/// * `coalesce_wait_ns` — sealed until a pool worker picked the batch up;
+/// * `infer_ns` — the engine call for its batch;
+/// * `reply_write_ns` — delivering its reply message.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTrace {
+    pub queue_wait_ns: u64,
+    pub coalesce_wait_ns: u64,
+    pub infer_ns: u64,
+    pub reply_write_ns: u64,
+}
+
+/// One [`LatencyHistogram`] per pipeline stage — the telemetry block
+/// hanging off each batcher's `BatchStats`.
+#[derive(Debug, Default)]
+pub struct StageHistograms {
+    pub queue_wait: LatencyHistogram,
+    pub coalesce_wait: LatencyHistogram,
+    pub infer: LatencyHistogram,
+    pub reply_write: LatencyHistogram,
+}
+
+impl StageHistograms {
+    /// Record a finished request's trace into all four histograms.
+    pub fn record(&self, t: &StageTrace) {
+        self.queue_wait.record_nanos(t.queue_wait_ns);
+        self.coalesce_wait.record_nanos(t.coalesce_wait_ns);
+        self.infer.record_nanos(t.infer_ns);
+        self.reply_write.record_nanos(t.reply_write_ns);
+    }
+
+    /// (stage name, histogram) pairs in [`STAGES`] order.
+    pub fn iter(&self) -> [(&'static str, &LatencyHistogram); 4] {
+        [
+            (STAGES[0], &self.queue_wait),
+            (STAGES[1], &self.coalesce_wait),
+            (STAGES[2], &self.infer),
+            (STAGES[3], &self.reply_write),
+        ]
+    }
+
+    /// Snapshot all four stages at once.
+    pub fn snapshot(&self) -> StageSnapshots {
+        StageSnapshots {
+            queue_wait: self.queue_wait.snapshot(),
+            coalesce_wait: self.coalesce_wait.snapshot(),
+            infer: self.infer.snapshot(),
+            reply_write: self.reply_write.snapshot(),
+        }
+    }
+}
+
+/// Snapshot of a [`StageHistograms`] block; the unit the stats endpoint
+/// serializes and the registry rollup merges.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageSnapshots {
+    pub queue_wait: HistogramSnapshot,
+    pub coalesce_wait: HistogramSnapshot,
+    pub infer: HistogramSnapshot,
+    pub reply_write: HistogramSnapshot,
+}
+
+impl StageSnapshots {
+    /// (stage name, snapshot) pairs in [`STAGES`] order.
+    pub fn iter(&self) -> [(&'static str, &HistogramSnapshot); 4] {
+        [
+            (STAGES[0], &self.queue_wait),
+            (STAGES[1], &self.coalesce_wait),
+            (STAGES[2], &self.infer),
+            (STAGES[3], &self.reply_write),
+        ]
+    }
+
+    /// Stage-wise merge — per-shard snapshots into an all-shards rollup.
+    pub fn merge(&mut self, other: &StageSnapshots) {
+        self.queue_wait.merge(&other.queue_wait);
+        self.coalesce_wait.merge(&other.coalesce_wait);
+        self.infer.merge(&other.infer);
+        self.reply_write.merge(&other.reply_write);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_matches_bit_length_ranges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        for i in 1..=63usize {
+            let lo = 1u64 << (i - 1);
+            let hi = (1u64 << i) - 1;
+            assert_eq!(bucket_index(lo), i, "lower edge of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "upper edge of bucket {i}");
+        }
+        assert_eq!(bucket_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn upper_bounds_bracket_their_bucket() {
+        assert_eq!(bucket_upper_bound(0), 0);
+        assert_eq!(bucket_upper_bound(1), 1);
+        assert_eq!(bucket_upper_bound(10), 1023);
+        assert_eq!(bucket_upper_bound(64), u64::MAX);
+        for i in 1..64usize {
+            assert_eq!(bucket_index(bucket_upper_bound(i)), i);
+        }
+    }
+
+    #[test]
+    fn quantiles_walk_the_rank_correctly() {
+        let h = LatencyHistogram::default();
+        // 10 samples: 0, 100 (x4), 10_000 (x4), 1_000_000
+        h.record_nanos(0);
+        for _ in 0..4 {
+            h.record_nanos(100);
+        }
+        for _ in 0..4 {
+            h.record_nanos(10_000);
+        }
+        h.record_nanos(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 10);
+        assert_eq!(s.sum_nanos(), 400 + 40_000 + 1_000_000);
+        // rank(0.0) clamps to 1 → the zero sample
+        assert_eq!(s.quantile(0.0), 0);
+        // rank(0.5) = 5 → the 100-bucket [64, 127]
+        assert_eq!(s.quantile(0.5), 127);
+        // rank(0.9) = 9 → the 10_000-bucket [8192, 16383]
+        assert_eq!(s.quantile(0.9), 16_383);
+        // rank(1.0) = 10 → the 1_000_000-bucket [524288, 1048575]
+        assert_eq!(s.quantile(1.0), 1_048_575);
+    }
+
+    #[test]
+    fn merge_equals_union_and_snapshot_merge_agrees() {
+        let a = LatencyHistogram::default();
+        let b = LatencyHistogram::default();
+        let u = LatencyHistogram::default();
+        for &v in &[0u64, 3, 17, 1000, 1000] {
+            a.record_nanos(v);
+            u.record_nanos(v);
+        }
+        for &v in &[5u64, 17, 123_456] {
+            b.record_nanos(v);
+            u.record_nanos(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.snapshot(), u.snapshot());
+        let mut sa = LatencyHistogram::default().snapshot();
+        sa.merge(&u.snapshot());
+        assert_eq!(sa, u.snapshot());
+    }
+
+    #[test]
+    fn manual_clock_moves_only_when_advanced() {
+        let (clock, handle) = Clock::manual();
+        assert_eq!(clock.now_nanos(), 0);
+        assert_eq!(clock.now_nanos(), 0);
+        handle.advance(Duration::from_nanos(7));
+        handle.advance(Duration::from_micros(1));
+        assert_eq!(clock.now_nanos(), 1_007);
+        handle.set_nanos(42);
+        assert_eq!(clock.now_nanos(), 42);
+        assert_eq!(handle.now_nanos(), 42);
+        // clones share the same timeline
+        let c2 = clock.clone();
+        handle.advance(Duration::from_nanos(8));
+        assert_eq!(c2.now_nanos(), 50);
+    }
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let clock = Clock::system();
+        let a = clock.now_nanos();
+        let b = clock.now_nanos();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn stage_histograms_record_each_stage_once() {
+        let sh = StageHistograms::default();
+        sh.record(&StageTrace {
+            queue_wait_ns: 10,
+            coalesce_wait_ns: 0,
+            infer_ns: 5_000,
+            reply_write_ns: 90,
+        });
+        sh.record(&StageTrace {
+            queue_wait_ns: 20,
+            coalesce_wait_ns: 4,
+            infer_ns: 7_000,
+            reply_write_ns: 110,
+        });
+        let s = sh.snapshot();
+        for (name, snap) in s.iter() {
+            assert_eq!(snap.count(), 2, "stage {name}");
+        }
+        assert_eq!(s.infer.sum_nanos(), 12_000);
+        // rollup merge doubles every stage count
+        let mut roll = StageSnapshots::default();
+        roll.merge(&s);
+        roll.merge(&s);
+        for (name, snap) in roll.iter() {
+            assert_eq!(snap.count(), 4, "stage {name}");
+        }
+    }
+}

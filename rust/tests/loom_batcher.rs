@@ -32,7 +32,7 @@ use bdnn::serve::{
 use bdnn::tensor::Tensor;
 use bdnn::util::sync::mpsc::{channel, Receiver};
 use bdnn::util::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Fixed-logits engine: row r gets logits [0, 1), so `pred == 1` always.
 struct ConstEngine {
@@ -102,12 +102,15 @@ fn model_cfg(queue_depth: usize, workers: usize) -> BatcherConfig {
         workers,
         submit_timeout: Duration::ZERO,
         drain_timeout: Duration::from_secs(60),
+        // histogram recording is wait-free (no modeled sync), but leaving
+        // it off keeps the model's state space focused on the channels
+        telemetry: false,
     }
 }
 
 fn request(id: u64) -> (InferRequest, Receiver<bdnn::serve::InferReply>) {
     let (tx, rx) = channel();
-    (InferRequest { id, pixels: vec![0.5], enqueued: Instant::now(), reply: tx }, rx)
+    (InferRequest { id, pixels: vec![0.5], reply: tx }, rx)
 }
 
 /// Exactly-once check: the reply channel holds one message, then closes.

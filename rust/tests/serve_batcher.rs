@@ -4,8 +4,11 @@
 //! `max_wait` timeout flush) actually trigger. A property test drives
 //! random submit/shutdown interleavings against the exactly-once reply
 //! invariant, and injected hung/panicking engines exercise the pool's
-//! failure paths (bounded submit wait, panic isolation). Runs under
-//! `cargo test --release` in CI alongside kernel_dispatch.
+//! failure paths (bounded submit wait, panic isolation). The stage-timing
+//! tests inject a `ManualClock` through `Batcher::spawn_with_clock`, so
+//! every latency assertion is an exact equality — zero wall-clock sleeps,
+//! no tolerances. Runs under `cargo test --release` in CI alongside
+//! kernel_dispatch, and under the serve-stress job with `--test-threads=1`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
@@ -17,7 +20,8 @@ use bdnn::config::ModelArch;
 use bdnn::error::Result;
 use bdnn::proptest::ensure;
 use bdnn::serve::{
-    Batcher, BatcherConfig, InferEngine, InferRequest, ERR_SHUTTING_DOWN, ERR_SUBMIT_TIMEOUT,
+    Batcher, BatcherConfig, Clock, InferEngine, InferRequest, ERR_SHUTTING_DOWN,
+    ERR_SUBMIT_TIMEOUT,
 };
 use bdnn::tensor::Tensor;
 use bdnn::util::Pcg32;
@@ -259,6 +263,7 @@ fn full_queue_with_hung_worker_times_out_instead_of_deadlocking() {
         workers: 1,
         submit_timeout: Duration::from_millis(100),
         drain_timeout: Duration::from_millis(200),
+        telemetry: true,
     };
     let b = Batcher::spawn(engine, IN_DIM, vec![IN_DIM], cfg);
 
@@ -269,13 +274,7 @@ fn full_queue_with_hung_worker_times_out_instead_of_deadlocking() {
     let (tx, rx) = mpsc::channel();
     let t0 = Instant::now();
     for id in 0..N {
-        b.submit(InferRequest {
-            id,
-            pixels: vec![0.5; IN_DIM],
-            enqueued: Instant::now(),
-            reply: tx.clone(),
-        })
-        .unwrap();
+        b.submit(InferRequest { id, pixels: vec![0.5; IN_DIM], reply: tx.clone() }).unwrap();
     }
     assert!(
         t0.elapsed() < Duration::from_secs(3),
@@ -338,4 +337,131 @@ fn engine_panics_become_error_replies_and_do_not_kill_the_pool() {
     assert_eq!(b.stats.infer_errors.load(Ordering::SeqCst), 3);
     // all three flushes were handled by the one (still-alive) worker
     assert_eq!(b.stats.worker_flushes(), vec![3]);
+}
+
+/// Engine gated by channel rendezvous: signals entry (with the batch's row
+/// count), then blocks until released. All synchronization is blocking
+/// channel recv — no sleeps — so a manual-clock test controls exactly how
+/// much "time" each engine call spans.
+struct GatedEngine {
+    entered: std::sync::Mutex<mpsc::Sender<usize>>,
+    release: std::sync::Mutex<mpsc::Receiver<()>>,
+}
+
+impl InferEngine for GatedEngine {
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let rows = x.shape()[0];
+        self.entered.lock().unwrap().send(rows).unwrap();
+        self.release.lock().unwrap().recv().unwrap();
+        Ok(Tensor::new(&[rows, CLASSES], vec![0.0; rows * CLASSES]))
+    }
+}
+
+/// Deterministic stage timing on an injected `ManualClock`: a request
+/// that waits behind a gated engine batch shows queue time exactly equal
+/// to the injected delay, and infer time exactly equal to the manual
+/// advance. Zero wall-clock sleeps; every assertion is an equality.
+///
+/// Timeline (manual nanoseconds; `max_batch: 1` seals each request the
+/// instant it arrives — the deterministic flush path, see
+/// `Batcher::spawn_with_clock`):
+///
+///   t =  0 ms   A submitted, sealed, picked up; engine A entered
+///   t =  5 ms   B submitted + sealed; its batch queues behind busy worker
+///   t = 12 ms   engine A released  -> A: queue 0, infer 12 ms
+///               worker picks B up; engine B entered
+///   t = 15 ms   engine B released  -> B: queue 7 ms, infer 3 ms
+#[test]
+fn manual_clock_stage_timing_is_exact() {
+    let (clock, time) = Clock::manual();
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let engine: Arc<dyn InferEngine> = Arc::new(GatedEngine {
+        entered: std::sync::Mutex::new(entered_tx),
+        release: std::sync::Mutex::new(release_rx),
+    });
+    let cfg = BatcherConfig { max_batch: 1, workers: 1, queue_depth: 8, ..BatcherConfig::default() };
+    let b = Batcher::spawn_with_clock(engine, IN_DIM, vec![IN_DIM], cfg, "manual", clock);
+
+    // A enters the engine at t = 0
+    let (tx_a, rx_a) = mpsc::channel();
+    b.submit(InferRequest { id: 1, pixels: vec![0.5; IN_DIM], reply: tx_a }).unwrap();
+    assert_eq!(entered_rx.recv().unwrap(), 1, "A must be inside infer_batch");
+    // t = 5 ms: B arrives; wait (yield, no sleep) until its sealed batch
+    // is queued, pinning B's seal stamp at exactly t = 5 ms
+    time.advance(Duration::from_millis(5));
+    let (tx_b, rx_b) = mpsc::channel();
+    b.submit(InferRequest { id: 2, pixels: vec![0.5; IN_DIM], reply: tx_b }).unwrap();
+    while b.stats.queued_batches.load(Ordering::SeqCst) != 1 {
+        std::thread::yield_now();
+    }
+    // t = 12 ms: A's engine call completes
+    time.advance(Duration::from_millis(7));
+    release_tx.send(()).unwrap();
+    let a = rx_a.recv().unwrap();
+    assert!(a.error.is_none());
+    assert_eq!(a.queue_us, 0, "A was submitted and picked up at the same instant");
+    assert_eq!(a.infer_us, 12_000, "A's engine call spanned exactly 12 ms of manual time");
+    // B enters the engine at t = 12 ms, having waited 7 ms behind A
+    assert_eq!(entered_rx.recv().unwrap(), 1, "B must be inside infer_batch");
+    time.advance(Duration::from_millis(3));
+    release_tx.send(()).unwrap();
+    let rep = rx_b.recv().unwrap();
+    assert!(rep.error.is_none());
+    assert_eq!(rep.queue_us, 7_000, "B waited exactly the injected 7 ms behind A's batch");
+    assert_eq!(rep.infer_us, 3_000, "B's engine call spanned exactly 3 ms of manual time");
+
+    // histograms (traces land just after the replies; yield until both do)
+    while b.stats.latency.infer.snapshot().count() < 2 {
+        std::thread::yield_now();
+    }
+    let lat = b.stats.latency.snapshot();
+    // infer samples {3 ms, 12 ms}: quantiles are exact bucket upper bounds
+    assert_eq!(lat.infer.count(), 2);
+    assert_eq!(lat.infer.sum_nanos(), 15_000_000);
+    assert_eq!(lat.infer.quantile(0.5), (1u64 << 22) - 1, "3e6 ns lives in [2^21, 2^22)");
+    assert_eq!(lat.infer.quantile(0.99), (1u64 << 24) - 1, "12e6 ns lives in [2^23, 2^24)");
+    // both requests sealed the instant they arrived (max_batch: 1)
+    assert_eq!(lat.queue_wait.count(), 2);
+    assert_eq!(lat.queue_wait.sum_nanos(), 0);
+    // coalesce waits {0, 7 ms}: only B queued behind the busy worker
+    assert_eq!(lat.coalesce_wait.sum_nanos(), 7_000_000);
+    assert_eq!(lat.coalesce_wait.quantile(1.0), (1u64 << 23) - 1, "7e6 ns lives in [2^22, 2^23)");
+    // the clock never moved while a reply was being written
+    assert_eq!(lat.reply_write.count(), 2);
+    assert_eq!(lat.reply_write.sum_nanos(), 0);
+}
+
+/// The whole shutdown path runs on the injected clock too: a request
+/// rejected at submit reports zero queue age (it never waited), and work
+/// already inside the engine keeps aging on manual time only.
+#[test]
+fn manual_clock_ages_shutdown_replies() {
+    let (clock, time) = Clock::manual();
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let engine: Arc<dyn InferEngine> = Arc::new(GatedEngine {
+        entered: std::sync::Mutex::new(entered_tx),
+        release: std::sync::Mutex::new(release_rx),
+    });
+    let cfg = BatcherConfig { max_batch: 1, workers: 1, queue_depth: 8, ..BatcherConfig::default() };
+    let b = Batcher::spawn_with_clock(engine, IN_DIM, vec![IN_DIM], cfg, "manual-drain", clock);
+    // park the worker inside an engine call so later requests queue up
+    let (tx_a, rx_a) = mpsc::channel();
+    b.submit(InferRequest { id: 1, pixels: vec![0.5; IN_DIM], reply: tx_a }).unwrap();
+    assert_eq!(entered_rx.recv().unwrap(), 1);
+    // a request submitted after shutdown is rejected immediately, with
+    // zero manual age no matter how long the wall clock took
+    b.shutdown();
+    time.advance(Duration::from_millis(9));
+    let (tx_b, rx_b) = mpsc::channel();
+    b.submit(InferRequest { id: 2, pixels: vec![0.5; IN_DIM], reply: tx_b }).unwrap();
+    let rep = rx_b.recv().unwrap();
+    assert_eq!(rep.error.as_deref(), Some(ERR_SHUTTING_DOWN));
+    assert_eq!(rep.queue_us, 0, "rejected at submit: no manual time elapsed");
+    // release the parked batch so drop drains cleanly
+    release_tx.send(()).unwrap();
+    let a = rx_a.recv().unwrap();
+    assert!(a.error.is_none());
+    assert_eq!(a.infer_us, 9_000, "the 9 ms advance all fell inside A's engine call");
 }

@@ -16,6 +16,9 @@
 //!    shard, and post-shutdown submits bounce immediately;
 //!  * **stats attribution** — per-shard counters are monotone and sum to
 //!    the all-shards rollup over the real TCP front-end;
+//!  * **latency telemetry shape** — every stats section carries per-stage
+//!    `{count, p50, p95, p99}` histogram summaries, and the rollup's
+//!    per-stage counts equal the sum of the shard counts on the wire;
 //!  * **worker budget** — `divide_workers` never oversubscribes and never
 //!    starves a shard (property test);
 //!  * **backward compatibility** — a single-model server with no
@@ -276,12 +279,7 @@ fn soak_mixed_model_100_iterations() {
                 .route(Some("hung"))
                 .unwrap()
                 .batcher
-                .submit(InferRequest {
-                    id: 9_999,
-                    pixels: vec![0.5; IN_DIM],
-                    enqueued: Instant::now(),
-                    reply: tx,
-                })
+                .submit(InferRequest { id: 9_999, pixels: vec![0.5; IN_DIM], reply: tx })
                 .unwrap();
             Some(rx)
         } else {
@@ -305,7 +303,7 @@ fn soak_mixed_model_100_iterations() {
                     let shard = r2.route(Some(&model)).unwrap().clone();
                     shard
                         .batcher
-                        .submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })
+                        .submit(InferRequest { id, pixels, reply: tx })
                         .unwrap();
                     let rep = rx
                         .recv_timeout(Duration::from_secs(10))
@@ -410,6 +408,7 @@ fn hung_shard_never_stalls_sibling_shards() {
         workers: 1,
         submit_timeout: Duration::from_millis(150),
         drain_timeout: Duration::from_millis(500),
+        ..BatcherConfig::default()
     };
     let registry = Arc::new(Registry::spawn(entries, cfg).unwrap());
     let live_oracle = oracle(0);
@@ -424,12 +423,7 @@ fn hung_shard_never_stalls_sibling_shards() {
             .route(Some("hung"))
             .unwrap()
             .batcher
-            .submit(InferRequest {
-                id,
-                pixels: vec![0.5; IN_DIM],
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
+            .submit(InferRequest { id, pixels: vec![0.5; IN_DIM], reply: tx.clone() })
             .unwrap();
     }
 
@@ -520,12 +514,7 @@ fn drain_delivers_shutting_down_to_every_queued_request_across_shards() {
             .route(Some(shard))
             .unwrap()
             .batcher
-            .submit(InferRequest {
-                id,
-                pixels: vec![0.5; IN_DIM],
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
+            .submit(InferRequest { id, pixels: vec![0.5; IN_DIM], reply: tx.clone() })
             .unwrap();
     }
     registry.shutdown();
@@ -709,6 +698,94 @@ fn tcp_router_per_shard_stats_sum_to_rollup() {
     let roll2 = roundtrip(&mut conn, &mut reader, "{\"stats\": true}\n");
     assert_eq!(num(&roll2, "requests"), 15.0);
     assert_eq!(num(&roll2, "unknown_model"), 2.0, "stats queries never count as misroutes");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// satellite: latency telemetry shape + rollup-count invariant on the wire
+// ---------------------------------------------------------------------------
+
+/// Every stats section carries a `latency` object with all four stage
+/// histograms, each shaped `{count, p50, p95, p99}`, and the rollup's
+/// per-stage counts equal the sum of the shard counts — checked over the
+/// live TCP front-end. (Stage traces land just after the replies, so the
+/// stats endpoint is polled to quiescence; the deadline is a liveness
+/// bound, every assertion is exact.)
+#[test]
+fn tcp_stats_latency_quantiles_per_shard_and_rollup_counts_sum() {
+    let entries = vec![
+        ModelEntry::from_packed("alpha", &arch("alpha"), net(0, KernelKind::Auto)),
+        ModelEntry::from_packed("beta", &arch("beta"), net(1, KernelKind::Auto)),
+    ];
+    let server = serve_models(
+        entries,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: BatcherConfig { workers: 1, ..BatcherConfig::default() },
+        },
+    )
+    .unwrap();
+    let mut conn = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut rng = Pcg32::seeded(0x7E1E);
+    const ALPHA: u64 = 3;
+    const BETA: u64 = 2;
+    for id in 0..ALPHA + BETA {
+        let model = if id < ALPHA { "alpha" } else { "beta" };
+        let pixels: Vec<f32> = (0..IN_DIM).map(|_| rng.normal()).collect();
+        let j = roundtrip(&mut conn, &mut reader, &req_line(id, Some(model), &pixels));
+        assert!(j.get("pred").is_some(), "id {id}: real reply expected");
+    }
+
+    let stage_count = |j: &Json, stage: &str| -> f64 {
+        j.get("latency")
+            .and_then(|l| l.get(stage))
+            .and_then(|s| s.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    // poll to quiescence: all 5 traces recorded (they land after the
+    // replies we already read)
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let roll = loop {
+        let roll = roundtrip(&mut conn, &mut reader, "{\"stats\": true}\n");
+        if stage_count(&roll, "infer") == (ALPHA + BETA) as f64 {
+            break roll;
+        }
+        assert!(Instant::now() < deadline, "latency rollup never reached 5 traces: {roll:?}");
+        std::thread::yield_now();
+    };
+
+    // rollup shape: all four stages, each {count, p50, p95, p99} with
+    // monotone quantiles, alongside the PR 3 counter fields
+    let num = |j: &Json, k: &str| j.get(k).and_then(Json::as_f64).unwrap();
+    assert_eq!(num(&roll, "requests"), (ALPHA + BETA) as f64, "PR 3 fields must survive");
+    for stage in ["queue_wait", "coalesce_wait", "infer", "reply_write"] {
+        let s = roll.get("latency").and_then(|l| l.get(stage)).unwrap_or_else(|| {
+            panic!("rollup latency missing stage {stage}: {roll:?}")
+        });
+        assert_eq!(num(s, "count"), (ALPHA + BETA) as f64, "rollup {stage} count");
+        let (p50, p95, p99) = (num(s, "p50"), num(s, "p95"), num(s, "p99"));
+        assert!(p50 <= p95 && p95 <= p99, "{stage}: quantiles not monotone: {p50} {p95} {p99}");
+    }
+
+    // per-shard sections carry their own latency blocks, and their counts
+    // sum to the rollup's — the invariant the bucket-wise merge guarantees
+    let alpha = roundtrip(&mut conn, &mut reader, "{\"stats\": true, \"model\": \"alpha\"}\n");
+    let beta = roundtrip(&mut conn, &mut reader, "{\"stats\": true, \"model\": \"beta\"}\n");
+    for stage in ["queue_wait", "coalesce_wait", "infer", "reply_write"] {
+        assert_eq!(stage_count(&alpha, stage), ALPHA as f64, "alpha {stage} count");
+        assert_eq!(stage_count(&beta, stage), BETA as f64, "beta {stage} count");
+        assert_eq!(
+            stage_count(&roll, stage),
+            stage_count(&alpha, stage) + stage_count(&beta, stage),
+            "rollup {stage} count != sum of shard counts"
+        );
+    }
+    // the embedded per-shard sections agree with the direct queries
+    let shards = roll.get("shards").and_then(Json::as_obj).unwrap();
+    assert_eq!(stage_count(&shards["alpha"], "infer"), ALPHA as f64);
+    assert_eq!(stage_count(&shards["beta"], "infer"), BETA as f64);
     server.shutdown();
 }
 

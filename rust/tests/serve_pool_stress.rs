@@ -24,7 +24,7 @@
 
 use std::sync::mpsc;
 use std::sync::{Arc, Barrier};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use bdnn::bitnet::network::{PackedNet, Params};
 use bdnn::config::{GemmConfig, ModelArch};
@@ -110,8 +110,7 @@ fn barrage(b: &Arc<Batcher>, it: u64, submitters: u64, per_thread: u64) -> Vec<I
                 let id = t * per_thread + q;
                 let (pixels, _) = payload(it, id);
                 let (tx, rx) = mpsc::channel();
-                b2.submit(InferRequest { id, pixels, enqueued: Instant::now(), reply: tx })
-                    .unwrap();
+                b2.submit(InferRequest { id, pixels, reply: tx }).unwrap();
                 let rep = rx
                     .recv_timeout(Duration::from_secs(10))
                     .unwrap_or_else(|_| panic!("id {id}: reply lost"));

@@ -1,0 +1,180 @@
+//! Property suite for the serve-path latency histograms
+//! (`bdnn::util::telemetry`): pins the wire contracts the module docs
+//! promise, across the full `u64` nanosecond range.
+//!
+//!  * every recorded sample lands in exactly one bucket of the documented
+//!    65-bucket log₂ layout, and the bucket brackets the sample;
+//!  * `quantile(p)` matches a sorted-samples reference implementation of
+//!    the rank rule, and is monotone in `p`;
+//!  * `merge` equals recording the union of both sample streams (at both
+//!    the histogram and the snapshot level);
+//!  * the 2× error contract: the reported quantile `q` for a true sample
+//!    `s` obeys `s ≤ q < 2s` when `s ≥ 1`, and `q = 0` exactly when
+//!    `s = 0`.
+
+use bdnn::proptest::{check, ensure, Gen};
+use bdnn::util::telemetry::{
+    bucket_index, bucket_upper_bound, LatencyHistogram, HISTOGRAM_BUCKETS,
+};
+
+/// A nanosecond sample spanning the full `u64` range with uniform bit
+/// length (so huge and tiny latencies are equally likely). `Gen::usize_in`
+/// can't span 64 bits in one call, so the value is composed from 31-bit
+/// pieces and then forced to the chosen bit length.
+fn sample(g: &mut Gen) -> u64 {
+    let bits = g.usize_in(0, 64);
+    if bits == 0 {
+        return 0;
+    }
+    let lo = g.usize_in(0, 0x7FFF_FFFF) as u64;
+    let mid = g.usize_in(0, 0x7FFF_FFFF) as u64;
+    let hi = g.usize_in(0, 3) as u64;
+    let v = (hi << 62) | (mid << 31) | lo;
+    let top = 1u64 << (bits - 1);
+    top | (v & (top - 1))
+}
+
+fn samples(g: &mut Gen, lo: usize, hi: usize) -> Vec<u64> {
+    let n = g.usize_in(lo, hi);
+    (0..n).map(|_| sample(g)).collect()
+}
+
+/// Reference quantile: the documented rank rule applied to the sorted raw
+/// samples, then mapped to the sample's bucket upper bound.
+fn reference_quantile(sorted: &[u64], p: f64) -> u64 {
+    let total = sorted.len() as u64;
+    let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+    let s = sorted[(rank - 1) as usize];
+    bucket_upper_bound(bucket_index(s))
+}
+
+#[test]
+fn every_sample_lands_in_exactly_its_bracketing_bucket() {
+    check("histogram bucket placement", 0xB0C4E7, 150, |g| {
+        let xs = samples(g, 1, 80);
+        let h = LatencyHistogram::default();
+        let mut want = [0u64; HISTOGRAM_BUCKETS];
+        for &s in &xs {
+            h.record_nanos(s);
+            let i = bucket_index(s);
+            ensure(i < HISTOGRAM_BUCKETS, format!("sample {s}: bucket {i} out of range"))?;
+            // the bucket brackets the sample: (upper of i-1, upper of i]
+            ensure(
+                s <= bucket_upper_bound(i),
+                format!("sample {s} above its bucket {i} upper bound"),
+            )?;
+            if i > 0 {
+                ensure(
+                    s > bucket_upper_bound(i - 1),
+                    format!("sample {s} below its bucket {i} lower bound"),
+                )?;
+            }
+            want[i] += 1;
+        }
+        let snap = h.snapshot();
+        // exactly one bucket incremented per sample: counts match the
+        // per-sample placement and sum to the number of records
+        ensure(
+            snap.counts() == &want,
+            format!("bucket counts diverge from per-sample placement for {xs:?}"),
+        )?;
+        ensure(
+            snap.count() == xs.len() as u64,
+            format!("count {} != {} samples", snap.count(), xs.len()),
+        )?;
+        ensure(
+            snap.sum_nanos() == xs.iter().copied().sum::<u64>(),
+            "sum_nanos diverges from the raw sample sum".to_string(),
+        )
+    });
+}
+
+#[test]
+fn quantile_matches_sorted_reference_and_is_monotone_in_p() {
+    check("histogram quantile reference", 0x9A47_11, 150, |g| {
+        let xs = samples(g, 1, 60);
+        let h = LatencyHistogram::default();
+        for &s in &xs {
+            h.record_nanos(s);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let snap = h.snapshot();
+        let mut ps: Vec<f64> =
+            (0..g.usize_in(2, 12)).map(|_| g.f32_in(0.0, 1.0) as f64).collect();
+        ps.push(0.0);
+        ps.push(1.0);
+        ps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = 0u64;
+        for &p in &ps {
+            let q = snap.quantile(p);
+            ensure(
+                q == reference_quantile(&sorted, p),
+                format!(
+                    "quantile({p}) = {q} != reference {} on {sorted:?}",
+                    reference_quantile(&sorted, p)
+                ),
+            )?;
+            ensure(q >= prev, format!("quantile not monotone at p={p}: {q} < {prev}"))?;
+            prev = q;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_equals_recording_the_union_of_both_streams() {
+    check("histogram merge union", 0x4E26E, 150, |g| {
+        let xs = samples(g, 0, 40);
+        let ys = samples(g, 0, 40);
+        let (a, b, u) =
+            (LatencyHistogram::default(), LatencyHistogram::default(), LatencyHistogram::default());
+        for &s in &xs {
+            a.record_nanos(s);
+            u.record_nanos(s);
+        }
+        for &s in &ys {
+            b.record_nanos(s);
+            u.record_nanos(s);
+        }
+        // histogram-level merge (the cross-thread aggregation path)
+        a.merge(&b);
+        ensure(
+            a.snapshot() == u.snapshot(),
+            format!("merge != union for {xs:?} + {ys:?}"),
+        )?;
+        // snapshot-level merge (the stats-endpoint rollup path) agrees
+        let sx = LatencyHistogram::default();
+        for &s in &xs {
+            sx.record_nanos(s);
+        }
+        let mut sa = sx.snapshot();
+        sa.merge(&b.snapshot());
+        ensure(sa == u.snapshot(), "snapshot merge diverges from histogram merge".to_string())
+    });
+}
+
+#[test]
+fn reported_quantile_is_within_2x_of_the_true_sample() {
+    check("histogram 2x error contract", 0x2C0072AC7, 200, |g| {
+        // a lone sample pins quantile(p) for every p to its own bucket
+        let s = sample(g);
+        let h = LatencyHistogram::default();
+        h.record_nanos(s);
+        let snap = h.snapshot();
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            let q = snap.quantile(p);
+            if s == 0 {
+                ensure(q == 0, format!("zero sample must report 0, got {q}"))?;
+            } else {
+                ensure(q >= s, format!("q {q} under-reports sample {s}"))?;
+                // q < 2s, phrased to dodge overflow near u64::MAX
+                ensure(
+                    s > u64::MAX / 2 || q < 2 * s,
+                    format!("q {q} breaks the 2x bound for sample {s}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}

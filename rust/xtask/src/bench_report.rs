@@ -1,0 +1,414 @@
+//! `cargo xtask bench-report <old.json> <new.json> [--threshold <frac>]`
+//!
+//! Diff two `BENCH_<name>.json` telemetry records (written by the
+//! `rust/benches/*` binaries via `benchkit::BenchRecord`) and exit
+//! nonzero when any case regressed by more than the threshold (default
+//! 0.20 = 20% slower `ns_per_iter`). CI's bench-smoke job also self-diffs
+//! a fresh record against itself, which doubles as a wire-format
+//! validation: a malformed record fails to parse and the task exits
+//! nonzero.
+//!
+//! The JSON reader below is deliberately tiny and local: xtask has zero
+//! dependencies (including on the `bdnn` crate itself), so the task
+//! builds standalone and never drags the library's compile time into CI's
+//! lint stage.
+
+use std::path::Path;
+
+/// The subset of JSON the bench records use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum J {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<J>),
+    Obj(Vec<(String, J)>),
+}
+
+impl J {
+    fn get(&self, key: &str) -> Option<&J> {
+        match self {
+            J::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            J::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            J::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn lit(&mut self, word: &str, v: J) -> Result<J, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    // bench records only ever escape quotes and backslashes
+                    self.i += 1;
+                    let c = *self.b.get(self.i).ok_or("truncated escape")? as char;
+                    s.push(match c {
+                        'n' => '\n',
+                        't' => '\t',
+                        other => other,
+                    });
+                    self.i += 1;
+                }
+                c => {
+                    s.push(c as char);
+                    self.i += 1;
+                }
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn value(&mut self) -> Result<J, String> {
+        match self.peek().ok_or("unexpected end of input")? {
+            b'n' => self.lit("null", J::Null),
+            b't' => self.lit("true", J::Bool(true)),
+            b'f' => self.lit("false", J::Bool(false)),
+            b'"' => Ok(J::Str(self.string()?)),
+            b'[' => {
+                self.i += 1;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(J::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(J::Arr(items));
+                        }
+                        _ => return Err(format!("bad array at byte {}", self.i)),
+                    }
+                }
+            }
+            b'{' => {
+                self.i += 1;
+                let mut kv = Vec::new();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(J::Obj(kv));
+                }
+                loop {
+                    let k = self.string()?;
+                    self.expect(b':')?;
+                    kv.push((k, self.value()?));
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(J::Obj(kv));
+                        }
+                        _ => return Err(format!("bad object at byte {}", self.i)),
+                    }
+                }
+            }
+            _ => {
+                // number
+                let start = self.i;
+                while self.i < self.b.len()
+                    && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    self.i += 1;
+                }
+                std::str::from_utf8(&self.b[start..self.i])
+                    .ok()
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .map(J::Num)
+                    .ok_or_else(|| format!("bad number at byte {start}"))
+            }
+        }
+    }
+}
+
+pub fn parse(src: &str) -> Result<J, String> {
+    let mut p = Parser { b: src.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+/// One case present in both records.
+#[derive(Debug)]
+pub struct CaseDiff {
+    pub name: String,
+    pub old_ns: f64,
+    pub new_ns: f64,
+    /// (new - old) / old — positive means slower.
+    pub delta: f64,
+    pub regressed: bool,
+}
+
+/// The full diff of two bench records.
+#[derive(Debug)]
+pub struct Report {
+    pub cases: Vec<CaseDiff>,
+    /// Case names present in only one record (never a failure: benches
+    /// gain and lose cases across PRs).
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+}
+
+impl Report {
+    pub fn regressions(&self) -> impl Iterator<Item = &CaseDiff> {
+        self.cases.iter().filter(|c| c.regressed)
+    }
+
+    pub fn render(&self, threshold: f64) -> String {
+        let mut out = String::new();
+        for c in &self.cases {
+            let tag = if c.regressed { "REGRESSED" } else { "ok" };
+            out.push_str(&format!(
+                "{:<52} {:>14.1} -> {:>14.1} ns/iter  {:>+7.1}%  {tag}\n",
+                c.name,
+                c.old_ns,
+                c.new_ns,
+                c.delta * 100.0
+            ));
+        }
+        for n in &self.only_old {
+            out.push_str(&format!("{n:<52} (only in old record)\n"));
+        }
+        for n in &self.only_new {
+            out.push_str(&format!("{n:<52} (only in new record)\n"));
+        }
+        let n_reg = self.regressions().count();
+        out.push_str(&format!(
+            "bench-report: {} case(s) compared, {n_reg} regression(s) beyond {:.0}%\n",
+            self.cases.len(),
+            threshold * 100.0
+        ));
+        out
+    }
+}
+
+/// Extract `name -> ns_per_iter` from one record's `results` array.
+fn cases(record: &J, which: &str) -> Result<Vec<(String, f64)>, String> {
+    let results = record
+        .get("results")
+        .and_then(|r| match r {
+            J::Arr(a) => Some(a),
+            _ => None,
+        })
+        .ok_or_else(|| format!("{which}: no 'results' array"))?;
+    let mut out = Vec::new();
+    for (i, r) in results.iter().enumerate() {
+        let name = r
+            .get("name")
+            .and_then(J::as_str)
+            .ok_or_else(|| format!("{which}: results[{i}] has no 'name'"))?;
+        let ns = r
+            .get("ns_per_iter")
+            .and_then(J::as_num)
+            .ok_or_else(|| format!("{which}: results[{i}] has no numeric 'ns_per_iter'"))?;
+        out.push((name.to_string(), ns));
+    }
+    Ok(out)
+}
+
+/// Diff two record sources: a case regressed when
+/// `new > old * (1 + threshold)`.
+pub fn compare(old_src: &str, new_src: &str, threshold: f64) -> Result<Report, String> {
+    let old = parse(old_src).map_err(|e| format!("old record: {e}"))?;
+    let new = parse(new_src).map_err(|e| format!("new record: {e}"))?;
+    let old_cases = cases(&old, "old record")?;
+    let new_cases = cases(&new, "new record")?;
+    let mut report =
+        Report { cases: Vec::new(), only_old: Vec::new(), only_new: Vec::new() };
+    for (name, old_ns) in &old_cases {
+        match new_cases.iter().find(|(n, _)| n == name) {
+            Some((_, new_ns)) => {
+                let delta = if *old_ns > 0.0 { (new_ns - old_ns) / old_ns } else { 0.0 };
+                report.cases.push(CaseDiff {
+                    name: name.clone(),
+                    old_ns: *old_ns,
+                    new_ns: *new_ns,
+                    delta,
+                    regressed: *new_ns > old_ns * (1.0 + threshold),
+                });
+            }
+            None => report.only_old.push(name.clone()),
+        }
+    }
+    for (name, _) in &new_cases {
+        if !old_cases.iter().any(|(n, _)| n == name) {
+            report.only_new.push(name.clone());
+        }
+    }
+    Ok(report)
+}
+
+/// CLI entry: returns the process exit code (0 clean, 1 on regression or
+/// any parse/read failure).
+pub fn run(args: &[String]) -> u8 {
+    let mut paths = Vec::new();
+    let mut threshold = 0.20f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--threshold" {
+            match args.get(i + 1).and_then(|v| v.parse::<f64>().ok()) {
+                Some(t) if t > 0.0 => threshold = t,
+                _ => {
+                    eprintln!("bench-report: --threshold needs a positive fraction (e.g. 0.2)");
+                    return 1;
+                }
+            }
+            i += 2;
+        } else {
+            paths.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let [old_path, new_path] = paths.as_slice() else {
+        eprintln!("usage: cargo xtask bench-report <old.json> <new.json> [--threshold <frac>]");
+        return 1;
+    };
+    let read = |p: &String| {
+        std::fs::read_to_string(Path::new(p)).map_err(|e| format!("{p}: {e}"))
+    };
+    let (old_src, new_src) = match (read(old_path), read(new_path)) {
+        (Ok(a), Ok(b)) => (a, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-report: {e}");
+            return 1;
+        }
+    };
+    match compare(&old_src, &new_src, threshold) {
+        Ok(report) => {
+            print!("{}", report.render(threshold));
+            if report.regressions().next().is_some() {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-report: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OLD: &str = include_str!("../fixtures/bench_old.json");
+    const NEW_REGRESSED: &str = include_str!("../fixtures/bench_new_regressed.json");
+
+    #[test]
+    fn parses_a_real_bench_record() {
+        let j = parse(OLD).unwrap();
+        assert_eq!(j.get("bench").and_then(J::as_str), Some("inference"));
+        assert_eq!(j.get("threads").and_then(J::as_num), Some(4.0));
+        let results = match j.get("results") {
+            Some(J::Arr(a)) => a,
+            other => panic!("results: {other:?}"),
+        };
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[2].get("gops"), Some(&J::Null));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("{\"a\": 1} trailing").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn self_diff_is_clean() {
+        let r = compare(OLD, OLD, 0.2).unwrap();
+        assert_eq!(r.cases.len(), 3);
+        assert!(r.regressions().next().is_none());
+        assert!(r.only_old.is_empty() && r.only_new.is_empty());
+        for c in &r.cases {
+            assert_eq!(c.delta, 0.0);
+        }
+    }
+
+    #[test]
+    fn injected_regression_is_flagged_beyond_the_threshold() {
+        let r = compare(OLD, NEW_REGRESSED, 0.2).unwrap();
+        // the fixture slows "packed serial   batch=1" by 50% and improves
+        // "packed simd     batch=1"; only the former regresses at 20%
+        let reg: Vec<&str> = r.regressions().map(|c| c.name.as_str()).collect();
+        assert_eq!(reg, vec!["packed serial   batch=1"]);
+        // a looser threshold lets it pass
+        let loose = compare(OLD, NEW_REGRESSED, 0.6).unwrap();
+        assert!(loose.regressions().next().is_none());
+        // renamed cases are reported, not failed
+        assert_eq!(r.only_old, vec!["float ref       batch=1"]);
+        assert_eq!(r.only_new, vec!["packed threaded batch=1"]);
+    }
+
+    #[test]
+    fn missing_fields_are_parse_errors_not_panics() {
+        assert!(compare("{}", "{}", 0.2).is_err());
+        let no_ns = "{\"results\": [{\"name\": \"x\"}]}";
+        assert!(compare(no_ns, no_ns, 0.2).is_err());
+        let ok = "{\"results\": [{\"name\": \"x\", \"ns_per_iter\": 5.0}]}";
+        assert!(compare(ok, ok, 0.2).is_ok());
+    }
+}

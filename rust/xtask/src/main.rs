@@ -2,9 +2,16 @@
 //! xtask convention: a tiny in-workspace binary instead of shell scripts,
 //! so the checks run identically on every machine and in CI.
 //!
-//! The only task so far is `lint` — the in-repo invariant linter
-//! (`docs/ANALYSIS.md` rung 3). It enforces three repo invariants that
-//! rustc/clippy cannot express:
+//! Two tasks so far:
+//!
+//! - `bench-report <old.json> <new.json> [--threshold <frac>]` — diff two
+//!   `BENCH_<name>.json` telemetry records written by the bench binaries
+//!   and exit nonzero when any case's `ns_per_iter` regressed beyond the
+//!   threshold (default 0.20). See `bench_report.rs`.
+//! - `lint` — the in-repo invariant linter (`docs/ANALYSIS.md` rung 3).
+//!
+//! The linter enforces three repo invariants that rustc/clippy cannot
+//! express:
 //!
 //! 1. **unsafe-needs-safety** — every `unsafe` keyword in Rust source
 //!    carries a `// SAFETY:` comment (or a `# Safety` doc heading for
@@ -30,9 +37,15 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+mod bench_report;
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
+        Some("bench-report") => match bench_report::run(&args[1..]) {
+            0 => ExitCode::SUCCESS,
+            _ => ExitCode::FAILURE,
+        },
         Some("lint") => {
             let root = repo_root();
             let violations = run_lint(&root);
@@ -48,7 +61,9 @@ fn main() -> ExitCode {
             }
         }
         Some("--help") | Some("-h") | Some("help") | None => {
-            eprintln!("usage: cargo xtask <task>\n\ntasks:\n  lint   run the repo invariant linter");
+            eprintln!(
+                "usage: cargo xtask <task>\n\ntasks:\n  lint           run the repo invariant linter\n  bench-report   diff two BENCH_*.json records, fail on ns/iter regressions"
+            );
             ExitCode::SUCCESS
         }
         Some(other) => {
